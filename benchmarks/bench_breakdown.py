@@ -1,0 +1,42 @@
+"""Figures 6/8: elapsed-time breakdown (comm / conv / comp) for one
+batch of 1024 images across network sizes and node counts."""
+from __future__ import annotations
+
+from repro.core.simulator import (
+    PAPER_COMP_FRACTION,
+    PAPER_TABLE4_CPU,
+    PAPER_TABLE5_GPU,
+    fit_paper_row,
+    predict_speedups,
+)
+from repro.core.costmodel import paper_network, upload_elements_nodes
+from repro.core.simulator import PAPER_CPU_SPEEDS, PAPER_GPU_SPEEDS
+
+import numpy as np
+
+
+def run():
+    rows = []
+    for device, table, speeds in (
+        ("cpu", PAPER_TABLE4_CPU, PAPER_CPU_SPEEDS),
+        ("gpu", PAPER_TABLE5_GPU, PAPER_GPU_SPEEDS),
+    ):
+        for (c1, c2), reported in table.items():
+            fit = fit_paper_row(c1, c2, reported, device=device)
+            cf, beta = fit["comp_fraction"], fit["beta"]
+            layers = paper_network(c1, c2)
+            for n in range(1, len(speeds) + 1):
+                t = 1.0 / np.asarray(speeds[:n])
+                shares = (1.0 / t) / np.sum(1.0 / t)
+                vol = upload_elements_nodes(layers, 1024, shares[1:]) * 8 if n > 1 else 0.0
+                comm = vol * beta
+                conv = (1 - cf) / np.sum(np.asarray(speeds[:n]))
+                total = comm + conv + cf
+                rows.append(
+                    (
+                        f"fig{'6' if device == 'cpu' else '8'}_{device}_{c1}:{c2}_n{n}",
+                        0.0,
+                        f"comm={comm/total:.0%} conv={conv/total:.0%} comp={cf/total:.0%}",
+                    )
+                )
+    return rows

@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks.
+
+On CPU the Pallas kernels run in interpret mode (Python), so wall-times
+are NOT kernel performance — we time the pure-jnp references as the host
+baseline and report each kernel's FLOP count + arithmetic intensity +
+the v5e roofline-predicted time (the kernel-level §Roofline terms)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.roofline.analysis import HW
+
+
+def _time(f, *args, reps=3):
+    f(*args)
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    rows = []
+    jit = jax.jit
+
+    # conv2d: the paper's C2 layer geometry (16x16x500 -> 1500 kernels)
+    x = jax.random.normal(jax.random.key(0), (8, 16, 16, 500), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (5, 5, 500, 1500), jnp.float32)
+    dt = _time(jit(ref.conv2d_ref), x, w)
+    flops = 2 * 8 * 16 * 16 * 1500 * 5 * 5 * 500
+    byts = (x.size + w.size + 8 * 16 * 16 * 1500) * 4
+    rows.append((
+        "kernel_conv2d_c2layer", dt * 1e6,
+        f"gflop={flops/1e9:.1f} AI={flops/byts:.0f} "
+        f"v5e_pred={max(flops/HW.peak_flops, byts/HW.hbm_bw)*1e6:.0f}us "
+        f"host_gflops={flops/dt/1e9:.1f}",
+    ))
+
+    # flash attention: one 32k-context decode-shape head block
+    q = jax.random.normal(jax.random.key(2), (1, 8, 128, 128), jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(3), (1, 8, 4096, 128), jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(4), (1, 8, 4096, 128), jnp.bfloat16)
+    dt = _time(jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True)), q, k, v)
+    flops = 2 * 2 * 8 * 128 * 4096 * 128
+    byts = (q.size + k.size + v.size + q.size) * 2
+    rows.append((
+        "kernel_flash_attn_4k", dt * 1e6,
+        f"gflop={flops/1e9:.2f} AI={flops/byts:.0f} "
+        f"v5e_pred={max(flops/HW.peak_flops, byts/HW.hbm_bw)*1e6:.0f}us",
+    ))
+
+    # ssd: mamba2-370m one layer at 4k seq
+    B, S, H, P, N = 1, 4096, 32, 64, 128
+    xs = jax.random.normal(jax.random.key(5), (B, S, H, P), jnp.float32)
+    dts = jax.nn.softplus(jax.random.normal(jax.random.key(6), (B, S, H)))
+    a = -jnp.exp(jax.random.normal(jax.random.key(7), (H,)))
+    bm = jax.random.normal(jax.random.key(8), (B, S, H, N), jnp.float32)
+    cm = jax.random.normal(jax.random.key(9), (B, S, H, N), jnp.float32)
+    from repro.layers.mamba2 import _ssd_chunked
+
+    dt = _time(jit(lambda *t: _ssd_chunked(*t, 256)[0]), xs, dts, a, bm, cm)
+    chunk = 256
+    flops = B * H * (S // chunk) * (
+        2 * chunk * chunk * N + 2 * chunk * chunk * P + 2 * chunk * N * P * 2
+    )
+    byts = (xs.size + bm.size + cm.size + xs.size) * 4
+    rows.append((
+        "kernel_ssd_4k", dt * 1e6,
+        f"gflop={flops/1e9:.2f} AI={flops/byts:.0f} "
+        f"v5e_pred={max(flops/HW.peak_flops, byts/HW.hbm_bw)*1e6:.0f}us",
+    ))
+    return rows

@@ -1,0 +1,53 @@
+"""Figure 13: mobile-GPU clusters (10x slower devices, desktop master)
+at 32 and 128 nodes."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.costmodel import paper_network
+from repro.core.simulator import (
+    ClusterSpec,
+    PAPER_TABLE5_GPU,
+    bandwidth_from_beta,
+    fit_paper_row,
+    speedup_curve,
+)
+
+
+def _mobile_spec(n_nodes: int, bw_scale: float = 1.0, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    fit = fit_paper_row(500, 1500, PAPER_TABLE5_GPU[(500, 1500)], device="gpu")
+    cf = fit["comp_fraction"]
+    conv_master = 1.0 - cf  # desktop GPU master, step normalised to 1
+    speeds = np.clip(rng.normal(0.1, 0.02, size=n_nodes), 0.05, 0.15)
+    times = conv_master / speeds
+    times[0] = conv_master  # the master stays a desktop GPU (§5.4.1)
+    return ClusterSpec(
+        device_conv_times=list(times),
+        master_comp_time=cf,
+        bandwidth_mbps=bandwidth_from_beta(fit["beta"]) * bw_scale,
+        layers=paper_network(500, 1500),
+        batch=1024,
+    )
+
+
+def run():
+    rows = []
+    for n in (32, 128):
+        for bw_scale, bw_name in ((0.2, "slow"), (1.0, "meas"), (5.0, "fast")):
+            curve = speedup_curve(_mobile_spec(n, bw_scale))
+            rows.append(
+                (
+                    f"fig13_mobile_n{n}_bw-{bw_name}",
+                    0.0,
+                    f"max_speedup={curve.max():.2f}x at n={int(curve.argmax())+1}",
+                )
+            )
+    # §5.4.1: 32 mobile GPUs cannot reach desktop-cluster speedups; 128 help
+    c32 = speedup_curve(_mobile_spec(32)).max()
+    c128 = speedup_curve(_mobile_spec(128)).max()
+    rows.append(
+        ("fig13_32_vs_128", 0.0,
+         f"max32={c32:.2f}x max128={c128:.2f}x (paper: 32 insufficient)")
+    )
+    return rows

@@ -1,0 +1,27 @@
+"""Tables 4/5 + Figures 5/7: predicted vs reported best speedups per
+(network x device-count), from the Eq.1 + Eq.2 model calibrated per row
+(one comm-scale scalar; CPU comp fractions pinned at §5.3.1's values)."""
+from __future__ import annotations
+
+from repro.core.simulator import (
+    PAPER_TABLE4_CPU,
+    PAPER_TABLE5_GPU,
+    fit_paper_row,
+)
+
+
+def run():
+    rows = []
+    for device, table in (("cpu", PAPER_TABLE4_CPU), ("gpu", PAPER_TABLE5_GPU)):
+        for (c1, c2), reported in table.items():
+            fit = fit_paper_row(c1, c2, reported, device=device)
+            for n, (pred, rep) in enumerate(zip(fit["predicted"], reported), start=2):
+                rows.append(
+                    (
+                        f"table{'4' if device == 'cpu' else '5'}_{device}_{c1}:{c2}_n{n}",
+                        0.0,
+                        f"pred={pred:.2f}x reported={rep:.2f}x"
+                        f" relerr={abs(pred-rep)/rep:.1%}",
+                    )
+                )
+    return rows

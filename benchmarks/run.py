@@ -1,0 +1,64 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only name]
+
+Prints ``name,us_per_call,derived`` CSV rows.  us_per_call is 0 for
+model-predicted (simulator) rows; wall-clock rows come from the real
+master/slave cluster and the data-parallel baseline on this host.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_batchsize,
+    bench_breakdown,
+    bench_data_parallel,
+    bench_device_range,
+    bench_kernels,
+    bench_master_slave,
+    bench_mobile,
+    bench_scalability,
+    bench_speedup,
+)
+
+MODULES = {
+    "speedup": bench_speedup,        # Tables 4/5, Figs 5/7 (node axis)
+    "batchsize": bench_batchsize,    # Figs 5/7 (batch axis)
+    "breakdown": bench_breakdown,    # Figs 6/8
+    "scalability": bench_scalability,  # Figs 9/10
+    "device_range": bench_device_range,  # Figs 11/12
+    "mobile": bench_mobile,          # Fig 13
+    "data_parallel": bench_data_parallel,  # Table 1 baseline
+    "master_slave": bench_master_slave,  # Alg 1/2 real wall-clock
+    "kernels": bench_kernels,        # Pallas kernel rooflines
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(MODULES))
+    args = ap.parse_args()
+    mods = {args.only: MODULES[args.only]} if args.only else MODULES
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in mods.items():
+        try:
+            t0 = time.time()
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}")
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failed += 1
+            print(f"# {name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Heterogeneous-cluster wall-clock study — the paper's §4.1.1 experiment
+on this host: distributed convolution over emulated devices of different
+speeds, comparing
+
+  1. single device (the baseline),
+  2. naive equal kernel split (what the paper argues against),
+  3. the Eq. 1 balanced split.
+
+Real threads, real convolutions, real wall-clock.  The Eq. 1 split must
+beat the equal split whenever the cluster is heterogeneous, because the
+equal split waits for the slowest device (the paper's Device-1/Device-2
+example).
+
+    PYTHONPATH=src python examples/hetero_cluster.py
+"""
+import time
+
+import numpy as np
+
+from repro.core.master_slave import HeteroCluster
+from repro.core.partitioner import workload_shares
+
+
+def time_forward(cluster, x, w, reps=4):
+    cluster.conv_forward(x, w)  # warm the jit caches for these shard shapes
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        cluster.conv_forward(x, w)
+    return (time.perf_counter() - t0) / reps
+
+
+def main():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(32, 32, 32, 3)).astype(np.float32)
+    w = rng.normal(size=(5, 5, 3, 240)).astype(np.float32)
+
+    print("== single device baseline ==")
+    single = HeteroCluster([1.0])
+    single.probe_times = [1.0]
+    t_single = time_forward(single, x, w)
+    single.shutdown()
+    print(f"single-device conv: {t_single*1e3:.1f} ms")
+
+    print("\n== heterogeneous cluster: master + slave(1x) + slave(3x slower) ==")
+    cluster = HeteroCluster([1.0, 1.0, 3.0])
+    try:
+        probe = cluster.probe(
+            image_size=32, in_channels=3, kernel_size=5, num_kernels=80, batch=32
+        )
+        shares = workload_shares(probe)
+        print(f"probe times: {np.round(probe, 4).tolist()}")
+        print(f"Eq.1 shares: {np.round(shares, 3).tolist()} "
+              f"-> kernels {cluster.shares_for(w.shape[-1]).tolist()}")
+
+        t_balanced = time_forward(cluster, x, w)
+        print(f"Eq.1-balanced distributed conv: {t_balanced*1e3:.1f} ms "
+              f"(speedup {t_single/t_balanced:.2f}x vs single)")
+
+        cluster.probe_times = [1.0, 1.0, 1.0]  # force the naive equal split
+        t_equal = time_forward(cluster, x, w)
+        print(f"equal-split distributed conv:   {t_equal*1e3:.1f} ms "
+              f"(speedup {t_single/t_equal:.2f}x vs single)")
+
+        gain = t_equal / t_balanced
+        print(f"\nEq.1 vs equal split: {gain:.2f}x faster "
+              "(the paper's §4.1.1 motivation)")
+        print("note: on a single-core host the absolute speedup vs one "
+              "device is <1 (threads share the core + protocol overhead); "
+              "the Eq.1-vs-equal ratio is the hardware-independent result.")
+    finally:
+        cluster.shutdown()
+
+
+if __name__ == "__main__":
+    main()

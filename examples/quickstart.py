@@ -1,0 +1,108 @@
+"""Quickstart: train the paper's CIFAR-10 CNN, first locally, then with
+the convolutional layers distributed over an emulated heterogeneous
+cluster (Algorithms 1 & 2) — verifying identical losses, i.e. the
+paper's claim that distribution does not affect classification
+performance.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 30]
+"""
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.master_slave import HeteroCluster, make_distributed_conv
+from repro.core.partitioner import workload_shares
+from repro.data.pipeline import synthetic_cifar_batches
+from repro.models.cnn import cnn_loss, init_cnn, make_cnn_config
+
+
+def sgd_update(params, grads, lr):
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+
+
+def train(cfg, conv_fn, steps, lr=0.05, seed=0, jit=True):
+    params = init_cnn(jax.random.key(seed), cfg)
+    it = synthetic_cifar_batches(64, seed=seed)
+
+    def step(params, images, labels):
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: cnn_loss(p, images, labels, cfg=cfg, conv_fn=conv_fn),
+            has_aux=True,
+        )(params)
+        return sgd_update(params, grads, lr), loss, acc
+
+    if jit:
+        step = jax.jit(step)
+    losses, accs = [], []
+    for i in range(steps):
+        b = next(it)
+        params, loss, acc = step(
+            params, jnp.asarray(b["images"]), jnp.asarray(b["labels"])
+        )
+        losses.append(float(loss))
+        accs.append(float(acc))
+        if i % 5 == 0:
+            print(f"  step {i:3d} loss={losses[-1]:.3f} acc={accs[-1]:.2f}")
+    return np.array(losses), np.array(accs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--c1", type=int, default=16)
+    ap.add_argument("--c2", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = make_cnn_config(args.c1, args.c2)
+    print(f"== local training ({cfg.arch_id}) ==")
+    t0 = time.time()
+    loss_local, acc_local = train(cfg, None or __import__(
+        "repro.layers.conv", fromlist=["apply_conv"]).apply_conv, args.steps)
+    print(f"local: {time.time()-t0:.1f}s, final acc {acc_local[-5:].mean():.2f}")
+
+    print("\n== distributed training (master + 2 slaves, one 2x slower) ==")
+    cluster = HeteroCluster([1.0, 1.0, 2.0])
+    try:
+        times = cluster.probe(
+            image_size=32, in_channels=3, kernel_size=5,
+            num_kernels=args.c1, batch=64,
+        )
+        print(f"probe times: {np.round(times, 4).tolist()}")
+        print(f"Eq.1 shares: {np.round(workload_shares(times), 3).tolist()}")
+        t0 = time.time()
+        loss_dist, acc_dist = train(
+            cfg, make_distributed_conv(cluster), args.steps, jit=False
+        )
+        print(f"distributed: {time.time()-t0:.1f}s, final acc {acc_dist[-5:].mean():.2f}")
+        print(f"comm volume: {cluster.comm_bytes/2**20:.1f} MiB")
+    finally:
+        cluster.shutdown()
+
+    drift = np.max(np.abs(loss_local - loss_dist))
+    print(f"\nmax |loss_local - loss_distributed| over training = {drift:.2e}")
+    assert drift < 1e-2, "distribution changed the training trajectory!"
+    assert loss_local[-5:].mean() < loss_local[:5].mean() - 0.1, \
+        "CNN loss did not decrease"
+    print("OK: loss decreases AND distribution does not affect the "
+          "training trajectory (the paper's §5.3 classification claim).")
+
+
+if __name__ == "__main__":
+    import os
+    import traceback
+
+    # a jit+host-callback session can leave the XLA runtime wedged at
+    # interpreter shutdown on the CPU backend; exit hard once done
+    code = 0
+    try:
+        main()
+    except BaseException:
+        traceback.print_exc()
+        code = 1
+    sys.stdout.flush()
+    sys.stderr.flush()
+    os._exit(code)

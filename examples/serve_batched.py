@@ -1,0 +1,62 @@
+"""Batched serving demo: prefill a batch of prompts and decode with the
+KV-cache engine across three cache regimes — full attention (yi-style),
+sliding-window ring buffer (mistral-style), and O(1) SSM state
+(mamba2) — printing cache memory per sequence to show the long-context
+scaling the decode shapes (decode_32k / long_500k) rely on.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig, SSMConfig
+from repro.models.registry import build_model
+from repro.serve.engine import ServeEngine
+
+
+def cache_bytes(cache) -> int:
+    return sum(
+        x.size * x.dtype.itemsize for x in jax.tree.leaves(cache)
+        if hasattr(x, "size")
+    )
+
+
+def demo(name: str, cfg: ModelConfig, batch=4, prompt=32, new=24):
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(batch, prompt)), jnp.int32)
+    engine = ServeEngine(api=api, run=RunConfig(), params=params)
+
+    t0 = time.time()
+    out = engine.generate({"tokens": toks}, max_new_tokens=new, sample=True,
+                          temperature=0.8, seed=1)
+    dt = time.time() - t0
+
+    cache = jax.eval_shape(lambda: api.init_cache(batch, prompt + new))
+    per_seq = cache_bytes(cache) / batch
+    print(f"{name:28s} {batch*new/dt:7.1f} tok/s  cache/seq={per_seq/2**10:8.1f} KiB"
+          f"  sample: {np.asarray(out[0, :8]).tolist()}")
+
+
+def main():
+    base = dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+                d_ff=512, vocab_size=1024, head_dim=64,
+                dtype="float32", param_dtype="float32")
+    demo("full-attention (yi-style)", ModelConfig(
+        arch_id="serve-dense", family="dense", **base))
+    demo("sliding-window (mistral)", ModelConfig(
+        arch_id="serve-swa", family="dense", sliding_window=16, **base))
+    ssm_base = dict(base, num_heads=0, num_kv_heads=0, d_ff=0)
+    demo("SSM O(1) state (mamba2)", ModelConfig(
+        arch_id="serve-ssm", family="ssm",
+        ssm=SSMConfig(d_state=16, head_dim=32, chunk_size=16), **ssm_base))
+    print("\nNote the cache scaling: full grows with context, SWA is capped "
+          "at the window, SSM is constant — the long_500k enabler.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""End-to-end driver: train a ~100M-parameter decoder-only LM for a few
+hundred steps on the synthetic bigram task, with checkpointing and
+eval — the (b) deliverable's training end of the spectrum.
+
+The config is a scaled-down yi-style dense transformer (~100M params);
+the same script trains any ``--arch`` at reduced scale.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import restore_checkpoint, save_checkpoint
+from repro.configs.base import ModelConfig, RunConfig
+from repro.data.pipeline import synthetic_token_batches
+from repro.models.registry import build_model, rules_for_mode
+from repro.train.loss import softmax_cross_entropy
+from repro.train.step import init_train_state, make_train_step
+
+LM_100M = ModelConfig(
+    arch_id="lm-100m", family="dense", num_layers=12, d_model=640,
+    num_heads=10, num_kv_heads=5, d_ff=2560, vocab_size=8192,
+    head_dim=64, dtype="float32", param_dtype="float32",
+    source="scaled-down yi-6b [arXiv:2403.04652]",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m")
+    args = ap.parse_args()
+
+    cfg = LM_100M
+    api = build_model(cfg)
+    n_params = sum(
+        x.size for x in jax.tree.leaves(jax.eval_shape(lambda: api.init(jax.random.key(0))))
+    )
+    print(f"{cfg.arch_id}: {n_params/1e6:.1f}M params")
+
+    run = RunConfig(
+        optimizer="adam", learning_rate=args.lr, schedule="cosine",
+        warmup_steps=args.steps // 20, total_steps=args.steps,
+        remat="none", grad_accum=1, tp_mode="megatron",
+    )
+    state = init_train_state(jax.random.key(0), api, run)
+    step = jax.jit(make_train_step(api, run), donate_argnums=(0,))
+
+    train_it = synthetic_token_batches(args.batch, args.seq, cfg.vocab_size, seed=0)
+    # held-out samples from the SAME task (same bigram permutation)
+    eval_it = synthetic_token_batches(
+        args.batch, args.seq, cfg.vocab_size, seed=0, stream_seed=999
+    )
+    rules = rules_for_mode(run.tp_mode)
+
+    @jax.jit
+    def eval_loss(params, batch):
+        logits, _ = api.forward(params, batch, rules=rules)
+        return softmax_cross_entropy(logits, batch["labels"])
+
+    t0 = time.time()
+    tokens_seen = 0
+    first_loss = None
+    for i in range(args.steps):
+        b = {k: jnp.asarray(v) for k, v in next(train_it).items()}
+        state, m = step(state, b)
+        tokens_seen += args.batch * args.seq
+        if i % 25 == 0 or i == args.steps - 1:
+            eb = {k: jnp.asarray(v) for k, v in next(eval_it).items()}
+            ev = float(eval_loss(state.params, eb))
+            first_loss = first_loss if first_loss is not None else float(m["loss"])
+            tps = tokens_seen / (time.time() - t0)
+            print(
+                f"step {i:4d} train={float(m['loss']):.3f} eval={ev:.3f} "
+                f"lr={float(m['lr']):.2e} gnorm={float(m['grad_norm']):.2f} "
+                f"({tps:,.0f} tok/s)", flush=True,
+            )
+    path = save_checkpoint(args.ckpt_dir, args.steps, state.params)
+    print(f"checkpoint -> {path}")
+
+    restored = restore_checkpoint(args.ckpt_dir)
+    eb = {k: jnp.asarray(v) for k, v in next(eval_it).items()}
+    ev = float(eval_loss(restored, eb))
+    print(f"restored-checkpoint eval loss {ev:.3f}")
+    assert ev < first_loss - 1.0, "model did not learn"
+    print("OK: loss dropped by "
+          f"{first_loss - ev:.2f} nats over {args.steps} steps.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Merge the post-iteration-D decode/long re-runs into the sweep JSONLs
+(replace matching (arch, shape) records), then re-splice EXPERIMENTS.md."""
+import json
+import subprocess
+import sys
+
+PAIRS = [
+    ("results/redo_decode_gather_single.jsonl", "results/dryrun_gather_single.jsonl"),
+    ("results/redo_decode_megatron_single.jsonl", "results/dryrun_megatron_single.jsonl"),
+    ("results/redo_decode_fsdp_single.jsonl", "results/dryrun_fsdp_single.jsonl"),
+    ("results/redo_decode_gather_multi.jsonl", "results/dryrun_gather_multi.jsonl"),
+    ("results/redo_decode_megatron_multi.jsonl", "results/dryrun_megatron_multi.jsonl"),
+]
+
+
+def load(path):
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+for redo_path, sweep_path in PAIRS:
+    redo = {(r["arch_id"], r["shape"]): r for r in load(redo_path)}
+    out = []
+    for r in load(sweep_path):
+        out.append(redo.pop((r["arch_id"], r["shape"]), r))
+    out.extend(redo.values())
+    with open(sweep_path, "w") as f:
+        for r in out:
+            f.write(json.dumps(r) + "\n")
+    print(f"merged {redo_path} -> {sweep_path} ({len(out)} records)")
+
+subprocess.run([sys.executable, "results/splice_tables.py"], check=True)

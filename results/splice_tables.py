@@ -1,0 +1,42 @@
+"""Splice the generated roofline tables into EXPERIMENTS.md."""
+import subprocess
+import sys
+
+MARK = "<!-- ROOFLINE TABLES SPLICED HERE BY results/splice_tables.py -->"
+
+SECTIONS = [
+    ("### gather (paper-faithful), 16x16", "results/dryrun_gather_single.jsonl"),
+    ("### megatron (optimised), 16x16", "results/dryrun_megatron_single.jsonl"),
+    ("### fsdp (beyond-paper), 16x16", "results/dryrun_fsdp_single.jsonl"),
+    ("### gather, 2x16x16 multi-pod", "results/dryrun_gather_multi.jsonl"),
+    ("### megatron, 2x16x16 multi-pod", "results/dryrun_megatron_multi.jsonl"),
+]
+
+
+def main():
+    blocks = [MARK]
+    for title, path in SECTIONS:
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.roofline.report", path],
+            capture_output=True, text=True, check=True,
+        ).stdout
+        blocks.append(f"{title}\n\n{out.strip()}\n")
+    # per-pair "what would move the dominant term down" (megatron table)
+    hints = subprocess.run(
+        [sys.executable, "-m", "repro.roofline.report",
+         "results/dryrun_megatron_single.jsonl", "--hints"],
+        capture_output=True, text=True, check=True,
+    ).stdout.split("\n\n", 1)[1]
+    blocks.append("### What would move each dominant term down (megatron table)\n\n"
+                  + hints.strip() + "\n")
+
+    text = open("EXPERIMENTS.md").read()
+    start = text.index(MARK)
+    end = text.index("### Reading the baselines")
+    new = text[:start] + "\n\n".join(blocks) + "\n\n" + text[end:]
+    open("EXPERIMENTS.md", "w").write(new)
+    print("spliced", len(blocks) - 1, "tables")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Sharded numpy checkpointing.
+
+Flat key/value .npz per step directory plus a small JSON manifest of the
+pytree structure.  Arrays are gathered to host (fine at example scale; on
+a real pod each host would write its addressable shards — the manifest
+format already records per-leaf paths so that extension is local).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any, prefix: str = ""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], f"{prefix}{k}{_SEP}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{prefix}{i}{_SEP}")
+    else:
+        yield prefix.rstrip(_SEP), tree
+
+
+def _unflatten(flat: dict) -> Any:
+    tree: dict = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+_NATIVE = set("biufc")  # numpy-native dtype kinds
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    """Write the pytree to <ckpt_dir>/step_<n>/arrays.npz (+manifest).
+    Non-native dtypes (bfloat16, fp8) are stored as raw bit-views with
+    the true dtype recorded in the manifest."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    flat = dict(_flatten(jax.tree.map(lambda x: np.asarray(x), tree)))
+    dtypes = {k: str(v.dtype) for k, v in flat.items()}
+    stored = {
+        k: (v if v.dtype.kind in _NATIVE else v.view(f"u{v.dtype.itemsize}"))
+        for k, v in flat.items()
+    }
+    np.savez(os.path.join(path, "arrays.npz"), **stored)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"step": step, "keys": sorted(flat), "dtypes": dtypes}, f, indent=1)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for d in os.listdir(ckpt_dir)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None,
+                       shardings: Any = None) -> Any:
+    """Load a checkpoint; ``shardings`` (optional pytree of NamedSharding)
+    places leaves directly on the mesh via jax.device_put."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {}
+        for k in z.files:
+            v = z[k]
+            want = manifest["dtypes"].get(k, str(v.dtype))
+            if want != str(v.dtype):
+                v = v.view(jnp.dtype(want))
+            flat[k] = v
+    tree = _unflatten(flat)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree

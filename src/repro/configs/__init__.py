@@ -1,0 +1,47 @@
+"""Config registry: ``get_config("--arch id")`` + input shapes + specs."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401
+    CNNConfig,
+    InputShape,
+    INPUT_SHAPES,
+    ModelConfig,
+    MoEConfig,
+    RunConfig,
+    SSMConfig,
+    reduced_for_smoke,
+)
+
+_ARCH_MODULES = {
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "whisper-medium": "whisper_medium",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "hymba-1.5b": "hymba_1_5b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "minicpm-2b": "minicpm_2b",
+    "mamba2-370m": "mamba2_370m",
+    "yi-6b": "yi_6b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "mixtral-8x22b": "mixtral_8x22b",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id.startswith("cifar_cnn"):
+        from repro.configs.cifar_cnn import CONFIGS
+
+        return CONFIGS[arch_id]
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+from repro.configs.input_specs import input_specs, shapes_for_arch  # noqa: E402,F401

@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's
+weak-type-correct, shardable, zero-allocation input description.
+
+``input_specs(cfg, shape)`` returns the kwargs pytree the corresponding
+step function is lowered with:
+
+* train / prefill: {"tokens", "labels"} (+ "patches" for VLM, "frames"
+  for audio) — the modality stubs ARE the carve-out: precomputed
+  patch/frame embeddings of the frontend's output shape.
+* decode: {"tokens": (B, 1)} + the cache pytree from the model's
+  ``init_cache`` under ``jax.eval_shape`` (full-length KV for dense,
+  window ring for SWA, O(1) state for SSM).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def shapes_for_arch(cfg: ModelConfig) -> List[str]:
+    """Which of the four input shapes this arch runs (long_500k only with
+    a sub-quadratic decode path — DESIGN.md policy)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long_context:
+        out.append("long_500k")
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {"tokens": _sds((b, s), jnp.int32)}
+        if shape.kind == "train":
+            specs["labels"] = _sds((b, s), jnp.int32)
+        if cfg.vision is not None:
+            v = cfg.vision
+            specs["patches"] = _sds((b, v.num_image_tokens, v.vision_dim), jnp.float32)
+        if cfg.audio is not None:
+            a = cfg.audio
+            specs["frames"] = _sds((b, a.num_frames, a.frame_dim), jnp.float32)
+        return specs
+
+    # decode: one token against a seq_len-sized context
+    from repro.models.registry import build_model  # lazy: avoids import cycle
+
+    api = build_model(cfg)
+    cache = jax.eval_shape(lambda: api.init_cache(b, s))
+    return {"tokens": _sds((b, 1), jnp.int32), "cache": cache}

@@ -1,0 +1,20 @@
+"""The paper's primary contribution: heterogeneity-aware kernel-sharded
+model parallelism for convolutional layers (Marques, Falcao, Alexandre,
+2017), plus its TPU-mesh generalisation."""
+from repro.core.costmodel import (  # noqa: F401
+    ConvLayerSpec,
+    comm_time_s,
+    paper_network,
+    predict_step_time,
+    upload_bytes,
+    upload_elements,
+    upload_elements_nodes,
+)
+from repro.core.master_slave import HeteroCluster, make_distributed_conv  # noqa: F401
+from repro.core.partitioner import (  # noqa: F401
+    allocate_kernels,
+    predicted_conv_time,
+    speedup,
+    workload_shares,
+)
+from repro.core.conv_shard import make_sharded_conv  # noqa: F401

@@ -1,0 +1,38 @@
+"""Kernel-sharded convolution on the TPU mesh — the paper's distribution
+expressed as GSPMD shardings.
+
+"Broadcast the inputs" = activations replicated over ``model``;
+"scatter the kernels"  = HWIO weights sharded on the output-channel axis;
+"gather the feature maps" = the all-gather GSPMD inserts when gather-mode
+rules pin the conv output back to replicated (the sharded/megatron rules
+keep feature maps channel-sharded through ReLU/LRN/pool instead — the
+§Perf lever, since LRN and pooling are channel-local up to a 2-channel
+halo).
+
+On a homogeneous mesh the Eq. 1 shares degenerate to the uniform split
+(its fixed point) — GSPMD shards are even by construction; the uneven
+heterogeneous allocation is exercised by core/master_slave.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.conv import apply_conv
+from repro.sharding.axes import AxisRules
+from repro.sharding.partitioning import constrain
+
+
+def make_sharded_conv(rules: AxisRules):
+    """conv_fn for models/cnn.py running under a mesh: the kernel axis is
+    sharded over `model`, the output layout follows the rule mode."""
+
+    def conv_fn(params, x, padding: str = "SAME"):
+        y = apply_conv(params, x, padding=padding)
+        # column layout right after the convolution (every mode)
+        y = constrain(y, rules, "batch", None, None, "act_conv_col")
+        # gather mode: force the paper's all-gather; sharded mode: keep
+        y = constrain(y, rules, "batch", None, None, "act_conv")
+        return y
+
+    return conv_fn

@@ -1,0 +1,338 @@
+"""Algorithms 1 & 2 — the master/slave distributed convolution protocol.
+
+Faithful in-process emulation of the paper's socket cluster: every slave
+is a thread, every socket a pair of queues, every ``writeSocket`` /
+``readSocket`` moves serialized numpy buffers and counts the bytes (so
+Eq. 2 can be validated against the actual traffic, see
+tests/test_costmodel.py).  Heterogeneity is emulated with per-slave
+*slowdown factors*: after computing, a slave sleeps (slowdown-1) x the
+measured compute time, appearing exactly like a proportionally slower
+machine to both the probe and the training loop.
+
+The protocol per convolutional layer (Algorithm 1 lines 6-23):
+  * master broadcasts the SAME inputs to every slave,
+  * master scatters a DIFFERENT kernel shard to each slave, sized by the
+    Eq. 1 partitioner from probe times,
+  * every node (master included) convolves its shard,
+  * master gathers the output feature maps and concatenates them,
+  * master computes every non-convolutional layer alone.
+
+Backward propagation is distributed the same way ("forward and backward
+propagation included", §1): each slave computes the VJP of its own kernel
+shard — dW for its shard and its partial dX — and the master sums the
+partial dX contributions (the gather of the backward pass).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partitioner import allocate_kernels
+
+_TRAIN_OVER = "trainOver"
+_ALL_OK = "allOk"
+
+
+class _Socket:
+    """Queue pair standing in for the paper's TCP socket; counts traffic."""
+
+    def __init__(self):
+        self.to_slave: "queue.Queue" = queue.Queue()
+        self.to_master: "queue.Queue" = queue.Queue()
+        self.bytes_to_slave = 0
+        self.bytes_to_master = 0
+        self._lock = threading.Lock()
+
+    def _nbytes(self, obj) -> int:
+        if isinstance(obj, np.ndarray):
+            return obj.nbytes
+        if isinstance(obj, (tuple, list)):
+            return sum(self._nbytes(o) for o in obj)
+        if isinstance(obj, dict):
+            return sum(self._nbytes(v) for v in obj.values())
+        return 8  # flags / scalars, one double in the paper's protocol
+
+    def write_to_slave(self, obj):
+        with self._lock:
+            self.bytes_to_slave += self._nbytes(obj)
+        self.to_slave.put(obj)
+
+    def write_to_master(self, obj):
+        with self._lock:
+            self.bytes_to_master += self._nbytes(obj)
+        self.to_master.put(obj)
+
+    def read_on_slave(self):
+        return self.to_slave.get()
+
+    def read_on_master(self):
+        return self.to_master.get()
+
+    @property
+    def total_bytes(self) -> int:
+        return self.bytes_to_slave + self.bytes_to_master
+
+
+# The node compute is pure NumPy (im2col): the master's side runs inside
+# jax host callbacks, where re-entering jax (jit dispatch) can deadlock
+# the runtime thread — numpy is callback-safe and thread-safe.
+
+
+def _im2col(x: np.ndarray, kh: int, kw: int) -> np.ndarray:
+    """SAME-padded im2col.  x: (B,H,W,C) -> (B,H,W, kh*kw*C)."""
+    b, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = np.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+    win = np.lib.stride_tricks.sliding_window_view(xp, (kh, kw), axis=(1, 2))
+    # win: (B, H, W, C, kh, kw) -> (B, H, W, kh, kw, C)
+    win = win.transpose(0, 1, 2, 4, 5, 3)
+    return np.ascontiguousarray(win).reshape(b, h, w, kh * kw * c)
+
+
+def _conv(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """NHWC x HWIO SAME conv, stride 1 (the slave's `convn`)."""
+    kh, kw, cin, cout = w.shape
+    cols = _im2col(np.asarray(x, np.float32), kh, kw)
+    y = cols.reshape(-1, kh * kw * cin) @ w.reshape(kh * kw * cin, cout)
+    return y.reshape(x.shape[0], x.shape[1], x.shape[2], cout)
+
+
+def _conv_vjp(x: np.ndarray, w: np.ndarray, g: np.ndarray):
+    """Returns (dx, dw) of sum(conv(x, w) * g)."""
+    x = np.asarray(x, np.float32)
+    g = np.asarray(g, np.float32)
+    kh, kw, cin, cout = w.shape
+    b, h, wd, _ = x.shape
+    cols = _im2col(x, kh, kw).reshape(-1, kh * kw * cin)
+    dw = (cols.T @ g.reshape(-1, cout)).reshape(kh, kw, cin, cout)
+    # dx: scatter the columns of dG @ W^T back into the padded image
+    dcols = (g.reshape(-1, cout) @ w.reshape(kh * kw * cin, cout).T).reshape(
+        b, h, wd, kh, kw, cin
+    )
+    ph, pw = kh // 2, kw // 2
+    dxp = np.zeros((b, h + kh - 1, wd + kw - 1, cin), np.float32)
+    for di in range(kh):
+        for dj in range(kw):
+            dxp[:, di : di + h, dj : dj + wd, :] += dcols[:, :, :, di, dj, :]
+    dx = dxp[:, ph : ph + h, pw : pw + wd, :]
+    return dx, dw
+
+
+def _np_probe(*, image_size: int, in_channels: int, kernel_size: int,
+              num_kernels: int, batch: int, repeats: int = 3,
+              slowdown: float = 1.0, seed: int = 0) -> float:
+    """The paper's §4.1.1 probe with the SAME kernel the nodes use for the
+    real workload (numpy im2col conv), so Eq. 1 ratios are exact."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(batch, image_size, image_size, in_channels)).astype(np.float32)
+    w = rng.normal(size=(kernel_size, kernel_size, in_channels, num_kernels)).astype(np.float32)
+    _conv(x, w)  # warm caches
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _conv(x, w)
+        times.append(time.perf_counter() - t0)
+    measured = float(np.median(times))
+    return measured * slowdown if slowdown > 1.0 else measured
+
+
+def _slave_loop(sock: _Socket, slowdown: float):
+    """Algorithm 2: read inputs/kernels, convolve, write outputs, repeat."""
+    while True:
+        msg = sock.read_on_slave()
+        if msg == _TRAIN_OVER:
+            return
+        op, payload = msg
+        t0 = time.perf_counter()
+        if op == "conv":
+            x, w = payload
+            out = _conv(x, w)
+        elif op == "bwd":
+            x, w, g = payload
+            out = _conv_vjp(x, w, g)
+        elif op == "probe":
+            kwargs = payload
+            out = _np_probe(slowdown=slowdown, **kwargs)
+            sock.write_to_master(out)
+            continue
+        else:  # pragma: no cover
+            raise ValueError(f"unknown op {op}")
+        elapsed = time.perf_counter() - t0
+        if slowdown > 1.0:
+            time.sleep(elapsed * (slowdown - 1.0))
+        sock.write_to_master(out)
+        ack = sock.read_on_slave()
+        assert ack == _ALL_OK
+
+
+@dataclasses.dataclass
+class LayerTiming:
+    comm_s: float = 0.0
+    conv_s: float = 0.0
+    comp_s: float = 0.0  # non-conv layers (master only)
+
+
+class HeteroCluster:
+    """The master node (Algorithm 1) plus ``n_slaves`` slave threads.
+
+    Device 0 is the master itself (it convolves its own shard while the
+    slaves work).  ``slowdowns[i]`` emulates device i's relative speed
+    (1.0 = this host's full speed); slowdowns[0] applies to the master.
+    """
+
+    def __init__(self, slowdowns: Sequence[float]):
+        assert len(slowdowns) >= 1
+        self.slowdowns = list(slowdowns)
+        self.n_slaves = len(slowdowns) - 1
+        self.sockets = [_Socket() for _ in range(self.n_slaves)]
+        self.threads = [
+            threading.Thread(
+                target=_slave_loop, args=(s, sd), daemon=True
+            )
+            for s, sd in zip(self.sockets, self.slowdowns[1:])
+        ]
+        for t in self.threads:
+            t.start()
+        self.probe_times: Optional[List[float]] = None
+        self.timing = LayerTiming()
+
+    # -- §4.1.1 pre-processing -------------------------------------------
+    def probe(self, **probe_kwargs) -> List[float]:
+        """Every device runs the timed reference convolution — sequential
+        so the 1-core host's timings do not interfere."""
+        master_t = _np_probe(slowdown=self.slowdowns[0], **probe_kwargs)
+        slave_ts = []
+        for s in self.sockets:
+            s.write_to_slave(("probe", probe_kwargs))
+            slave_ts.append(s.read_on_master())
+        self.probe_times = [master_t] + slave_ts
+        return self.probe_times
+
+    def shares_for(self, num_kernels: int) -> np.ndarray:
+        assert self.probe_times is not None, "run probe() first"
+        return allocate_kernels(num_kernels, self.probe_times)
+
+    # -- Algorithm 1, the conv layer loop --------------------------------
+    def _split(self, w: np.ndarray, counts: np.ndarray) -> List[np.ndarray]:
+        edges = np.cumsum(counts)[:-1]
+        return np.split(w, edges, axis=-1)
+
+    def conv_forward(self, x: np.ndarray, w: np.ndarray) -> np.ndarray:
+        """Distributed convolution: broadcast x, scatter kernel shards,
+        gather and concatenate feature maps."""
+        counts = self.shares_for(w.shape[-1])
+        shards = self._split(w, counts)
+        t0 = time.perf_counter()
+        for sock, shard in zip(self.sockets, shards[1:]):
+            sock.write_to_slave(("conv", (x, shard)))
+        self.timing.comm_s += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        my_out = _conv(x, shards[0])
+        el = time.perf_counter() - t0
+        if self.slowdowns[0] > 1.0:
+            time.sleep(el * (self.slowdowns[0] - 1.0))
+        outs = [my_out]
+        for sock in self.sockets:
+            outs.append(sock.read_on_master())
+            sock.write_to_slave(_ALL_OK)
+        self.timing.conv_s += time.perf_counter() - t0
+        return np.concatenate(outs, axis=-1)
+
+    def conv_backward(
+        self, x: np.ndarray, w: np.ndarray, g: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Distributed VJP: each node takes the output-gradient slice of
+        its own kernels, returns (partial dX, its dW shard); the master
+        sums dX and concatenates dW."""
+        counts = self.shares_for(w.shape[-1])
+        w_shards = self._split(w, counts)
+        g_shards = self._split(g, counts)
+        t0 = time.perf_counter()
+        for sock, ws, gs in zip(self.sockets, w_shards[1:], g_shards[1:]):
+            sock.write_to_slave(("bwd", (x, ws, gs)))
+        self.timing.comm_s += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        dx, dw0 = _conv_vjp(x, w_shards[0], g_shards[0])
+        el = time.perf_counter() - t0
+        if self.slowdowns[0] > 1.0:
+            time.sleep(el * (self.slowdowns[0] - 1.0))
+        dws = [dw0]
+        for sock in self.sockets:
+            dxi, dwi = sock.read_on_master()
+            dx = dx + dxi
+            dws.append(dwi)
+            sock.write_to_slave(_ALL_OK)
+        self.timing.conv_s += time.perf_counter() - t0
+        return dx, np.concatenate(dws, axis=-1)
+
+    # ---------------------------------------------------------------------
+    @property
+    def comm_bytes(self) -> int:
+        return sum(s.total_bytes for s in self.sockets)
+
+    def reset_stats(self):
+        self.timing = LayerTiming()
+        for s in self.sockets:
+            s.bytes_to_slave = 0
+            s.bytes_to_master = 0
+
+    def shutdown(self):
+        for s in self.sockets:
+            s.write_to_slave(_TRAIN_OVER)
+        for t in self.threads:
+            t.join(timeout=10)
+
+
+def make_distributed_conv(cluster: HeteroCluster):
+    """A drop-in ``conv_fn`` for models/cnn.py: jax custom-VJP convolution
+    whose forward and backward run over the cluster via callbacks."""
+
+    @jax.custom_vjp
+    def dconv(x, w, b):
+        y = _call_fwd(x, w)
+        return y + b[None, None, None, :]
+
+    def fwd(x, w, b):
+        y = _call_fwd(x, w)
+        return y + b[None, None, None, :], (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        dx, dw = _call_bwd(x, w, g)
+        db = jnp.sum(g, axis=(0, 1, 2))
+        return dx, dw, db
+
+    def _call_fwd(x, w):
+        out_shape = jax.ShapeDtypeStruct(x.shape[:-1] + (w.shape[-1],), x.dtype)
+        return jax.pure_callback(
+            lambda xx, ww: cluster.conv_forward(np.asarray(xx), np.asarray(ww)),
+            out_shape, x, w,
+        )
+
+    def _call_bwd(x, w, g):
+        out_shape = (
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+        )
+        return jax.pure_callback(
+            lambda xx, ww, gg: cluster.conv_backward(
+                np.asarray(xx), np.asarray(ww), np.asarray(gg)
+            ),
+            out_shape, x, w, g,
+        )
+
+    dconv.defvjp(fwd, bwd)
+
+    def conv_fn(params, x, padding: str = "SAME"):
+        return dconv(x, params["kernel"], params["bias"])
+
+    return conv_fn

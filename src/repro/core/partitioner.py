@@ -1,0 +1,93 @@
+"""Heterogeneity-aware workload partitioner — the paper's Eq. 1.
+
+Given per-device probe times ``t_i`` (seconds to run the same reference
+workload), the workload share of device i is
+
+    w_i = (max(t) / t_i) / sum_j (max(t) / t_j)                    (Eq. 1)
+
+i.e. shares proportional to measured throughput.  ``allocate_kernels``
+turns the fractional shares into an integer number of kernels per device
+with the largest-remainder method, preserving the total and guaranteeing
+every device at least ``min_per_device`` kernels (0 allowed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def workload_shares(times: Sequence[float]) -> np.ndarray:
+    """Eq. 1.  times[i] > 0 is device i's probe time; returns shares
+    summing to 1, inversely proportional to time."""
+    t = np.asarray(times, dtype=np.float64)
+    if t.ndim != 1 or t.size == 0:
+        raise ValueError("times must be a non-empty 1-D sequence")
+    if np.any(t <= 0) or not np.all(np.isfinite(t)):
+        raise ValueError("probe times must be positive and finite")
+    perf = t.max() / t  # max(t)/t_i — the paper's performance values
+    return perf / perf.sum()
+
+
+def allocate_kernels(
+    num_kernels: int, times: Sequence[float], *, min_per_device: int = 0
+) -> np.ndarray:
+    """Integer kernel counts per device via largest-remainder rounding of
+    the Eq. 1 shares.  sum == num_kernels always holds."""
+    if num_kernels < 0:
+        raise ValueError("num_kernels must be >= 0")
+    shares = workload_shares(times)
+    n = shares.size
+    if num_kernels < n * min_per_device:
+        raise ValueError("num_kernels too small for min_per_device")
+    ideal = shares * num_kernels
+    base = np.floor(ideal).astype(np.int64)
+    base = np.maximum(base, min_per_device)
+    # distribute the remainder to the largest fractional parts
+    while base.sum() > num_kernels:  # over-allocated due to min clamp
+        i = int(np.argmax(base - ideal))
+        if base[i] <= min_per_device:
+            candidates = np.where(base > min_per_device)[0]
+            i = candidates[int(np.argmax((base - ideal)[candidates]))]
+        base[i] -= 1
+    rem = num_kernels - base.sum()
+    if rem > 0:
+        frac = ideal - np.floor(ideal)
+        order = np.argsort(-frac, kind="stable")
+        for j in range(int(rem)):
+            base[order[j % n]] += 1
+    return base
+
+
+def predicted_conv_time(
+    times: Sequence[float], kernels: Sequence[int], num_kernels: int
+) -> float:
+    """Time for the slowest device to finish its kernel share, given that
+    device i convolves `num_kernels` kernels in `times[i]` seconds
+    (linear-in-kernels model, the paper's assumption)."""
+    t = np.asarray(times, dtype=np.float64)
+    k = np.asarray(kernels, dtype=np.float64)
+    return float(np.max(t * k / num_kernels))
+
+
+def speedup(times: Sequence[float], kernels: Sequence[int], num_kernels: int,
+            *, baseline_device: int = 0) -> float:
+    """Speedup of the distributed conv phase vs the baseline device doing
+    all kernels alone (the paper compares against a single device)."""
+    t = np.asarray(times, dtype=np.float64)
+    return float(t[baseline_device] / predicted_conv_time(times, kernels, num_kernels))
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """A device's measured capability, as the paper's probe reports it."""
+
+    name: str
+    conv_time: float  # seconds for the reference conv workload
+    bandwidth_mbps: float = 5.0  # link to the master (paper: ~5 Mbps Wi-Fi)
+
+    @property
+    def gflops(self) -> float:
+        # informational only; the partitioner uses times, not FLOPs
+        return 1.0 / self.conv_time

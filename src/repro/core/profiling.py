@@ -1,0 +1,85 @@
+"""The paper's pre-processing probe (§4.1.1).
+
+Before training, every device runs an N-dimensional convolution with the
+real image and kernel sizes, on random values ("only the time spent
+performing calculations is relevant"), and reports the elapsed time to
+the master.  Eq. 1 converts the times into workload shares.
+
+On this host all "devices" are CPU threads, so a *slowdown factor* per
+emulated device lets tests and examples reproduce heterogeneous clusters
+deterministically (a device with slowdown 2.0 sleeps to appear half as
+fast — the probe measures it exactly as it would a slower machine).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def probe_conv_time(
+    *,
+    image_size: int,
+    in_channels: int,
+    kernel_size: int,
+    num_kernels: int,
+    batch: int,
+    repeats: int = 3,
+    slowdown: float = 1.0,
+    seed: int = 0,
+) -> float:
+    """Run the reference convolution and return median elapsed seconds."""
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (batch, image_size, image_size, in_channels), jnp.float32)
+    w = jax.random.normal(
+        k2, (kernel_size, kernel_size, in_channels, num_kernels), jnp.float32
+    )
+
+    @jax.jit
+    def conv(x, w):
+        return jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+
+    conv(x, w).block_until_ready()  # compile outside the timed region
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        conv(x, w).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    measured = float(np.median(times))
+    if slowdown > 1.0:
+        # emulate a slower device: it would have taken slowdown x longer
+        measured *= slowdown
+    return measured
+
+
+def probe_devices(
+    num_devices: int,
+    *,
+    image_size: int = 32,
+    in_channels: int = 3,
+    kernel_size: int = 5,
+    num_kernels: int = 100,
+    batch: int = 64,
+    slowdowns: Optional[Sequence[float]] = None,
+) -> list:
+    """Probe every emulated device (the master's §4.1.1 pre-processing)."""
+    slowdowns = slowdowns or [1.0] * num_devices
+    assert len(slowdowns) == num_devices
+    return [
+        probe_conv_time(
+            image_size=image_size,
+            in_channels=in_channels,
+            kernel_size=kernel_size,
+            num_kernels=num_kernels,
+            batch=batch,
+            slowdown=s,
+            seed=i,
+        )
+        for i, s in enumerate(slowdowns)
+    ]

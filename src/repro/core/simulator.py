@@ -1,0 +1,257 @@
+"""Cluster simulator — reproduces the paper's scalability studies
+(Figs 9-13, and the prediction side of Tables 4/5) from the Eq. 1
+partitioner + Eq. 2 cost model.
+
+"By understanding these details, it is possible to accurately predict new
+communication times when more nodes are added, as well as convolution
+times and therefore the total processing time." (§5.3.4)
+
+The simulator is calibrated with (a) per-device conv throughputs — either
+measured by the probe on this host or the paper's device classes — and
+(b) a link bandwidth (the paper measured ~5 Mbps Wi-Fi).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.costmodel import (
+    ConvLayerSpec,
+    StepTimePrediction,
+    comm_time_s,
+    paper_network,
+    predict_step_time,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """A simulated heterogeneous cluster.
+
+    ``device_conv_times[i]``: seconds for device i to convolve the whole
+    network alone (batch included).  ``master_comp_time``: seconds the
+    master spends on the non-conv layers (they are never distributed).
+    """
+
+    device_conv_times: Sequence[float]
+    master_comp_time: float
+    bandwidth_mbps: float
+    layers: Sequence[ConvLayerSpec]
+    batch: int
+    #: False = the paper's Eq. 2 (inputs counted once); True = physical
+    #: per-slave input broadcast (see costmodel.upload_elements_nodes)
+    broadcast_inputs: bool = False
+
+
+def simulate(spec: ClusterSpec, n_nodes: int) -> StepTimePrediction:
+    """Step-time for the first ``n_nodes`` devices of the cluster."""
+    return predict_step_time(
+        layers=spec.layers,
+        batch=spec.batch,
+        device_conv_times=list(spec.device_conv_times[:n_nodes]),
+        master_comp_time=spec.master_comp_time,
+        bandwidth_mbps=spec.bandwidth_mbps,
+        broadcast_inputs=spec.broadcast_inputs,
+    )
+
+
+def speedup_curve(spec: ClusterSpec, max_nodes: Optional[int] = None) -> np.ndarray:
+    """Speedups vs the single (master) device, for 1..max_nodes devices —
+    the paper's Figures 5/7/9/10 quantity."""
+    max_nodes = max_nodes or len(spec.device_conv_times)
+    base = simulate(spec, 1).total
+    return np.array([base / simulate(spec, n).total for n in range(1, max_nodes + 1)])
+
+
+def amdahl_ceiling(spec: ClusterSpec) -> float:
+    """Theoretical max speedup: conv time -> 0, comm -> 0 (§5.3.1 computes
+    7.76x for the largest network at 13% comp share)."""
+    one = simulate(spec, 1)
+    return one.total / spec.master_comp_time
+
+
+def gaussian_cluster(
+    *,
+    n_nodes: int,
+    base_conv_time: float,
+    rel_speed_low: float,
+    rel_speed_high: float,
+    master_comp_time: float,
+    bandwidth_mbps: float,
+    layers: Sequence[ConvLayerSpec],
+    batch: int,
+    seed: int = 0,
+    broadcast_inputs: bool = False,
+) -> ClusterSpec:
+    """The paper's Figs 9-13 setup: nodes drawn with Gaussian-distributed
+    performance between the worst and best measured device."""
+    rng = np.random.default_rng(seed)
+    mid = 0.5 * (rel_speed_low + rel_speed_high)
+    sigma = (rel_speed_high - rel_speed_low) / 4.0
+    speeds = np.clip(
+        rng.normal(mid, sigma, size=n_nodes), rel_speed_low, rel_speed_high
+    )
+    speeds[0] = 1.0  # the master is the reference device
+    times = base_conv_time / speeds
+    return ClusterSpec(
+        device_conv_times=list(times),
+        master_comp_time=master_comp_time,
+        bandwidth_mbps=bandwidth_mbps,
+        layers=layers,
+        batch=batch,
+        broadcast_inputs=broadcast_inputs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# calibration against the paper's experiment (Tables 4/5)
+#
+# The paper reports speedups and time *ratios* but not absolute step
+# times, and Eq. 2's volume at a literal 5 Mbps would dwarf any conv time
+# (doubles of a 1024-image batch are ~GBs) — the measured comm times in
+# Figs 6/8 are far smaller, so the effective comm-to-conv ratio must be
+# calibrated.  We fit one scalar per table row:
+#     beta = 1 / (bandwidth_bytes_per_s x single_device_step_s)
+# (and for GPUs also the non-conv fraction, which the CPU table pins at
+# §5.3.1's reported values) by least squares against Tables 4/5, then
+# validate the *shape* of the model (speedup vs nodes / batch / kernels).
+
+
+#: Table 4 (best speedups, CPU) and Table 5 (GPU) from the paper.
+PAPER_TABLE4_CPU = {
+    (50, 500): (1.40, 1.51, 1.56),
+    (150, 800): (1.68, 1.93, 2.10),
+    (300, 1000): (1.69, 1.93, 2.33),
+    (500, 1500): (1.98, 2.74, 3.28),
+}
+PAPER_TABLE5_GPU = {
+    (50, 500): (1.96, 2.45),
+    (150, 800): (1.89, 2.23),
+    (300, 1000): (1.78, 2.09),
+    (500, 1500): (1.66, 2.00),
+}
+
+
+def predict_speedups(
+    c1: int, c2: int, batch: int, *, speeds: Sequence[float],
+    comp_fraction: float, beta: float, n_list: Sequence[int],
+) -> np.ndarray:
+    """Speedup vs a single device for each n in n_list, with comm time
+    beta * Eq2_bytes (beta folds bandwidth and absolute step scale)."""
+    layers = paper_network(c1, c2)
+    out = []
+    for n in n_list:
+        t = 1.0 / np.asarray(speeds[:n])
+        shares = (1.0 / t) / np.sum(1.0 / t)
+        vol_bytes = upload_elements_nodes_bytes(layers, batch, shares[1:])
+        # (paper's Eq. 2: inputs counted once — the calibration regime)
+        conv = (1 - comp_fraction) / np.sum(np.asarray(speeds[:n]))
+        out.append(1.0 / (vol_bytes * beta + conv + comp_fraction))
+    return np.array(out)
+
+
+def upload_elements_nodes_bytes(layers, batch, slave_shares,
+                                broadcast_inputs: bool = False) -> float:
+    from repro.core.costmodel import BYTES_PER_ELEMENT, upload_elements_nodes
+
+    return (
+        upload_elements_nodes(
+            layers, batch, slave_shares, broadcast_inputs=broadcast_inputs
+        )
+        * BYTES_PER_ELEMENT
+    )
+
+
+def bandwidth_from_beta(beta: float) -> float:
+    """Convert a fitted beta (s per byte at unit step time) to the
+    equivalent ClusterSpec bandwidth in Mbps (8 bits/byte)."""
+    return 8.0 / (beta * 1e6)
+
+
+def fit_paper_row(
+    c1: int, c2: int, reported: Sequence[float], *, device: str = "cpu",
+    batch: int = 1024,
+) -> dict:
+    """Least-squares fit of beta (and comp_fraction for GPUs) to one row
+    of Table 4/5.  Returns {beta, comp_fraction, predicted, reported,
+    max_rel_err}."""
+    speeds = PAPER_CPU_SPEEDS if device == "cpu" else PAPER_GPU_SPEEDS
+    n_list = list(range(2, 2 + len(reported)))
+    cf_grid = (
+        [PAPER_COMP_FRACTION[(c1, c2)]]
+        if device == "cpu"
+        else list(np.linspace(0.01, 0.40, 40))
+    )
+    best = None
+    for cf in cf_grid:
+        for beta in np.logspace(-16, -9, 240):
+            pred = predict_speedups(
+                c1, c2, batch, speeds=speeds, comp_fraction=cf, beta=beta,
+                n_list=n_list,
+            )
+            err = float(np.sum((pred - np.asarray(reported)) ** 2))
+            if best is None or err < best["err"]:
+                best = {"beta": float(beta), "comp_fraction": float(cf),
+                        "err": err, "predicted": pred}
+    rel = np.abs(best["predicted"] - np.asarray(reported)) / np.asarray(reported)
+    best["reported"] = tuple(reported)
+    best["max_rel_err"] = float(rel.max())
+    return best
+
+
+#: Relative CPU speeds fitted to the paper's Table 4 (PC1 i5-3210M is the
+#: 1.0 reference/master; PC2 i7-4700HQ, PC3 i7-5500U, PC4 i7-6700HQ).
+PAPER_CPU_SPEEDS = (1.0, 1.55, 1.25, 1.9)
+#: Relative GPU speeds (PC2 GeForce 840M master ref; PC3 940M, PC4 GTX 950M).
+PAPER_GPU_SPEEDS = (1.0, 1.15, 1.85)
+
+#: Fraction of single-device step time spent OUTSIDE convolutions, per
+#: network size (paper §5.3.1: 25% for the smallest, 13% for the largest).
+PAPER_COMP_FRACTION = {
+    (50, 500): 0.25,
+    (150, 800): 0.19,
+    (300, 1000): 0.16,
+    (500, 1500): 0.13,
+}
+
+
+def paper_cluster(
+    c1: int,
+    c2: int,
+    batch: int,
+    *,
+    device: str = "cpu",
+    single_device_step_s: Optional[float] = None,
+    bandwidth_mbps: float = 5.0,
+    seconds_per_kernel_unit: float = 2.4e-4,
+) -> ClusterSpec:
+    """Build a ClusterSpec matching the paper's testbed for network
+    (c1:c2) at the given batch size.
+
+    ``single_device_step_s`` calibrates absolute scale; when None a
+    simple linear-in-(kernels x batch) model is used (the constant is per
+    CPU; GPUs are ~8x faster on convolutions at batch 1024)."""
+    layers = paper_network(c1, c2)
+    comp_frac = PAPER_COMP_FRACTION[(c1, c2)]
+    speeds = PAPER_CPU_SPEEDS if device == "cpu" else PAPER_GPU_SPEEDS
+    if single_device_step_s is None:
+        work = sum(
+            l.out_size ** 2 * l.kernel_size ** 2 * l.in_channels * l.num_kernels
+            for l in layers
+        )
+        conv_time = work * batch / 1024 * seconds_per_kernel_unit / 1e3
+        if device == "gpu":
+            conv_time /= 8.0
+        single_device_step_s = conv_time / (1 - comp_frac)
+    conv1 = single_device_step_s * (1 - comp_frac)
+    comp = single_device_step_s * comp_frac
+    times = [conv1 * speeds[0] / s for s in speeds]
+    return ClusterSpec(
+        device_conv_times=times,
+        master_comp_time=comp,
+        bandwidth_mbps=bandwidth_mbps,
+        layers=layers,
+        batch=batch,
+    )

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (  # noqa: F401
+    synthetic_cifar_batches,
+    synthetic_token_batches,
+    make_global_batch,
+)

@@ -1,0 +1,81 @@
+"""Pallas TPU direct-convolution kernel — the paper's compute hot-spot,
+adapted to the MXU.
+
+The GPU papers of the era (Ward et al. [11]) tile the *image*; on TPU the
+natural tiling is the one the paper itself distributes across devices:
+the OUTPUT-CHANNEL axis.  Each grid step owns one batch image and one
+128-wide slice of output channels (MXU lane width), unrolls the kh x kw
+taps, and issues (H*W, Cin) x (Cin, 128) matmuls accumulated in fp32
+VREGs — the kernel is the single-device microcosm of the distribution
+scheme (output channels = kernels are the parallel axis at every level).
+
+VMEM per step (CIFAR shapes, Cout tile 128):
+  x block (1, H+kh-1, W+kw-1, Cin) + w (kh,kw,Cin,128) + acc (H*W, 128)
+  = 36x36x512x4B (~2.7 MB worst case C2 layer) — fits the ~16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv2d_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, out_h: int, out_w: int):
+    """x_ref: (1, out_h+kh-1, out_w+kw-1, cin) padded input block (VMEM)
+    w_ref: (kh, kw, cin, tco); o_ref: (1, out_h, out_w, tco)."""
+    cin = x_ref.shape[-1]
+    tco = o_ref.shape[-1]
+    acc = jnp.zeros((out_h * out_w, tco), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            # (out_h, out_w, cin) shifted window, flattened to an MXU matmul
+            xs = x_ref[0, i : i + out_h, j : j + out_w, :].reshape(
+                out_h * out_w, cin
+            )
+            ws = w_ref[i, j, :, :]  # (cin, tco)
+            acc += jnp.dot(
+                xs.astype(jnp.float32),
+                ws.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[0] = acc.reshape(out_h, out_w, tco).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "cout_tile"))
+def conv2d_pallas(
+    x: jax.Array,  # (B, H, W, Cin)
+    w: jax.Array,  # (kh, kw, Cin, Cout)
+    *,
+    cout_tile: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """SAME-padded stride-1 convolution.  Cout is padded to the tile."""
+    b, h, wd, cin = x.shape
+    kh, kw, _, cout = w.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+
+    tco = min(cout_tile, cout)
+    pad_co = (-cout) % tco
+    if pad_co:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, pad_co)))
+    n_co = w.shape[-1] // tco
+
+    out = pl.pallas_call(
+        functools.partial(_conv2d_kernel, kh=kh, kw=kw, out_h=h, out_w=wd),
+        grid=(b, n_co),
+        in_specs=[
+            pl.BlockSpec(
+                (1, h + kh - 1, wd + kw - 1, cin), lambda bi, ci: (bi, 0, 0, 0)
+            ),
+            pl.BlockSpec((kh, kw, cin, tco), lambda bi, ci: (0, 0, 0, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, h, wd, tco), lambda bi, ci: (bi, 0, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((b, h, wd, w.shape[-1]), x.dtype),
+        interpret=interpret,
+    )(xp, w)
+    if pad_co:
+        out = out[..., :cout]
+    return out

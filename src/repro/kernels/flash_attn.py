@@ -1,0 +1,150 @@
+"""Pallas TPU flash-attention kernel (forward).
+
+Online-softmax over KV tiles: grid (batch*heads, q_tiles, k_tiles) with
+the KV dim innermost; the running max / denominator / fp32 accumulator
+live in VMEM scratch and persist across the k iterations of one q tile.
+Causal + sliding-window masking by absolute positions (queries
+right-aligned against kv, matching the decode contract); fully-masked KV
+tiles are skipped with ``pl.when`` so the sliding-window case does
+O(S·W) work, not O(S·T) — the long_500k requirement at kernel level.
+
+Block shapes default to (128, 128): multiples of the MXU's 128 lanes;
+scratch = (2 x 128 x head_dim x 4B) + fp32 acc ~ 0.4 MB VMEM at
+head_dim 128.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, window: Optional[int],
+    block_q: int, block_k: int, q_offset: int, kv_len: int,
+):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions: query row i is at q_offset + qi*block_q + i
+    q_pos = (
+        q_offset + qi * block_q
+        + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    )
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+
+    def _compute():
+        s = jnp.dot(
+            q_ref[0].astype(jnp.float32),
+            k_ref[0].astype(jnp.float32).T,
+            preferred_element_type=jnp.float32,
+        ) * scale  # (block_q, block_k)
+        mask = k_pos < kv_len  # padded kv tail is invalid
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    # skip KV tiles that are fully masked for this q tile
+    run = True
+    if causal:
+        run = run & (ki * block_k <= q_offset + qi * block_q + block_q - 1)
+    if window is not None:
+        # the tile has a live pair iff its OLDEST query is within the
+        # window of its NEWEST key
+        first_q = q_offset + qi * block_q
+        last_k = ki * block_k + block_k - 1
+        run = run & (first_q - last_k < window)
+    pl.when(run)(_compute)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, H, T, D)
+    v: jax.Array,  # (B, H, T, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    tk = k.shape[2]
+    scale = d ** -0.5
+    block_q = min(block_q, max(sq, 8))
+    block_k = min(block_k, max(tk, 8))
+
+    pad_q = (-sq) % block_q
+    pad_k = (-tk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    sqp, tkp = sq + pad_q, tk + pad_k
+
+    qf = qp.reshape(b * h, sqp, d)
+    kf = kp.reshape(b * h, tkp, d)
+    vf = vp.reshape(b * h, tkp, d)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale, causal=causal, window=window,
+            block_q=block_q, block_k=block_k,
+            q_offset=tk - sq, kv_len=tk,
+        ),
+        grid=(b * h, sqp // block_q, tkp // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),   # fp32 accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(b, h, sqp, d)
+    if pad_q:
+        out = out[:, :, :sq]
+    return out

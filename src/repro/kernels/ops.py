@@ -1,0 +1,42 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On TPU the kernels compile natively; on any other backend they run in
+``interpret=True`` mode (the kernel body executes in Python on CPU),
+which is how the tests validate them against the ``ref.py`` oracles.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d import conv2d_pallas
+from repro.kernels.flash_attn import flash_attention_pallas
+from repro.kernels.ssd import ssd_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def conv2d(x: jax.Array, w: jax.Array, *, cout_tile: int = 128) -> jax.Array:
+    """NHWC x HWIO SAME conv via the Pallas MXU kernel."""
+    return conv2d_pallas(x, w, cout_tile=cout_tile, interpret=_interpret())
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: Optional[int] = None,
+    block_q: int = 128, block_k: int = 128,
+) -> jax.Array:
+    """(B,H,S,D) x (B,H,T,D) flash attention via the Pallas kernel."""
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_interpret(),
+    )
+
+
+def ssd(x, dt, a, bmat, cmat, *, chunk: int = 256) -> jax.Array:
+    """Chunked SSD scan via the Pallas kernel (groups pre-expanded)."""
+    return ssd_pallas(x, dt, a, bmat, cmat, chunk=chunk, interpret=_interpret())

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, *, padding: str = "SAME") -> jax.Array:
+    """NHWC x HWIO -> NHWC, stride 1."""
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), padding, dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, H, T, D)
+    v: jax.Array,  # (B, H, T, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    s = jnp.einsum(
+        "bhsd,bhtd->bhst", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    sq, tk = q.shape[2], k.shape[2]
+    q_pos = jnp.arange(sq)[:, None] + (tk - sq)  # right-aligned positions
+    k_pos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((sq, tk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  (already softplus'd)
+    a: jax.Array,   # (H,) negative
+    bmat: jax.Array,  # (B, S, H, N)  (groups pre-expanded to heads)
+    cmat: jax.Array,  # (B, S, H, N)
+    initial_state: Optional[jax.Array] = None,  # (B, H, P, N)
+):
+    """Sequential (quadratic-free) SSD recurrence — the exact oracle:
+        S_t = exp(dt_t a) S_{t-1} + dt_t B_t x_t^T;  y_t = C_t . S_t
+    Returns (y (B,S,H,P), final_state)."""
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+    s0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+
+    def step(carry, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dtt * a[None, :])  # (B,H)
+        st = carry * decay[:, :, None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xt, bt, dtt
+        )
+        yt = jnp.einsum("bhpn,bhn->bhp", st, ct)
+        return st, yt
+
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(bmat, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(cmat, 1, 0).astype(jnp.float32),
+    )
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final

@@ -1,0 +1,123 @@
+"""Pallas TPU SSD (state-space duality, mamba-2) chunked-scan kernel.
+
+Grid (batch*heads, n_chunks) with chunks innermost/sequential: the
+(head_dim x d_state) recurrent state lives in fp32 VMEM scratch and is
+carried across chunk iterations (reset at chunk 0 of each (b,h)); within
+a chunk the duality gives a (L x L) masked-decay attention-like matmul on
+the MXU plus a rank-N state update:
+
+    y_intra = ((C B^T) o decay_mask) (dt x)        -- (L,L)x(L,P)
+    y_inter = (C S_prev^T) o exp(cum)              -- (L,N)x(N,P)
+    S_new   = exp(total) S_prev + (suffix o dt x)^T B
+
+Chunk 256, head_dim 64, d_state 128: VMEM = x(256x64) + B/C(256x128) +
+state(64x128 fp32) + scores(256x256 fp32) ~ 0.6 MB.  The state is
+head-local, so the sequential dim crosses no device boundary — the
+kernel-level mirror of why SSD head-sharding needs no collectives.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, *, chunk: int):
+    """Blocks per (bh, ci) step:
+    x (1, L, P); dt (1, L); a (1, 1); b/c (1, L, N); y (1, L, P);
+    s_ref: fp32 scratch (P, N) carried across the chunk dim."""
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _reset():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (L, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (L,)
+    a = a_ref[0, 0].astype(jnp.float32)     # scalar (negative)
+    bm = b_ref[0].astype(jnp.float32)       # (L, N)
+    cm = c_ref[0].astype(jnp.float32)       # (L, N)
+
+    da = dt * a                             # (L,) log-decay per step
+    cum = jnp.cumsum(da)                    # inclusive
+    total = cum[-1]
+
+    xdt = x * dt[:, None]                   # (L, P)
+
+    # intra-chunk: scores (L,L) on the MXU, masked by causal decay
+    scores = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)
+    decay = cum[:, None] - cum[None, :]     # cum_t - cum_u
+    l_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    u_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = l_idx >= u_idx
+    w = jnp.exp(jnp.where(mask, decay, -1e30))
+    y = jnp.dot(scores * w, xdt, preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    s_prev = s_ref[...]                     # (P, N)
+    y += jnp.exp(cum)[:, None] * jnp.dot(
+        cm, s_prev.T, preferred_element_type=jnp.float32
+    )
+
+    # state update: S = exp(total) S_prev + sum_u exp(total-cum_u) (dt x)_u B_u
+    suffix = jnp.exp(total - cum)           # (L,)
+    s_ref[...] = s_prev * jnp.exp(total) + jnp.dot(
+        (xdt * suffix[:, None]).T, bm, preferred_element_type=jnp.float32
+    )
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H) softplus'd
+    a: jax.Array,    # (H,) negative
+    bmat: jax.Array,  # (B, S, H, N) groups pre-expanded
+    cmat: jax.Array,  # (B, S, H, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    # (B,S,H,*) -> (B*H, S, *): head-major so the chunk dim is innermost
+    xf = x.transpose(0, 2, 1, 3).reshape(b * h, sp, p)
+    dtf = dt.transpose(0, 2, 1).reshape(b * h, sp)
+    bf = bmat.transpose(0, 2, 1, 3).reshape(b * h, sp, n)
+    cf = cmat.transpose(0, 2, 1, 3).reshape(b * h, sp, n)
+    af = jnp.tile(a.astype(jnp.float32)[None, :], (b, 1)).reshape(b * h, 1)
+
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, ci: (bh, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sp, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, bf, cf)
+
+    y = y.reshape(b, h, sp, p).transpose(0, 2, 1, 3)
+    if pad:
+        y = y[:, :s]
+    return y

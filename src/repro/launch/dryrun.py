@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any other import: jax locks the
+# device count at first initialisation, and the production dry-run needs
+# 512 placeholder host devices to build the 2x16x16 multi-pod mesh.
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import functools  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ARCH_IDS,
+    INPUT_SHAPES,
+    RunConfig,
+    get_config,
+    input_specs,
+    shapes_for_arch,
+)
+from repro.configs.base import InputShape, ModelConfig  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_name  # noqa: E402
+from repro.models.registry import build_model, rules_for_mode  # noqa: E402
+from repro.models.unroll import scan_unroll  # noqa: E402
+from repro.roofline.analysis import analyze_compiled  # noqa: E402
+from repro.serve.engine import make_serve_step  # noqa: E402
+from repro.sharding.partitioning import param_sharding_for_tree, spec_for_shape  # noqa: E402
+from repro.train.step import init_train_state, make_train_step, train_state_axes  # noqa: E402
+
+
+def run_config_for(cfg: ModelConfig, tp_mode: str, remat: str = "full") -> RunConfig:
+    """Per-arch run settings: the >20B archs need the beyond-paper memory
+    regime (adafactor + full remat); minicpm trains with WSD."""
+    api = build_model(cfg)
+    n_params = sum(
+        x.size for x in jax.tree.leaves(jax.eval_shape(lambda: api.init(jax.random.key(0))))
+    )
+    big = n_params > 20e9
+    return RunConfig(
+        tp_mode=tp_mode,
+        optimizer="adafactor" if big else "adam",
+        remat=remat,
+        schedule="wsd" if cfg.arch_id == "minicpm-2b" else "cosine",
+        grad_accum=1,
+    )
+
+
+def _batch_logical_axes(specs: Dict[str, Any]) -> Dict[str, Any]:
+    out = {}
+    for k, v in specs.items():
+        if k in ("tokens", "labels"):
+            out[k] = ("batch", None)
+        elif k in ("patches", "frames"):
+            out[k] = ("batch", None, None)
+        else:
+            raise KeyError(k)
+    return out
+
+
+def _shardings_for(mesh, rules, axes_tree, shape_tree):
+    return param_sharding_for_tree(mesh, axes_tree, rules, shape_tree)
+
+
+def lower_train(cfg: ModelConfig, shape: InputShape, mesh, tp_mode: str,
+                remat: str = "full"):
+    api = build_model(cfg)
+    run = run_config_for(cfg, tp_mode, remat)
+    rules = rules_for_mode(tp_mode)
+
+    abstract_state = jax.eval_shape(
+        lambda: init_train_state(jax.random.key(0), api, run)
+    )
+    state_axes = train_state_axes(api, run, abstract_state.params)
+    state_sh = _shardings_for(mesh, rules, state_axes, abstract_state)
+
+    specs = input_specs(cfg, shape)
+    batch_axes = _batch_logical_axes(specs)
+    batch_sh = _shardings_for(mesh, rules, batch_axes, specs)
+
+    train_step = make_train_step(api, run, mesh=mesh)
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    )
+    with jax.set_mesh(mesh):
+        lowered = jitted.lower(abstract_state, specs)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def lower_decode(cfg: ModelConfig, shape: InputShape, mesh, tp_mode: str):
+    api = build_model(cfg)
+    run = run_config_for(cfg, tp_mode)
+    rules = rules_for_mode(tp_mode)
+
+    abstract_params = jax.eval_shape(lambda: api.init(jax.random.key(0)))
+    param_sh = _shardings_for(mesh, rules, api.param_axes(), abstract_params)
+
+    specs = input_specs(cfg, shape)
+    cache = specs["cache"]
+    cache_sh = _shardings_for(mesh, rules, api.cache_axes(), cache)
+    tok_sh = _shardings_for(
+        mesh, rules, {"tokens": ("batch", None)}, {"tokens": specs["tokens"]}
+    )["tokens"]
+
+    serve_step = make_serve_step(api, run, mesh=mesh)
+
+    def step(params, cache, tokens):
+        nxt, logits, new_cache = serve_step(params, cache, tokens)
+        return nxt, new_cache
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(param_sh, cache_sh, tok_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+    )
+    with jax.set_mesh(mesh):
+        lowered = jitted.lower(abstract_params, cache, specs["tokens"])
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def lower_prefill(cfg: ModelConfig, shape: InputShape, mesh, tp_mode: str):
+    api = build_model(cfg)
+    run = run_config_for(cfg, tp_mode)
+    rules = rules_for_mode(tp_mode)
+
+    abstract_params = jax.eval_shape(lambda: api.init(jax.random.key(0)))
+    param_sh = _shardings_for(mesh, rules, api.param_axes(), abstract_params)
+
+    specs = input_specs(cfg, shape)
+    batch_axes = _batch_logical_axes(specs)
+    batch_sh = _shardings_for(mesh, rules, batch_axes, specs)
+
+    def prefill(params, batch):
+        return api.prefill(params, batch, rules=rules, mesh=mesh, remat="dots")
+
+    jitted = jax.jit(prefill, in_shardings=(param_sh, batch_sh))
+    with jax.set_mesh(mesh):
+        lowered = jitted.lower(abstract_params, specs)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def dryrun_one(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    tp_mode: str = "megatron",
+    remat: str = "full",
+    moe_dispatch: str = None,
+    verbose: bool = True,
+) -> dict:
+    """Lower + compile one (arch x shape x mesh x mode); return the record
+    (roofline terms, memory analysis, timings)."""
+    cfg = get_config(arch)
+    if moe_dispatch and cfg.moe is not None:
+        cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, dispatch=moe_dispatch))
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    # ROLLED layer scans: fast compiles and the true production artifact.
+    # FLOPs/collectives are counted by roofline/hlo_parse.py, which weights
+    # while bodies by their trip count (XLA's cost_analysis counts them
+    # once); memory_analysis is only meaningful on the rolled module.
+    if shape.kind == "train":
+        lowered, compiled = lower_train(cfg, shape, mesh, tp_mode, remat)
+    elif shape.kind == "prefill":
+        lowered, compiled = lower_prefill(cfg, shape, mesh, tp_mode)
+    else:
+        lowered, compiled = lower_decode(cfg, shape, mesh, tp_mode)
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    report = analyze_compiled(
+        compiled, cfg=cfg, shape=shape, mesh_name=mesh_name(mesh),
+        tp_mode=tp_mode, chips=chips,
+    )
+    rec = report.to_dict()
+    rec["remat"] = remat
+    rec["moe_dispatch"] = moe_dispatch or (cfg.moe.dispatch if cfg.moe else None)
+    rec["compile_s"] = compile_s
+    rec["memory_analysis"] = {
+        k: int(getattr(mem, k, 0))
+        for k in (
+            "temp_size_in_bytes",
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+    }
+    per_dev_hbm = (
+        rec["memory_analysis"]["temp_size_in_bytes"]
+        + rec["memory_analysis"]["argument_size_in_bytes"]
+    )
+    rec["hbm_bytes_per_device"] = per_dev_hbm
+    if verbose:
+        print(report.row(), f"hbm/dev={per_dev_hbm/2**30:7.2f}GiB compile={compile_s:6.1f}s",
+              flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="input shape or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--tp-mode", default="megatron", choices=["megatron", "gather", "fsdp", "zero1", "both"])
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--moe-dispatch", default=None, choices=["psum", "alltoall"])
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    modes = ["megatron", "gather"] if args.tp_mode == "both" else [args.tp_mode]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        allowed = shapes_for_arch(cfg)
+        if args.shape == "all":
+            shapes = allowed
+        else:
+            # respect the long_500k skip policy even with an explicit shape
+            shapes = [args.shape] if args.shape in allowed else []
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                for mode in modes:
+                    try:
+                        rec = dryrun_one(
+                            arch, shape_name, multi_pod=multi_pod, tp_mode=mode,
+                            remat=args.remat, moe_dispatch=args.moe_dispatch,
+                        )
+                        n_ok += 1
+                        if args.out:
+                            with open(args.out, "a") as f:
+                                f.write(json.dumps(rec) + "\n")
+                    except Exception:
+                        n_fail += 1
+                        print(f"FAIL {arch} {shape_name} multi_pod={multi_pod} {mode}")
+                        traceback.print_exc()
+    print(f"\ndry-run: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

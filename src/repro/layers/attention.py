@@ -1,0 +1,297 @@
+"""Multi-head attention: GQA, RoPE, sliding-window, cross-attention, KV-cache
+decode, and a blockwise (online-softmax / flash-style) pure-jnp path used for
+long sequences so the score matrix is never materialised.
+
+The Pallas flash kernel in ``repro.kernels.flash_attn`` implements the same
+contract for TPU; this module is the lowering-safe default (the dry-run mesh
+is CPU-hosted, where Pallas kernels only run in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.embedding import apply_rope
+from repro.layers.linear import apply_dense, dense_axes, init_dense
+from repro.sharding.axes import AxisRules
+from repro.sharding.partitioning import constrain
+
+NEG_INF = -1e30
+BLOCKWISE_THRESHOLD = 2048  # full-seq attention switches to blockwise above this
+DEFAULT_BLOCK_K = 1024
+
+
+def init_attention(key, cfg: ModelConfig, dtype, *, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], (d,), (h, hd), dtype),
+        "wk": init_dense(ks[1], (d,), (kv, hd), dtype),
+        "wv": init_dense(ks[2], (d,), (kv, hd), dtype),
+        "wo": init_dense(ks[3], (h, hd), (d,), dtype, scale=1.0),
+    }
+
+
+def attention_axes(cfg: ModelConfig):
+    return {
+        "wq": dense_axes(("fsdp_embed",), ("heads", "head_dim")),
+        "wk": dense_axes(("fsdp_embed",), ("kv_heads", "head_dim")),
+        "wv": dense_axes(("fsdp_embed",), ("kv_heads", "head_dim")),
+        "wo": dense_axes(("heads_in", "head_dim"), ("fsdp_embed",)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# score-level attention primitives
+
+
+def _split_gqa(q: jax.Array, num_kv: int) -> jax.Array:
+    """(B, S, H, D) -> (B, S, KV, G, D)"""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, d)
+
+
+def naive_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int],
+) -> jax.Array:
+    """Reference attention. q: (B,S,H,D); k,v: (B,T,KV,D); positions (B,S)/(B,T).
+    kv slots with position < 0 are invalid (empty cache slots)."""
+    num_kv = k.shape[2]
+    qg = _split_gqa(q, num_kv)  # (B,S,KV,G,D)
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    mask = kv_pos[:, None, :] >= 0  # (B,1,T) valid slots
+    if causal:
+        mask = mask & (q_pos[:, :, None] >= kv_pos[:, None, :])
+    if window is not None:
+        mask = mask & (q_pos[:, :, None] - kv_pos[:, None, :] < window)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    b, s = q.shape[:2]
+    return out.reshape(b, s, q.shape[2], q.shape[3]).astype(q.dtype)
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int],
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Online-softmax attention, scanning over KV blocks; the (S, T) score
+    matrix is never materialised (flash-attention recurrence in pure jnp)."""
+    b, s, h, d = q.shape
+    t, num_kv = k.shape[1], k.shape[2]
+    g = h // num_kv
+    pad = (-t) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nblocks = k.shape[1] // block_k
+    qg = _split_gqa(q, num_kv).astype(jnp.float32)  # (B,S,KV,G,D)
+    scale = d ** -0.5
+
+    kb = k.reshape(b, nblocks, block_k, num_kv, d)
+    vb = v.reshape(b, nblocks, block_k, num_kv, d)
+    pb = kv_pos.reshape(b, nblocks, block_k)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_blk, v_blk, p_blk = xs  # (B,bk,KV,D), (B,bk,KV,D), (B,bk)
+        scores = jnp.einsum(
+            "bskgd,btkd->bkgst", qg, k_blk.astype(jnp.float32)
+        ) * scale  # (B,KV,G,S,bk)
+        mask = p_blk[:, None, :] >= 0
+        if causal:
+            mask = mask & (q_pos[:, :, None] >= p_blk[:, None, :])
+        if window is not None:
+            mask = mask & (q_pos[:, :, None] - p_blk[:, None, :] < window)
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+        m_blk = jnp.max(scores, axis=-1)  # (B,KV,G,S)
+        m_new = jnp.maximum(m, m_blk)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])  # (B,KV,G,S,bk)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, v_blk.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, num_kv, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, num_kv, g, s), jnp.float32)
+    acc0 = jnp.zeros((b, num_kv, g, s, d), jnp.float32)
+    # checkpoint each KV block: the backward pass recomputes one block's
+    # scores at a time instead of saving every (S x block_k) f32 score
+    # tensor stacked over blocks (36 GiB/device for minicpm train_4k —
+    # see EXPERIMENTS.md SS Perf iteration A1)
+    body = jax.checkpoint(body, prevent_cse=False)
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, acc0),
+        (
+            jnp.moveaxis(kb, 1, 0),
+            jnp.moveaxis(vb, 1, 0),
+            jnp.moveaxis(pb, 1, 0),
+        ),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)  # (B,KV,G,S,D)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, s, h, d)
+    return out.astype(q.dtype)
+
+
+def attend(
+    q, k, v, q_pos, kv_pos, *, causal: bool, window: Optional[int]
+) -> jax.Array:
+    if k.shape[1] > BLOCKWISE_THRESHOLD:
+        return blockwise_attention(
+            q, k, v, q_pos, kv_pos, causal=causal, window=window
+        )
+    return naive_attention(q, k, v, q_pos, kv_pos, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# full attention layer
+
+
+def apply_attention(
+    params,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    rules: AxisRules,
+    positions: jax.Array,
+    causal: bool = True,
+    use_rope: bool = True,
+    kv_x: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence (train / prefill) attention. ``kv_x`` switches to
+    cross-attention (no causality, no rope on kv side positions)."""
+    dtype = cfg.compute_dtype
+    q = apply_dense(params["wq"], x, dtype=dtype)  # (B,S,H,hd)
+    src = x if kv_x is None else kv_x
+    k = apply_dense(params["wk"], src, dtype=dtype)
+    v = apply_dense(params["wv"], src, dtype=dtype)
+    # two-step layout pin: sharded right after the column matmul (the
+    # distributed "convolution"), then the mode-dependent layout (gather
+    # mode forces the paper's all-gather here; megatron keeps it sharded).
+    q = constrain(q, rules, "batch", None, "act_heads_col", None)
+    k = constrain(k, rules, "batch", None, "act_heads_col", None)
+    v = constrain(v, rules, "batch", None, "act_heads_col", None)
+    q = constrain(q, rules, "batch", None, "act_heads", None)
+    k = constrain(k, rules, "batch", None, "act_heads", None)
+    v = constrain(v, rules, "batch", None, "act_heads", None)
+    if kv_x is None:
+        kv_pos = positions
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        window = cfg.sliding_window
+    else:
+        assert kv_positions is not None
+        kv_pos = kv_positions
+        causal = False
+        window = None
+    out = attend(q, k, v, positions, kv_pos, causal=causal, window=window)
+    out = constrain(out, rules, "batch", None, "act_heads", None)
+    y = apply_dense(params["wo"], out, n_in_dims=2, dtype=dtype)
+    return constrain(y, rules, "batch", "act_seq", "act_embed")
+
+
+def compute_kv(params, kv_x: jax.Array, dtype) -> tuple:
+    """Precompute cross-attention K/V (whisper decode caches these)."""
+    k = apply_dense(params["wk"], kv_x, dtype=dtype)
+    v = apply_dense(params["wv"], kv_x, dtype=dtype)
+    return k, v
+
+
+def decode_attention(
+    params,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    rules: AxisRules,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    cache_pos: jax.Array,
+    index: jax.Array,
+    position: jax.Array,
+    use_rope: bool = True,
+):
+    """One-token decode against a KV cache.
+
+    cache_k/v: (B, L, KV, hd) — L is full seq_len or the sliding window
+    (ring buffer).  cache_pos: (B, L) the absolute position stored in each
+    slot (-1 = empty).  index: scalar slot to write (already wrapped for
+    ring buffers).  position: scalar absolute position of the new token.
+
+    Returns (out (B,1,D), new_k, new_v, new_pos).
+    """
+    dtype = cfg.compute_dtype
+    b = x.shape[0]
+    q = apply_dense(params["wq"], x, dtype=dtype)  # (B,1,H,hd)
+    k = apply_dense(params["wk"], x, dtype=dtype)  # (B,1,KV,hd)
+    v = apply_dense(params["wv"], x, dtype=dtype)
+    pos_arr = jnp.full((b, 1), position, dtype=jnp.int32)
+    if use_rope:
+        q = apply_rope(q, pos_arr, cfg.rope_theta)
+        k = apply_rope(k, pos_arr, cfg.rope_theta)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), index, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), index, axis=1)
+    new_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache_pos, pos_arr, index, axis=1
+    )
+    new_k = constrain(new_k, rules, "batch", None, "act_heads", None)
+    new_v = constrain(new_v, rules, "batch", None, "act_heads", None)
+    out = attend(
+        q,
+        new_k.astype(dtype),
+        new_v.astype(dtype),
+        pos_arr,
+        new_pos,
+        causal=True,
+        window=cfg.sliding_window,
+    )
+    y = apply_dense(params["wo"], out, n_in_dims=2, dtype=dtype)
+    return y, new_k, new_v, new_pos
+
+
+def cross_decode_attention(
+    params,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    rules: AxisRules,
+    k: jax.Array,
+    v: jax.Array,
+    kv_positions: jax.Array,
+):
+    """Cross-attention during decode: fixed precomputed encoder K/V."""
+    dtype = cfg.compute_dtype
+    b = x.shape[0]
+    q = apply_dense(params["wq"], x, dtype=dtype)
+    pos_arr = jnp.zeros((b, 1), dtype=jnp.int32)
+    out = naive_attention(
+        q, k.astype(dtype), v.astype(dtype), pos_arr, kv_positions,
+        causal=False, window=None,
+    )
+    return apply_dense(params["wo"], out, n_in_dims=2, dtype=dtype)

@@ -1,0 +1,59 @@
+"""Convolution + pooling layers for the paper's CIFAR-10 CNN.
+
+NHWC activations, HWIO kernels.  The output-channel axis (``conv_out``)
+is the paper's "kernel" axis — the one sharded across devices by the
+distribution technique (core/conv_shard.py) and tiled across the MXU by
+the Pallas kernel (kernels/conv2d.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_conv(key, kh: int, kw: int, c_in: int, c_out: int, dtype=jnp.float32):
+    fan_in = kh * kw * c_in
+    w = jax.random.normal(key, (kh, kw, c_in, c_out), jnp.float32) / math.sqrt(fan_in)
+    return {"kernel": w.astype(dtype), "bias": jnp.zeros((c_out,), dtype)}
+
+
+def conv_axes():
+    return {"kernel": (None, None, "conv_in", "conv_out"), "bias": ("conv_out",)}
+
+
+def apply_conv(params, x: jax.Array, *, padding: str = "SAME") -> jax.Array:
+    """x: (B, H, W, Cin) -> (B, H', W', Cout)."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        params["kernel"].astype(x.dtype),
+        window_strides=(1, 1),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + params["bias"].astype(y.dtype)
+
+
+def max_pool(x: jax.Array, window: int = 2, stride: int = 2) -> jax.Array:
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def avg_pool(x: jax.Array, window: int = 2, stride: int = 2) -> jax.Array:
+    s = jax.lax.reduce_window(
+        x,
+        0.0,
+        jax.lax.add,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+    return s / (window * window)

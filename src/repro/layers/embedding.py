@@ -1,0 +1,45 @@
+"""Token embedding, logits head, and rotary position embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_embedding(key, vocab_size: int, d_model: int, dtype=jnp.float32):
+    table = jax.random.normal(key, (vocab_size, d_model), jnp.float32).astype(dtype)
+    return {"table": table}
+
+
+def embedding_axes():
+    return {"table": ("vocab", "fsdp_embed")}
+
+
+def embed_tokens(params, tokens: jax.Array, dtype) -> jax.Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def logits_from_embedding(params, x: jax.Array, dtype) -> jax.Array:
+    """Tied read-out: x @ table.T"""
+    table = params["table"].astype(dtype)
+    return jnp.einsum("...d,vd->...v", x.astype(dtype), table)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim//2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

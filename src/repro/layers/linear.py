@@ -1,0 +1,56 @@
+"""DenseGeneral: multi-dimensional linear layers with logical-axis metadata."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _as_tuple(x) -> Tuple[int, ...]:
+    return (x,) if isinstance(x, int) else tuple(x)
+
+
+def init_dense(
+    key: jax.Array,
+    in_dims,
+    out_dims,
+    dtype=jnp.float32,
+    *,
+    scale: float = 1.0,
+    use_bias: bool = False,
+):
+    """Variance-scaling (fan-in) init, kernel shape = in_dims + out_dims."""
+    in_dims, out_dims = _as_tuple(in_dims), _as_tuple(out_dims)
+    fan_in = math.prod(in_dims)
+    std = scale / math.sqrt(fan_in)
+    kernel = (jax.random.normal(key, in_dims + out_dims, jnp.float32) * std).astype(dtype)
+    params = {"kernel": kernel}
+    if use_bias:
+        params["bias"] = jnp.zeros(out_dims, dtype=dtype)
+    return params
+
+
+def dense_axes(in_axes: Sequence[Optional[str]], out_axes: Sequence[Optional[str]], use_bias=False):
+    ax = {"kernel": tuple(in_axes) + tuple(out_axes)}
+    if use_bias:
+        ax["bias"] = tuple(out_axes)
+    return ax
+
+
+def apply_dense(params, x: jax.Array, *, n_in_dims: int = 1, dtype=None) -> jax.Array:
+    """Contract the last ``n_in_dims`` dims of x with the kernel's leading dims."""
+    kernel = params["kernel"]
+    if dtype is None:
+        dtype = x.dtype
+    kernel = kernel.astype(dtype)
+    x = x.astype(dtype)
+    contracting = (
+        tuple(range(x.ndim - n_in_dims, x.ndim)),
+        tuple(range(n_in_dims)),
+    )
+    y = jax.lax.dot_general(x, kernel, dimension_numbers=(contracting, ((), ())))
+    if "bias" in params:
+        y = y + params["bias"].astype(dtype)
+    return y

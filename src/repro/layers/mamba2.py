@@ -1,0 +1,275 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) layer.
+
+Chunked SSD algorithm: within-chunk quadratic attention-like term +
+cross-chunk recurrence over a per-head (head_dim x d_state) state, scanned
+with ``lax.scan``.  The paper's technique maps onto the SSD *head* axis:
+heads are the output-feature groups sharded over the ``model`` mesh axis
+(the conv-kernel analogue); the recurrent state is head-local, so the
+sequential scan crosses no device boundary — zero collectives inside the
+scan (noted in DESIGN.md §Arch-applicability).
+
+Decode keeps O(1) state per token: (conv_state, ssm_state) — this is what
+makes ``long_500k`` native for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.sharding.axes import AxisRules
+from repro.sharding.partitioning import constrain
+
+
+def _dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_in = ssm.d_inner(cfg.d_model)
+    nh = ssm.n_heads(cfg.d_model)
+    return ssm, d_in, nh, ssm.head_dim, ssm.d_state, ssm.n_groups
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype):
+    ssm, d_in, nh, hd, n, g = _dims(cfg)
+    d = cfg.d_model
+    conv_ch = d_in + 2 * g * n
+    ks = jax.random.split(key, 5)
+    std = 1.0 / math.sqrt(d)
+    proj_out = 2 * d_in + 2 * g * n + nh  # z, x, B, C, dt
+    return {
+        "in_proj": {
+            "kernel": (jax.random.normal(ks[0], (d, proj_out), jnp.float32) * std).astype(dtype)
+        },
+        "conv_w": (jax.random.normal(ks[1], (ssm.d_conv, conv_ch), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ),  # A = -exp(a_log), mamba2 init A in [1,16]
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "out_proj": {
+            "kernel": (jax.random.normal(ks[2], (d_in, d), jnp.float32) * std / math.sqrt(2 * cfg.num_layers)).astype(dtype)
+        },
+    }
+
+
+def mamba2_axes():
+    return {
+        "in_proj": {"kernel": ("fsdp_embed", "ssm_inner")},
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "dt_bias": ("ssm_heads",),
+        "a_log": ("ssm_heads",),
+        "d_skip": ("ssm_heads",),
+        "norm_scale": ("ssm_inner",),
+        "out_proj": {"kernel": ("ssm_inner", "fsdp_embed")},
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    ssm, d_in, nh, hd, n, g = _dims(cfg)
+    z, x, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + g * n, 2 * d_in + 2 * g * n], axis=-1
+    )
+    return z, x, bmat, cmat, dt
+
+
+def _depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Causal depthwise conv over time.  x: (B,S,C), w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def _ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) — already softplus'd
+    a: jax.Array,  # (H,) negative
+    bmat: jax.Array,  # (B, S, G, N)
+    cmat: jax.Array,  # (B, S, G, N)
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // chunk
+    # heads per group
+    hg = h // g
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = bmat.reshape(bsz, nc, chunk, g, n)
+    cc = cmat.reshape(bsz, nc, chunk, g, n)
+
+    da = dtc * a[None, None, None, :]  # (B,nc,L,H) log-decay per step, negative
+    cum = jnp.cumsum(da, axis=2)  # inclusive cumsum within chunk
+    total = cum[:, :, -1, :]  # (B,nc,H) full-chunk decay (log)
+
+    # intra-chunk: y[t] = sum_{u<=t} C_t . B_u * exp(cum_t - cum_u) * dt_u * x_u
+    def to_heads(m):  # (B,nc,L,G,N) -> (B,nc,L,H,N)
+        return jnp.repeat(m, hg, axis=3)
+
+    bh = to_heads(bc)
+    ch = to_heads(cc)
+    scores = jnp.einsum("bclhn,bcuhn->bchlu", ch, bh)  # (B,nc,H,L,L)
+    decay = cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3) - cum[
+        :, :, :, None, :
+    ].transpose(0, 1, 4, 3, 2)  # cum_t - cum_u, (B,nc,H,L,L)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask INSIDE the exp: exp of the masked (positive, large) entries
+    # would produce inf gradients through the where (NaN-grad trap)
+    m = jnp.exp(jnp.where(causal[None, None, None], decay, -1e30))
+    xdt = xc * dtc[..., None]  # (B,nc,L,H,P) — dt-weighted input
+    y_intra = jnp.einsum("bchlu,bcuhp->bclhp", scores * m, xdt)
+
+    # chunk states: S_c = sum_u exp(total - cum_u) B_u (dt_u x_u)
+    suffix = jnp.exp(total[:, :, None, :] - cum)  # (B,nc,L,H)
+    state_c = jnp.einsum("bclhn,bclh,bclhp->bchpn", bh, suffix, xdt)
+
+    # inter-chunk recurrence over chunks
+    s0 = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((bsz, h, p, n), x.dtype)
+    )
+
+    def step(carry, inp):
+        st = carry  # (B,H,P,N)
+        tot_c, new_state = inp  # (B,H), (B,H,P,N)
+        out_state = st  # state entering this chunk
+        st = st * jnp.exp(tot_c)[:, :, None, None] + new_state
+        return st, out_state
+
+    final, prev_states = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(total, 1, 0), jnp.moveaxis(state_c, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,P,N)
+
+    # inter contribution: y_t += C_t . prev_state * exp(cum_t)
+    y_inter = jnp.einsum(
+        "bclhn,bchpn,bclh->bclhp", ch, prev_states, jnp.exp(cum)
+    )
+    y = (y_intra + y_inter).reshape(bsz, nc * chunk, h, p)
+    if pad:
+        y = y[:, :s]
+    return y, final
+
+
+def apply_mamba2(
+    params,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    rules: AxisRules,
+) -> jax.Array:
+    """Full-sequence mamba2 block body (pre-norm residual handled by caller)."""
+    ssm, d_in, nh, hd, n, g = _dims(cfg)
+    dtype = cfg.compute_dtype
+    bsz, s, _ = x.shape
+    zxbcdt = (x.astype(dtype) @ params["in_proj"]["kernel"].astype(dtype))
+    z, xi, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([xi, bmat, cmat], axis=-1)
+    conv_out = jax.nn.silu(
+        _depthwise_conv(conv_in, params["conv_w"].astype(dtype), params["conv_b"].astype(dtype))
+    )
+    xi, bmat, cmat = jnp.split(conv_out, [d_in, d_in + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    a = -jnp.exp(params["a_log"])  # (H,)
+
+    xh = xi.reshape(bsz, s, nh, hd).astype(jnp.float32)
+    xh = constrain(xh, rules, "batch", None, "ssm_heads", None)
+    bg = bmat.reshape(bsz, s, g, n).astype(jnp.float32)
+    cg = cmat.reshape(bsz, s, g, n).astype(jnp.float32)
+
+    y, _ = _ssd_chunked(xh, dt, a, bg, cg, ssm.chunk_size)
+    y = y + xh * params["d_skip"][None, None, :, None]
+    y = constrain(y, rules, "batch", None, "ssm_heads", None)
+    y = y.reshape(bsz, s, d_in).astype(dtype)
+
+    # gated RMSNorm (mamba2 normalises the gated output)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(dtype)
+    y = y * params["norm_scale"].astype(dtype)[None, None, :]
+
+    return y @ params["out_proj"]["kernel"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) state per step
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype):
+    ssm, d_in, nh, hd, n, g = _dims(cfg)
+    conv_ch = d_in + 2 * g * n
+    return {
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, nh, hd, n), jnp.float32),
+    }
+
+
+def mamba2_state_axes():
+    return {"conv": ("batch", None, "ssm_inner"), "ssm": ("batch", "ssm_heads", None, None)}
+
+
+def decode_mamba2(
+    params,
+    x: jax.Array,  # (B, 1, d)
+    state,
+    *,
+    cfg: ModelConfig,
+    rules: AxisRules,
+):
+    """Single-token recurrent step.  Returns (y (B,1,d), new_state)."""
+    ssm, d_in, nh, hd, n, g = _dims(cfg)
+    dtype = cfg.compute_dtype
+    bsz = x.shape[0]
+    zxbcdt = x[:, 0].astype(dtype) @ params["in_proj"]["kernel"].astype(dtype)
+    z, xi, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([xi, bmat, cmat], axis=-1)  # (B, C)
+    window = jnp.concatenate([state["conv"], conv_in[:, None, :]], axis=1)  # (B,K,C)
+    w = params["conv_w"].astype(dtype)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"].astype(dtype)
+    )
+    new_conv = window[:, 1:, :]
+    xi, bmat, cmat = jnp.split(conv_out, [d_in, d_in + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, :])  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    xh = xi.reshape(bsz, nh, hd).astype(jnp.float32)
+    bg = jnp.repeat(bmat.reshape(bsz, g, n), nh // g, axis=1).astype(jnp.float32)
+    cg = jnp.repeat(cmat.reshape(bsz, g, n), nh // g, axis=1).astype(jnp.float32)
+
+    decay = jnp.exp(dt * a[None, :])  # (B,H)
+    new_ssm = state["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bhn,bh->bhpn", xh, bg, dt
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, cg)
+    y = y + xh * params["d_skip"][None, :, None]
+    y = y.reshape(bsz, d_in).astype(dtype)
+
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(dtype)
+    y = y * params["norm_scale"].astype(dtype)[None, :]
+    out = (y @ params["out_proj"]["kernel"].astype(dtype))[:, None, :]
+    return out, {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,76 @@
+"""Feed-forward layers.
+
+This is the transformer generalisation of the paper's scheme: the FFN
+weight matrix is the "kernel set" of the compute-dominant layer, sharded
+along its *output-feature* axis (``mlp``), exactly like the conv kernels
+are sharded along the output-channel axis (``conv_out``).
+
+Two activation-return modes exist, selected by the axis rules:
+* gather  (paper-faithful) — the second matmul's output is immediately
+  all-gathered back to a replicated residual stream (the "master collects
+  every feature map" step of Algorithm 1);
+* megatron (beyond-paper) — column-parallel w_in, row-parallel w_out, one
+  reduce-scatter/all-reduce instead of gathers.
+
+Both are expressed purely via sharding constraints: XLA GSPMD inserts the
+collectives, we only pin the layouts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.linear import apply_dense, dense_axes, init_dense
+from repro.sharding.axes import AxisRules
+from repro.sharding.partitioning import constrain
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu":
+        return jax.nn.relu
+    if name == "squared_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, *, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": init_dense(ks[0], (d_model,), (d_ff,), dtype),
+        "w_out": init_dense(ks[1], (d_ff,), (d_model,), dtype, scale=1.0),
+    }
+    if gated:
+        p["w_gate"] = init_dense(ks[2], (d_model,), (d_ff,), dtype)
+    return p
+
+
+def mlp_axes(*, gated: bool = True):
+    ax = {
+        "w_in": dense_axes(("fsdp_embed",), ("mlp",)),
+        "w_out": dense_axes(("mlp_in",), ("fsdp_embed",)),
+    }
+    if gated:
+        ax["w_gate"] = dense_axes(("fsdp_embed",), ("mlp",))
+    return ax
+
+
+def apply_mlp(params, x: jax.Array, *, cfg: ModelConfig, rules: AxisRules) -> jax.Array:
+    dtype = cfg.compute_dtype
+    act = activation_fn(cfg.activation)
+    h = apply_dense(params["w_in"], x, dtype=dtype)
+    if "w_gate" in params:
+        g = apply_dense(params["w_gate"], x, dtype=dtype)
+        h = act(g) * h
+    else:
+        h = act(h)
+    # two-step layout pin: column-parallel output, then the mode-dependent
+    # layout (gather mode all-gathers here -- the paper's Alg.1 gather).
+    h = constrain(h, rules, "batch", None, "act_mlp_col")
+    h = constrain(h, rules, "batch", None, "act_mlp")
+    y = apply_dense(params["w_out"], h, dtype=dtype)
+    return constrain(y, rules, "batch", "act_seq", "act_embed")

@@ -1,0 +1,322 @@
+"""Mixture-of-Experts layer with expert-parallel sharding.
+
+Mapping of the paper's scheme onto MoE: the experts are the "kernel sets"
+of the compute-dominant layer.  Tokens stay sharded on the batch axes
+(``pod``/``data``) — the paper keeps the batch local to the master — and
+are *replicated* across the ``model`` axis ("all slaves receive the same
+inputs").  Each model rank owns a contiguous slice of experts ("different
+kernels"), gathers the tokens routed to its experts (capacity-bounded,
+GShard-style), runs the expert FFNs, scatter-adds its contribution, and a
+``psum`` over ``model`` plays the role of the master gathering the feature
+maps (Algorithm 1 line 19-22).
+
+When the expert count does not divide the model axis (mixtral: 8 experts
+on a 16-way axis) the same code path shards each expert's *d_ff* instead
+(per-expert tensor parallelism); the psum-combine is unchanged.
+
+Dispatch is sort-based (argsort by expert id + rank-within-expert), never
+materialising a (tokens, experts, capacity) one-hot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.layers.linear import init_dense
+from repro.layers.mlp import activation_fn
+
+
+def init_moe(key, d_model: int, moe: MoEConfig, dtype):
+    e, ff = moe.num_experts, moe.expert_d_ff
+    ks = jax.random.split(key, 4)
+    import math
+
+    std = 1.0 / math.sqrt(d_model)
+    return {
+        "router": init_dense(ks[0], (d_model,), (e,), jnp.float32),
+        "w_in": (jax.random.normal(ks[1], (e, d_model, ff), jnp.float32) * std).astype(dtype),
+        "w_gate": (jax.random.normal(ks[2], (e, d_model, ff), jnp.float32) * std).astype(dtype),
+        "w_out": (jax.random.normal(ks[3], (e, ff, d_model), jnp.float32) * std).astype(dtype),
+    }
+
+
+def moe_axes():
+    return {
+        "router": {"kernel": ("fsdp_embed", None)},  # router always replicated on model
+        "w_in": ("experts", "fsdp_embed", "expert_mlp"),
+        "w_gate": ("experts", "fsdp_embed", "expert_mlp"),
+        "w_out": ("experts", "expert_mlp", "fsdp_embed"),
+    }
+
+
+def _capacity(num_tokens: int, moe: MoEConfig) -> int:
+    cap = int(num_tokens * moe.experts_per_token * moe.capacity_factor / moe.num_experts)
+    return max(moe.experts_per_token, min(cap, num_tokens))
+
+
+def _dispatch_tables(
+    top_idx: jax.Array, top_gate: jax.Array, num_experts: int, capacity: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort-based GShard dispatch.
+
+    top_idx/top_gate: (T, k) expert assignment per token.
+    Returns (token_table (E, C) int32 — index into [0, T] with T = sentinel,
+             gate_table (E, C) f32, aux stats (fraction per expert (E,))).
+    """
+    t, k = top_idx.shape
+    a = t * k
+    flat_e = top_idx.reshape(a)
+    flat_gate = top_gate.reshape(a)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=num_experts)
+    starts = jnp.cumsum(counts) - counts
+    rank_sorted = jnp.arange(a, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    rank = jnp.zeros(a, jnp.int32).at[order].set(rank_sorted)
+
+    valid = rank < capacity
+    slot = jnp.where(valid, flat_e * capacity + rank, num_experts * capacity)
+    token_table = (
+        jnp.full(num_experts * capacity + 1, t, jnp.int32).at[slot].set(flat_tok)
+    )[:-1].reshape(num_experts, capacity)
+    gate_table = (
+        jnp.zeros(num_experts * capacity + 1, jnp.float32).at[slot].set(flat_gate)
+    )[:-1].reshape(num_experts, capacity)
+    return token_table, gate_table, counts.astype(jnp.float32) / a
+
+
+def _expert_ffn(xs: jax.Array, w_in, w_gate, w_out, activation: str) -> jax.Array:
+    """xs: (E_loc, C, d); weights (E_loc, d, ff_loc)/(E_loc, ff_loc, d)."""
+    act = activation_fn(activation)
+    h = jnp.einsum("ecd,edf->ecf", xs, w_in)
+    g = jnp.einsum("ecd,edf->ecf", xs, w_gate)
+    h = act(g) * h
+    return jnp.einsum("ecf,efd->ecd", h, w_out)
+
+
+def _moe_local(
+    x_flat: jax.Array,
+    params,
+    *,
+    moe: MoEConfig,
+    activation: str,
+    dtype,
+    expert_shards: int,
+    expert_rank,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-shard MoE body.  x_flat: (T_loc, d).  params' expert weights are
+    the *local* slice (E_loc on the expert axis when experts are sharded,
+    otherwise ff_loc on the hidden axis).  Returns (out (T_loc, d), aux)."""
+    t, d = x_flat.shape
+    e = moe.num_experts
+    k = moe.experts_per_token
+    cap = _capacity(t, moe)
+
+    logits = (x_flat.astype(jnp.float32) @ params["router"]["kernel"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    top_gate, top_idx = jax.lax.top_k(probs, k)
+    top_gate = top_gate / jnp.maximum(top_gate.sum(-1, keepdims=True), 1e-9)
+
+    token_table, gate_table, frac_tokens = _dispatch_tables(top_idx, top_gate, e, cap)
+
+    e_loc = params["w_in"].shape[0]
+    if expert_shards > 1 and e_loc < e:
+        # experts sharded: keep only this rank's rows of the dispatch table
+        start = expert_rank * e_loc
+        token_table = jax.lax.dynamic_slice_in_dim(token_table, start, e_loc, axis=0)
+        gate_table = jax.lax.dynamic_slice_in_dim(gate_table, start, e_loc, axis=0)
+
+    x_pad = jnp.concatenate([x_flat, jnp.zeros((1, d), x_flat.dtype)], axis=0)
+    xs = x_pad[token_table]  # (E_loc, C, d) — "the slaves receive the inputs"
+    ys = _expert_ffn(
+        xs.astype(dtype), params["w_in"].astype(dtype),
+        params["w_gate"].astype(dtype), params["w_out"].astype(dtype), activation,
+    )
+    ys = ys * gate_table[..., None].astype(ys.dtype)
+
+    out = jnp.zeros((t + 1, d), ys.dtype)
+    out = out.at[token_table.reshape(-1)].add(ys.reshape(-1, d))
+    out = out[:-1]
+
+    # load-balance loss (Switch): E * sum_e f_e * p_e
+    mean_prob = probs.mean(0)
+    aux = e * jnp.sum(frac_tokens * mean_prob) * moe.load_balance_loss_weight
+    return out, aux
+
+
+def apply_moe(
+    params,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    mesh=None,
+    token_axes: Tuple[str, ...] = (),
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d).  Returns (out, aux_loss).
+
+    ``mesh`` + ``token_axes``: when running under a mesh, the flattened
+    token dim is sharded over ``token_axes`` (typically ("pod","data")),
+    experts over the ``model`` axis (or d_ff over model when E % model != 0),
+    and the outputs are psum-combined over ``model``.
+    """
+    moe = cfg.moe
+    assert moe is not None
+    b, s, d = x.shape
+    x_flat = x.reshape(b * s, d)
+    dtype = cfg.compute_dtype
+
+    if mesh is None or "model" not in mesh.axis_names:
+        out, aux = _moe_local(
+            x_flat, params, moe=moe, activation=cfg.activation, dtype=dtype,
+            expert_shards=1, expert_rank=0,
+        )
+        return out.reshape(b, s, d).astype(x.dtype), aux
+
+    n_model = mesh.axis_sizes[mesh.axis_names.index("model")]
+    experts_sharded = moe.num_experts % n_model == 0
+    ff_sharded = (not experts_sharded) and moe.expert_d_ff % n_model == 0
+
+    tok_axes = tuple(
+        a for a in token_axes if a in mesh.axis_names
+    )
+    # only shard the token dim if it divides
+    prod = 1
+    kept = []
+    for a in tok_axes:
+        sz = mesh.axis_sizes[mesh.axis_names.index(a)]
+        if (b * s) % (prod * sz) == 0:
+            kept.append(a)
+            prod *= sz
+    # beyond-paper all-to-all dispatch: shard tokens over `model` as well
+    use_a2a = (
+        moe.dispatch == "alltoall"
+        and experts_sharded
+        and "model" not in kept
+        and (b * s) % (prod * n_model) == 0
+    )
+    if use_a2a:
+        out, aux = _apply_moe_a2a(
+            params, x_flat, cfg=cfg, mesh=mesh,
+            tok_spec=tuple(kept) + ("model",), n_model=n_model,
+        )
+        return out.reshape(b, s, d).astype(x.dtype), aux
+    tok_spec = tuple(kept) if kept else None
+
+    if experts_sharded:
+        w_spec = {"router": {"kernel": P(None, None)},
+                  "w_in": P("model", None, None),
+                  "w_gate": P("model", None, None),
+                  "w_out": P("model", None, None)}
+    elif ff_sharded:
+        w_spec = {"router": {"kernel": P(None, None)},
+                  "w_in": P(None, None, "model"),
+                  "w_gate": P(None, None, "model"),
+                  "w_out": P(None, "model", None)}
+    else:  # fully replicated experts (smoke-scale fallback)
+        w_spec = {"router": {"kernel": P(None, None)},
+                  "w_in": P(None, None, None),
+                  "w_gate": P(None, None, None),
+                  "w_out": P(None, None, None)}
+
+    def body(x_loc, p_loc):
+        rank = jax.lax.axis_index("model")
+        out, aux = _moe_local(
+            x_loc, p_loc, moe=moe, activation=cfg.activation, dtype=dtype,
+            expert_shards=n_model if experts_sharded else 1,
+            expert_rank=rank,
+        )
+        if experts_sharded or ff_sharded:
+            out = jax.lax.psum(out, "model")
+        # aux must be identical on every rank for the replicated out_spec
+        for ax in mesh.axis_names:
+            aux = jax.lax.pmean(aux, ax)
+        return out, aux
+
+    out, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(tok_spec, None), w_spec),
+        out_specs=(P(tok_spec, None), P()),
+        check_vma=False,
+    )(x_flat, params)
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _apply_moe_a2a(params, x_flat, *, cfg: ModelConfig, mesh, tok_spec, n_model):
+    """All-to-all expert dispatch (beyond-paper combine schedule).
+
+    Tokens are sharded over the `model` axis too; every rank routes only
+    its own T/(data*model) tokens, packs per-expert capacity buffers, and
+    two all-to-alls move ONLY the routed tokens to/from the expert owners
+    — replacing the paper-style broadcast (tokens replicated over model)
+    + psum-gather, whose traffic is the full activation volume.
+    """
+    moe = cfg.moe
+    dtype = cfg.compute_dtype
+    e = moe.num_experts
+    e_loc = e // n_model
+
+    w_spec = {"router": {"kernel": P(None, None)},
+              "w_in": P("model", None, None),
+              "w_gate": P("model", None, None),
+              "w_out": P("model", None, None)}
+
+    def body(x_loc, p_loc):
+        t, d = x_loc.shape  # T/(pod*data*model) local tokens
+        k = moe.experts_per_token
+        cap = _capacity(t, moe)
+
+        logits = (x_loc.astype(jnp.float32) @ p_loc["router"]["kernel"])
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_gate, top_idx = jax.lax.top_k(probs, k)
+        top_gate = top_gate / jnp.maximum(top_gate.sum(-1, keepdims=True), 1e-9)
+        token_table, gate_table, frac = _dispatch_tables(top_idx, top_gate, e, cap)
+
+        x_pad = jnp.concatenate([x_loc, jnp.zeros((1, d), x_loc.dtype)], axis=0)
+        xs = x_pad[token_table].astype(dtype)  # (E, cap, d) — send buffers
+
+        # forward a2a: rows [i*e_loc:(i+1)*e_loc] go to model-rank i
+        recv = jax.lax.all_to_all(
+            xs, "model", split_axis=0, concat_axis=0, tiled=True
+        )  # (E, cap, d): n_model source blocks of (e_loc, cap, d)
+        recv = recv.reshape(n_model, e_loc, cap, d).transpose(1, 0, 2, 3)
+        recv = recv.reshape(e_loc, n_model * cap, d)
+
+        ys = _expert_ffn(
+            recv, p_loc["w_in"].astype(dtype), p_loc["w_gate"].astype(dtype),
+            p_loc["w_out"].astype(dtype), cfg.activation,
+        )  # (e_loc, n_model*cap, d)
+
+        # return a2a: block j of each rank goes back to source rank j
+        ys = ys.reshape(e_loc, n_model, cap, d).transpose(1, 0, 2, 3)
+        ys = ys.reshape(e, cap, d)
+        back = jax.lax.all_to_all(
+            ys, "model", split_axis=0, concat_axis=0, tiled=True
+        )  # (E, cap, d) — expert-major rows for OUR tokens
+
+        back = back * gate_table[..., None].astype(back.dtype)
+        out = jnp.zeros((t + 1, d), back.dtype)
+        out = out.at[token_table.reshape(-1)].add(back.reshape(-1, d))
+        out = out[:-1]
+
+        aux = e * jnp.sum(frac * probs.mean(0)) * moe.load_balance_loss_weight
+        for ax in mesh.axis_names:
+            aux = jax.lax.pmean(aux, ax)
+        return out, aux
+
+    out, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(tok_spec, None), w_spec),
+        out_specs=(P(tok_spec, None), P()),
+        check_vma=False,
+    )(x_flat, params)
+    return out, aux

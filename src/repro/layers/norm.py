@@ -1,0 +1,81 @@
+"""Normalisation layers: RMSNorm, LayerNorm, and the paper CNN's local
+response normalisation (cuda-convnet style, as used for CIFAR-10)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm_axes():
+    return {"scale": ("embed_norm",)}
+
+
+def apply_rmsnorm(params, x, eps: float = 1e-5):
+    in_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(in_dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm_axes():
+    return {"scale": ("embed_norm",), "bias": ("embed_norm",)}
+
+
+def apply_layernorm(params, x, eps: float = 1e-5):
+    in_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(in_dtype)
+
+
+def init_norm(kind: str, d: int, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return init_rmsnorm(d, dtype)
+    if kind == "layernorm":
+        return init_layernorm(d, dtype)
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+def norm_axes(kind: str):
+    return rmsnorm_axes() if kind == "rmsnorm" else layernorm_axes()
+
+
+def apply_norm(kind: str, params, x, eps: float = 1e-5):
+    if kind == "rmsnorm":
+        return apply_rmsnorm(params, x, eps)
+    return apply_layernorm(params, x, eps)
+
+
+def local_response_norm(
+    x: jax.Array, *, size: int = 5, alpha: float = 1e-4, beta: float = 0.75, k: float = 2.0
+) -> jax.Array:
+    """Cross-channel LRN over NHWC feature maps (the paper's CNN
+    "normalisation layer", cuda-convnet / AlexNet style).
+
+    Channel-local within a +-size/2 window, so it stays valid on
+    channel-sharded feature maps as long as the halo is gathered; the
+    sharded CNN path uses per-shard LRN (see core/conv_shard.py notes).
+    """
+    sq = jnp.square(x.astype(jnp.float32))
+    c = x.shape[-1]
+    half = size // 2
+    padded = jnp.pad(sq, [(0, 0)] * (x.ndim - 1) + [(half, half)])
+    # windowed sum over the channel axis
+    window = sum(
+        jax.lax.dynamic_slice_in_dim(padded, i, c, axis=x.ndim - 1)
+        for i in range(size)
+    )
+    denom = jnp.power(k + alpha * window, beta)
+    return (x.astype(jnp.float32) / denom).astype(x.dtype)

@@ -1,0 +1,85 @@
+"""The paper's CIFAR-10 CNN (§5.2):
+
+    conv(5x5, C1) -> LRN -> maxpool/2 -> conv(5x5, C2) -> LRN ->
+    maxpool/2 -> fully-connected -> softmax loss
+
+Four sizes are studied: (C1, C2) in {(50,500), (150,800), (300,1000),
+(500,1500)}.  The conv output-channel axis is the paper's distribution
+axis; ``core/conv_shard.py`` shards it over the mesh and
+``core/master_slave.py`` runs it over the emulated socket cluster.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CNNConfig
+from repro.layers.conv import apply_conv, conv_axes, init_conv, max_pool
+from repro.layers.linear import apply_dense, dense_axes, init_dense
+from repro.layers.norm import local_response_norm
+
+
+PAPER_SIZES = {
+    "cifar_cnn_50_500": (50, 500),
+    "cifar_cnn_150_800": (150, 800),
+    "cifar_cnn_300_1000": (300, 1000),
+    "cifar_cnn_500_1500": (500, 1500),
+}
+
+
+def make_cnn_config(c1: int, c2: int) -> CNNConfig:
+    return CNNConfig(arch_id=f"cifar_cnn_{c1}_{c2}", c1_kernels=c1, c2_kernels=c2)
+
+
+def init_cnn(key, cfg: CNNConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    k = cfg.kernel_size
+    feat = cfg.image_size // (cfg.pool_stride ** 2)
+    return {
+        "conv1": init_conv(ks[0], k, k, cfg.image_channels, cfg.c1_kernels, dtype),
+        "conv2": init_conv(ks[1], k, k, cfg.c1_kernels, cfg.c2_kernels, dtype),
+        "fc": init_dense(
+            ks[2], (feat * feat * cfg.c2_kernels,), (cfg.num_classes,), dtype, use_bias=True
+        ),
+    }
+
+
+def cnn_axes():
+    return {
+        "conv1": conv_axes(),
+        "conv2": conv_axes(),
+        "fc": dense_axes((None,), (None,), use_bias=True),
+    }
+
+
+def cnn_forward(params, images: jax.Array, *, cfg: CNNConfig,
+                conv_fn=apply_conv) -> jax.Array:
+    """images: (B, 32, 32, 3) NHWC -> logits (B, 10).
+
+    ``conv_fn`` is injectable so the distributed variants
+    (core/conv_shard.py, core/master_slave.py) and the Pallas kernel can
+    replace only the convolution, exactly as the paper replaces only the
+    convolution step.
+    """
+    x = conv_fn(params["conv1"], images)
+    x = jax.nn.relu(x)
+    x = local_response_norm(x)
+    x = max_pool(x, cfg.pool_stride, cfg.pool_stride)
+    x = conv_fn(params["conv2"], x)
+    x = jax.nn.relu(x)
+    x = local_response_norm(x)
+    x = max_pool(x, cfg.pool_stride, cfg.pool_stride)
+    x = x.reshape(x.shape[0], -1)
+    return apply_dense(params["fc"], x)
+
+
+def cnn_loss(params, images: jax.Array, labels: jax.Array, *, cfg: CNNConfig,
+             conv_fn=apply_conv) -> Tuple[jax.Array, jax.Array]:
+    logits = cnn_forward(params, images, cfg=cfg, conv_fn=conv_fn)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, acc

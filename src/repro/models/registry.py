@@ -1,0 +1,104 @@
+"""Model registry: a uniform ``ModelApi`` over every architecture family.
+
+``build_model(cfg)`` returns closures for init / forward / prefill /
+decode plus the logical-axis trees the launcher needs to shard params and
+caches.  The encoder-decoder family (whisper) has its own implementation;
+all decoder-only families (dense, moe, ssm, hybrid, vlm) share
+``models/transformer.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tf_lib
+from repro.sharding.axes import (
+    AxisRules,
+    LOGICAL_RULES_FSDP,
+    LOGICAL_RULES_GATHER,
+    LOGICAL_RULES_MEGATRON,
+    LOGICAL_RULES_ZERO1,
+)
+
+
+def rules_for_mode(tp_mode: str) -> AxisRules:
+    if tp_mode == "gather":
+        return LOGICAL_RULES_GATHER
+    if tp_mode == "megatron":
+        return LOGICAL_RULES_MEGATRON
+    if tp_mode == "fsdp":
+        return LOGICAL_RULES_FSDP
+    if tp_mode == "zero1":
+        return LOGICAL_RULES_ZERO1
+    raise ValueError(f"unknown tp_mode {tp_mode!r}")
+
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    param_axes: Callable[[], Any]
+    # forward(params, batch, *, rules, mesh, remat) -> (logits, aux)
+    forward: Callable[..., Any]
+    # prefill(params, batch, *, rules, mesh, remat, cache_len) -> (logits, cache)
+    prefill: Callable[..., Any]
+    # decode_step(params, cache, tokens, *, rules, mesh) -> (logits, cache)
+    decode_step: Callable[..., Any]
+    init_cache: Callable[..., Any]
+    cache_axes: Callable[[], Any]
+
+
+def _lm_batch_forward(params, batch, *, cfg, rules, mesh=None, remat="none"):
+    return tf_lib.lm_forward(
+        params,
+        batch["tokens"],
+        cfg=cfg,
+        rules=rules,
+        mesh=mesh,
+        patches=batch.get("patches"),
+        remat=remat,
+    )
+
+
+def _lm_batch_prefill(params, batch, *, cfg, rules, mesh=None, remat="none",
+                      cache_len=None):
+    return tf_lib.lm_prefill(
+        params,
+        batch["tokens"],
+        cfg=cfg,
+        rules=rules,
+        mesh=mesh,
+        patches=batch.get("patches"),
+        remat=remat,
+        cache_len=cache_len,
+    )
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.num_encoder_layers > 0:
+        return ModelApi(
+            cfg=cfg,
+            init=functools.partial(encdec_lib.init_encdec, cfg=cfg),
+            param_axes=functools.partial(encdec_lib.encdec_axes, cfg),
+            forward=functools.partial(encdec_lib.encdec_forward, cfg=cfg),
+            prefill=functools.partial(encdec_lib.encdec_prefill, cfg=cfg),
+            decode_step=functools.partial(encdec_lib.encdec_decode_step, cfg=cfg),
+            init_cache=functools.partial(encdec_lib.init_encdec_cache, cfg),
+            cache_axes=encdec_lib.encdec_cache_axes,
+        )
+    return ModelApi(
+        cfg=cfg,
+        init=functools.partial(tf_lib.init_lm, cfg=cfg),
+        param_axes=functools.partial(tf_lib.lm_axes, cfg),
+        forward=functools.partial(_lm_batch_forward, cfg=cfg),
+        prefill=functools.partial(_lm_batch_prefill, cfg=cfg),
+        decode_step=functools.partial(tf_lib.lm_decode_step, cfg=cfg),
+        init_cache=functools.partial(tf_lib.init_cache, cfg),
+        cache_axes=functools.partial(tf_lib.cache_axes, cfg),
+    )

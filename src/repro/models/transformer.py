@@ -1,0 +1,535 @@
+"""Decoder-only transformer with scan-over-layers, covering the dense /
+moe / ssm / hybrid / vlm families of the assigned architecture pool.
+
+Layer params are stacked on a leading ``layers`` dim and consumed with
+``lax.scan`` (compile time stays flat in depth — required for the
+94-layer qwen3 MoE dry-run).  Each block family maps the paper's
+"distribute the compute-dominant kernels, gather the outputs" scheme onto
+its own hot spot: attention/MLP feature shards (dense), expert shards
+(moe), SSD head shards (ssm/hybrid) — see sharding/axes.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.unroll import scan_unroll_amount
+from repro.layers import attention as attn_lib
+from repro.layers import mamba2 as mamba_lib
+from repro.layers import moe as moe_lib
+from repro.layers.embedding import (
+    embed_tokens,
+    embedding_axes,
+    init_embedding,
+    logits_from_embedding,
+)
+from repro.layers.linear import apply_dense, dense_axes, init_dense
+from repro.layers.mlp import apply_mlp, init_mlp, mlp_axes
+from repro.layers.norm import apply_norm, init_norm, norm_axes
+from repro.sharding.axes import AxisRules
+from repro.sharding.partitioning import constrain
+
+
+def _has_attn(cfg: ModelConfig) -> bool:
+    return cfg.family != "ssm"
+
+
+def _has_mamba(cfg: ModelConfig) -> bool:
+    return cfg.family in ("ssm", "hybrid")
+
+
+def _has_moe(cfg: ModelConfig) -> bool:
+    return cfg.moe is not None
+
+
+def _has_mlp(cfg: ModelConfig) -> bool:
+    return cfg.family != "ssm" and not _has_moe(cfg)
+
+
+# ---------------------------------------------------------------------------
+# single block
+
+
+def init_block(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"ln1": init_norm(cfg.norm, cfg.d_model, dtype)}
+    if _has_attn(cfg):
+        p["attn"] = attn_lib.init_attention(ks[0], cfg, dtype)
+    if _has_mamba(cfg):
+        p["mamba"] = mamba_lib.init_mamba2(ks[1], cfg, dtype)
+    if _has_moe(cfg):
+        p["ln2"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        p["moe"] = moe_lib.init_moe(ks[2], cfg.d_model, cfg.moe, dtype)
+    elif _has_mlp(cfg):
+        p["ln2"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, dtype, gated=cfg.gated_mlp)
+    return p
+
+
+def block_axes(cfg: ModelConfig):
+    ax: Dict[str, Any] = {"ln1": norm_axes(cfg.norm)}
+    if _has_attn(cfg):
+        ax["attn"] = attn_lib.attention_axes(cfg)
+    if _has_mamba(cfg):
+        ax["mamba"] = mamba_lib.mamba2_axes()
+    if _has_moe(cfg):
+        ax["ln2"] = norm_axes(cfg.norm)
+        ax["moe"] = moe_lib.moe_axes()
+    elif _has_mlp(cfg):
+        ax["ln2"] = norm_axes(cfg.norm)
+        ax["mlp"] = mlp_axes(gated=cfg.gated_mlp)
+    return ax
+
+
+def apply_block(
+    params,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    rules: AxisRules,
+    positions: jax.Array,
+    mesh=None,
+    token_axes=(),
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence block.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg.norm, params["ln1"], x, cfg.norm_eps)
+    mix = None
+    if _has_attn(cfg):
+        mix = attn_lib.apply_attention(
+            params["attn"], h, cfg=cfg, rules=rules, positions=positions
+        )
+    if _has_mamba(cfg):
+        m = mamba_lib.apply_mamba2(params["mamba"], h, cfg=cfg, rules=rules)
+        # hymba: parallel attention + mamba heads, fused by averaging
+        mix = m if mix is None else 0.5 * (mix + m)
+    x = x + mix
+    x = constrain(x, rules, "batch", "act_seq", "act_embed")
+    if "ln2" in params:
+        h = apply_norm(cfg.norm, params["ln2"], x, cfg.norm_eps)
+        if _has_moe(cfg):
+            y, a = moe_lib.apply_moe(
+                params["moe"], h, cfg=cfg, mesh=mesh, token_axes=token_axes
+            )
+            aux = aux + a
+        else:
+            y = apply_mlp(params["mlp"], h, cfg=cfg, rules=rules)
+        x = x + y
+        x = constrain(x, rules, "batch", "act_seq", "act_embed")
+    return x, aux
+
+
+def decode_block(
+    params,
+    x: jax.Array,
+    layer_cache: Dict[str, jax.Array],
+    *,
+    cfg: ModelConfig,
+    rules: AxisRules,
+    cache_pos: Optional[jax.Array],
+    index,
+    position,
+    mesh=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array], Optional[jax.Array]]:
+    """One-token decode.  ``layer_cache`` holds this layer's slices.
+    Returns (x, new_layer_cache, new_cache_pos)."""
+    new_cache: Dict[str, jax.Array] = {}
+    new_pos = cache_pos
+    h = apply_norm(cfg.norm, params["ln1"], x, cfg.norm_eps)
+    mix = None
+    if _has_attn(cfg):
+        a_out, nk, nv, new_pos = attn_lib.decode_attention(
+            params["attn"], h, cfg=cfg, rules=rules,
+            cache_k=layer_cache["k"], cache_v=layer_cache["v"],
+            cache_pos=cache_pos, index=index, position=position,
+        )
+        new_cache["k"], new_cache["v"] = nk, nv
+        mix = a_out
+    if _has_mamba(cfg):
+        m_out, new_state = mamba_lib.decode_mamba2(
+            params["mamba"],
+            h,
+            {"conv": layer_cache["conv"], "ssm": layer_cache["ssm"]},
+            cfg=cfg,
+            rules=rules,
+        )
+        new_cache["conv"], new_cache["ssm"] = new_state["conv"], new_state["ssm"]
+        mix = m_out if mix is None else 0.5 * (mix + m_out)
+    x = x + mix
+    if "ln2" in params:
+        h = apply_norm(cfg.norm, params["ln2"], x, cfg.norm_eps)
+        if _has_moe(cfg):
+            y, _ = moe_lib.apply_moe(params["moe"], h, cfg=cfg, mesh=mesh)
+        else:
+            y = apply_mlp(params["mlp"], h, cfg=cfg, rules=rules)
+        x = x + y
+    return x, new_cache, new_pos
+
+
+# ---------------------------------------------------------------------------
+# full model
+
+
+def init_lm(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4 + cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg, dtype))(
+        jnp.stack(ks[4 : 4 + cfg.num_layers])
+    )
+    p = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "ln_f": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_dense(ks[1], (cfg.d_model,), (cfg.vocab_size,), dtype)
+    if cfg.vision is not None:
+        v = cfg.vision
+        p["projector"] = {
+            "fc1": init_dense(ks[2], (v.vision_dim,), (v.projector_hidden,), dtype, use_bias=True),
+            "fc2": init_dense(ks[3], (v.projector_hidden,), (cfg.d_model,), dtype, use_bias=True),
+        }
+    return p
+
+
+def lm_axes(cfg: ModelConfig):
+    blk = jax.tree.map(
+        lambda ax: ("layers",) + tuple(ax),
+        block_axes(cfg),
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    ax = {
+        "embed": embedding_axes(),
+        "blocks": blk,
+        "ln_f": norm_axes(cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        ax["lm_head"] = dense_axes(("fsdp_embed",), ("vocab",))
+    if cfg.vision is not None:
+        ax["projector"] = {
+            "fc1": dense_axes(("fsdp_embed",), ("mlp",), use_bias=True),
+            "fc2": dense_axes(("mlp_in",), ("fsdp_embed",), use_bias=True),
+        }
+    return ax
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, patches, dtype):
+    x = embed_tokens(params["embed"], tokens, dtype)
+    if cfg.vision is not None and patches is not None:
+        proj = jax.nn.gelu(
+            apply_dense(params["projector"]["fc1"], patches.astype(dtype), dtype=dtype)
+        )
+        proj = apply_dense(params["projector"]["fc2"], proj, dtype=dtype)
+        n_img = proj.shape[1]
+        # patch embeddings occupy the first n_img positions (anyres tiles
+        # flattened by the stub frontend)
+        x = jnp.concatenate([proj, x[:, n_img:]], axis=1)
+    return x
+
+
+def _scan_blocks(params_blocks, x, body, remat: str, num_layers: int = 0):
+    def f(carry, layer_params):
+        xc, aux = carry
+        y, a = body(layer_params, xc)
+        return (y, aux + a), None
+
+    if remat == "full":
+        f = jax.checkpoint(f, prevent_cse=False)
+    elif remat == "dots":
+        f = jax.checkpoint(
+            f,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            prevent_cse=False,
+        )
+    (x, aux), _ = jax.lax.scan(
+        f, (x, jnp.zeros((), jnp.float32)), params_blocks,
+        unroll=scan_unroll_amount(num_layers) if num_layers else 1,
+    )
+    return x, aux
+
+
+def lm_forward(
+    params,
+    tokens: jax.Array,
+    *,
+    cfg: ModelConfig,
+    rules: AxisRules,
+    mesh=None,
+    patches: Optional[jax.Array] = None,
+    remat: str = "none",
+    positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Train / prefill forward over a full sequence.  Returns (logits, aux)."""
+    dtype = cfg.compute_dtype
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    token_axes = tuple(a for a in ("pod", "data") if mesh is None or a in mesh.axis_names)
+    x = _embed_inputs(params, cfg, tokens, patches, dtype)
+    x = constrain(x, rules, "batch", "act_seq", "act_embed")
+
+    body = functools.partial(
+        apply_block,
+        cfg=cfg,
+        rules=rules,
+        positions=positions,
+        mesh=mesh,
+        token_axes=token_axes,
+    )
+    x, aux = _scan_blocks(
+        params["blocks"], x, lambda lp, xc: body(lp, xc), remat, cfg.num_layers
+    )
+
+    x = apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = logits_from_embedding(params["embed"], x, dtype)
+    else:
+        logits = apply_dense(params["lm_head"], x, dtype=dtype)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    logits = constrain(logits, rules, "batch", "act_seq", "vocab")
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+
+
+def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    """Decode cache sized for a ``seq_len`` context.  Sliding-window and
+    SSM archs keep O(window)/O(1) state — this is what makes long_500k
+    feasible (see DESIGN.md long_500k policy)."""
+    dtype = dtype or cfg.compute_dtype
+    cache: Dict[str, Any] = {"t": jnp.zeros((), jnp.int32)}
+    l = cfg.num_layers
+    if _has_attn(cfg):
+        c = cache_len_for(cfg, seq_len)
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        cache["k"] = jnp.zeros((l, batch, c, kv, hd), dtype)
+        cache["v"] = jnp.zeros((l, batch, c, kv, hd), dtype)
+        cache["pos"] = jnp.full((batch, c), -1, jnp.int32)
+    if _has_mamba(cfg):
+        st = mamba_lib.init_mamba2_state(cfg, batch, dtype)
+        cache["conv"] = jnp.broadcast_to(st["conv"][None], (l,) + st["conv"].shape)
+        cache["ssm"] = jnp.broadcast_to(st["ssm"][None], (l,) + st["ssm"].shape)
+    return cache
+
+
+def cache_axes(cfg: ModelConfig):
+    ax: Dict[str, Any] = {"t": None}
+    if _has_attn(cfg):
+        # slot dim sharded over `model` (cache_seq): kv_heads rarely
+        # divide the 16-way axis, and the slot dim always does — SS Perf
+        # iteration D (qwen3 decode cache 170G -> /16 per device)
+        ax["k"] = ("layers", "batch", "cache_seq", "kv_heads", None)
+        ax["v"] = ("layers", "batch", "cache_seq", "kv_heads", None)
+        ax["pos"] = ("batch", "cache_seq")
+    if _has_mamba(cfg):
+        ax["conv"] = ("layers", "batch", None, "ssm_inner")
+        ax["ssm"] = ("layers", "batch", "ssm_heads", None, None)
+    return ax
+
+
+def _split_cache(cache):
+    """Separate stacked per-layer entries from shared ones."""
+    layer_keys = [k for k in ("k", "v", "conv", "ssm") if k in cache]
+    per_layer = {k: cache[k] for k in layer_keys}
+    return per_layer
+
+
+def lm_decode_step(
+    params,
+    cache,
+    tokens: jax.Array,
+    *,
+    cfg: ModelConfig,
+    rules: AxisRules,
+    mesh=None,
+) -> Tuple[jax.Array, Any]:
+    """One decode step: tokens (B, 1) -> (logits (B, vocab), new cache)."""
+    dtype = cfg.compute_dtype
+    position = cache["t"]
+    x = embed_tokens(params["embed"], tokens, dtype)
+    x = constrain(x, rules, "batch", None, "act_embed")
+
+    per_layer = _split_cache(cache)
+    cache_pos = cache.get("pos")
+    if _has_attn(cfg):
+        c = cache["k"].shape[2]
+        index = jax.lax.rem(position, c)
+    else:
+        index = jnp.zeros((), jnp.int32)
+
+    def f(xc, xs):
+        lp, lc = xs
+        y, new_lc, _ = decode_block(
+            lp, xc, lc, cfg=cfg, rules=rules, cache_pos=cache_pos,
+            index=index, position=position, mesh=mesh,
+        )
+        return y, new_lc
+
+    x, new_per_layer = jax.lax.scan(
+        f, x, (params["blocks"], per_layer),
+        unroll=scan_unroll_amount(cfg.num_layers),
+    )
+
+    new_cache = dict(cache)
+    new_cache.update(new_per_layer)
+    new_cache["t"] = position + 1
+    if cache_pos is not None:
+        pos_arr = jnp.full((tokens.shape[0], 1), position, jnp.int32)
+        new_cache["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache_pos, pos_arr, index, axis=1
+        )
+
+    x = apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = logits_from_embedding(params["embed"], x, dtype)
+    else:
+        logits = apply_dense(params["lm_head"], x, dtype=dtype)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    logits = constrain(logits, rules, "batch", None, "vocab")
+    return logits[:, 0], new_cache
+
+
+def lm_prefill(
+    params,
+    tokens: jax.Array,
+    *,
+    cfg: ModelConfig,
+    rules: AxisRules,
+    mesh=None,
+    patches: Optional[jax.Array] = None,
+    remat: str = "none",
+    cache_len: Optional[int] = None,
+) -> Tuple[jax.Array, Any]:
+    """Prefill: full forward + build the decode cache.  Returns
+    (last-token logits (B, vocab), cache).  ``cache_len`` >= s leaves
+    headroom for subsequent decode steps (defaults to s)."""
+    dtype = cfg.compute_dtype
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    token_axes = tuple(a for a in ("pod", "data") if mesh is None or a in mesh.axis_names)
+    x = _embed_inputs(params, cfg, tokens, patches, dtype)
+    x = constrain(x, rules, "batch", "act_seq", "act_embed")
+
+    cache = init_cache(cfg, b, cache_len, cfg.compute_dtype)
+    c = cache["k"].shape[2] if "k" in cache else 0
+    n_fill = min(c, s)
+
+    def body(lp, xc):
+        """Block body that additionally emits this layer's cache slices."""
+        emitted = {}
+        h = apply_norm(cfg.norm, lp["ln1"], xc, cfg.norm_eps)
+        mix = None
+        aux = jnp.zeros((), jnp.float32)
+        if _has_attn(cfg):
+            # compute k/v once, reuse for both attention and the cache
+            k = apply_dense(lp["attn"]["wk"], h, dtype=dtype)
+            v = apply_dense(lp["attn"]["wv"], h, dtype=dtype)
+            q = apply_dense(lp["attn"]["wq"], h, dtype=dtype)
+            q = constrain(q, rules, "batch", None, "act_heads", None)
+            k = constrain(k, rules, "batch", None, "act_heads", None)
+            v = constrain(v, rules, "batch", None, "act_heads", None)
+            from repro.layers.embedding import apply_rope
+
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            out = attn_lib.attend(
+                q, k, v, positions, positions, causal=True, window=cfg.sliding_window
+            )
+            mix = apply_dense(lp["attn"]["wo"], out, n_in_dims=2, dtype=dtype)
+            # cache the last n_fill tokens at slot = pos % c (ring layout)
+            slots = jnp.arange(s - n_fill, s, dtype=jnp.int32) % c
+            ck = jnp.zeros((b, c) + k.shape[2:], k.dtype).at[:, slots].set(k[:, s - n_fill :])
+            cv = jnp.zeros((b, c) + v.shape[2:], v.dtype).at[:, slots].set(v[:, s - n_fill :])
+            emitted["k"], emitted["v"] = ck, cv
+        if _has_mamba(cfg):
+            m, final_state = _mamba_prefill(lp["mamba"], h, cfg=cfg, rules=rules)
+            emitted["conv"] = final_state["conv"]
+            emitted["ssm"] = final_state["ssm"]
+            mix = m if mix is None else 0.5 * (mix + m)
+        xc = xc + mix
+        if "ln2" in lp:
+            h2 = apply_norm(cfg.norm, lp["ln2"], xc, cfg.norm_eps)
+            if _has_moe(cfg):
+                y, a = moe_lib.apply_moe(
+                    lp["moe"], h2, cfg=cfg, mesh=mesh, token_axes=token_axes
+                )
+                aux = aux + a
+            else:
+                y = apply_mlp(lp["mlp"], h2, cfg=cfg, rules=rules)
+            xc = xc + y
+        xc = constrain(xc, rules, "batch", "act_seq", "act_embed")
+        return xc, emitted, aux
+
+    def f(carry, lp):
+        xc = carry
+        y, emitted, _ = body(lp, xc)
+        return y, emitted
+
+    if remat in ("full", "dots"):
+        f = jax.checkpoint(f, prevent_cse=False)
+    x, emitted = jax.lax.scan(
+        f, x, params["blocks"], unroll=scan_unroll_amount(cfg.num_layers)
+    )
+
+    for k in emitted:
+        cache[k] = emitted[k]
+    cache["t"] = jnp.array(s, jnp.int32)
+    if "pos" in cache:
+        slots = jnp.arange(s - n_fill, s, dtype=jnp.int32) % c
+        vals = jnp.broadcast_to(jnp.arange(s - n_fill, s, dtype=jnp.int32)[None], (b, n_fill))
+        cache["pos"] = jnp.full((b, c), -1, jnp.int32).at[:, slots].set(vals)
+
+    x = apply_norm(cfg.norm, params["ln_f"], x[:, -1:], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = logits_from_embedding(params["embed"], x, dtype)
+    else:
+        logits = apply_dense(params["lm_head"], x, dtype=dtype)
+    logits = constrain(logits, rules, "batch", None, "vocab")
+    return logits[:, 0], cache
+
+
+def _mamba_prefill(params, h, *, cfg, rules):
+    """Mamba2 forward that also returns the final recurrent state."""
+    ssm, d_in, nh, hd, n, g = mamba_lib._dims(cfg)
+    dtype = cfg.compute_dtype
+    bsz, s, _ = h.shape
+    zxbcdt = h.astype(dtype) @ params["in_proj"]["kernel"].astype(dtype)
+    z, xi, bmat, cmat, dt = mamba_lib._split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xi, bmat, cmat], axis=-1)
+    conv_state = conv_in[:, -(ssm.d_conv - 1) :, :]
+    conv_out = jax.nn.silu(
+        mamba_lib._depthwise_conv(
+            conv_in, params["conv_w"].astype(dtype), params["conv_b"].astype(dtype)
+        )
+    )
+    xi, bmat, cmat = jnp.split(conv_out, [d_in, d_in + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    a = -jnp.exp(params["a_log"])
+    xh = xi.reshape(bsz, s, nh, hd).astype(jnp.float32)
+    xh = constrain(xh, rules, "batch", None, "ssm_heads", None)
+    bg = bmat.reshape(bsz, s, g, n).astype(jnp.float32)
+    cg = cmat.reshape(bsz, s, g, n).astype(jnp.float32)
+    y, final = mamba_lib._ssd_chunked(xh, dt, a, bg, cg, ssm.chunk_size)
+    y = y + xh * params["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, d_in).astype(dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(dtype)
+    y = y * params["norm_scale"].astype(dtype)[None, None, :]
+    out = y @ params["out_proj"]["kernel"].astype(dtype)
+    return out, {"conv": conv_state, "ssm": final}

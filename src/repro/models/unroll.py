@@ -1,0 +1,31 @@
+"""Scan-unroll context for the dry-run.
+
+XLA's ``cost_analysis()`` counts a ``while`` body ONCE, not times its
+trip count, so a scanned-over-layers model under-reports FLOPs and
+collective bytes by ~num_layers.  The dry-run therefore lowers with the
+layer scans fully unrolled (trace-time switch); training/serving keep the
+rolled scan (fast compiles, the production layout).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_UNROLL = contextvars.ContextVar("repro_scan_unroll", default=False)
+
+
+def scan_unroll_enabled() -> bool:
+    return _UNROLL.get()
+
+
+def scan_unroll_amount(num_layers: int) -> int:
+    return num_layers if _UNROLL.get() else 1
+
+
+@contextlib.contextmanager
+def scan_unroll(enabled: bool = True):
+    token = _UNROLL.set(enabled)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(token)

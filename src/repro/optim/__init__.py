@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (  # noqa: F401
+    adafactor,
+    adam,
+    make_optimizer,
+    sgd,
+)
+from repro.optim.schedule import make_schedule  # noqa: F401

@@ -1,0 +1,212 @@
+"""Optimizers: SGD (+momentum), Adam(W), and Adafactor.
+
+Small optax-like interface (init/update as pure functions over pytrees)
+implemented here because the container ships no optax.  Adafactor keeps
+the factored second moment (row/col running means) so the 340B config's
+optimizer state stays O(params/min_dim) — the substrate decision that
+makes nemotron-4-340b trainable on the 16 GB/chip mesh (DESIGN.md §4).
+
+Optimizer states are pytrees mirroring the params, so the launcher shards
+them with the same logical-axis rules as the parameters (FSDP included).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+
+
+def _tree_zeros_like(params, dtype=jnp.float32):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+
+
+def sgd(momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"mu": _tree_zeros_like(params)}
+        return {}
+
+    def update(grads, state, params, lr):
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads
+            )
+            step_dir = mu
+            new_state = {"mu": mu}
+        else:
+            step_dir = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            new_state = {}
+        new_params = jax.tree.map(
+            lambda p, d: (
+                p.astype(jnp.float32) - lr * (d + weight_decay * p.astype(jnp.float32))
+            ).astype(p.dtype),
+            params,
+            step_dir,
+        )
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def adam(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        return {
+            "mu": _tree_zeros_like(params),
+            "nu": _tree_zeros_like(params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["mu"], grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"],
+            grads,
+        )
+        mu_hat_scale = 1.0 / (1 - b1 ** c)
+        nu_hat_scale = 1.0 / (1 - b2 ** c)
+
+        def step(p, m, v):
+            upd = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)
+            return (
+                p.astype(jnp.float32) - lr * (upd + weight_decay * p.astype(jnp.float32))
+            ).astype(p.dtype)
+
+        new_params = jax.tree.map(step, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def adafactor(
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    min_dim_size_to_factor: int = 128,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Adafactor (Shazeer & Stern, 2018) without first moment: the memory
+    regime for the 340B config (factored second moments only)."""
+
+    def _factored(shape) -> bool:
+        return (
+            len(shape) >= 2
+            and shape[-1] >= min_dim_size_to_factor
+            and shape[-2] >= min_dim_size_to_factor
+        )
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # row
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "v": jax.tree.map(one, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        beta = 1.0 - (count.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def one(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in v:
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                r_factor = jax.lax.rsqrt(
+                    vr / jnp.mean(vr, axis=-1, keepdims=True) + eps
+                )
+                c_factor = jax.lax.rsqrt(vc + eps)
+                upd = g * r_factor[..., None] * c_factor[..., None, :]
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vv = beta * v["v"] + (1 - beta) * g2
+                upd = g * jax.lax.rsqrt(vv + eps)
+                new_v = {"v": vv}
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = (
+                p.astype(jnp.float32) - lr * (upd + weight_decay * p.astype(jnp.float32))
+            ).astype(p.dtype)
+            return new_p, new_v
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        outs = [one(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_v = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return new_params, {"v": new_v, "count": count}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, *, weight_decay: float = 0.0) -> Optimizer:
+    if name == "sgd":
+        return sgd(weight_decay=weight_decay)
+    if name == "adam":
+        return adam(weight_decay=weight_decay)
+    if name == "adafactor":
+        return adafactor(weight_decay=weight_decay)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def optimizer_state_axes(name: str, param_axes, param_shapes) -> Any:
+    """Logical axes for the optimizer state, mirroring the param axes so
+    FSDP/TP sharding carries over to the moments — except the params'
+    ``fsdp_embed`` axis becomes ``opt_embed`` so ZeRO-1 can shard the
+    moments while replicating the params.  ``param_shapes`` is a matching
+    pytree of arrays/ShapeDtypeStructs (needed to decide which adafactor
+    leaves are factored)."""
+    is_leaf = lambda x: isinstance(x, tuple) or x is None
+
+    def _opt(axes):
+        if axes is None:
+            return None
+        return tuple("opt_embed" if a == "fsdp_embed" else a for a in axes)
+
+    param_axes = jax.tree.map(_opt, param_axes, is_leaf=is_leaf)
+    if name == "sgd":
+        return {"mu": param_axes}
+    if name == "adam":
+        return {"mu": param_axes, "nu": param_axes, "count": None}
+    if name == "adafactor":
+        def _factored(shape) -> bool:
+            return len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128
+
+        def one(axes, p):
+            axes = tuple(axes) if axes is not None else (None,) * len(p.shape)
+            if _factored(p.shape):
+                return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+            return {"v": axes}
+
+        return {
+            "v": jax.tree.map(one, param_axes, param_shapes, is_leaf=is_leaf),
+            "count": None,
+        }
+    raise ValueError(name)

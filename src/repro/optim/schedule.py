@@ -1,0 +1,57 @@
+"""Learning-rate schedules: constant, cosine, and WSD.
+
+WSD (warmup-stable-decay) is minicpm's schedule (arXiv:2404.06395): linear
+warmup, a long stable plateau, then a short exponential-ish decay tail —
+implemented with the paper's 10% decay window and linear-in-log decay.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def make_schedule(
+    kind: str,
+    *,
+    learning_rate: float,
+    warmup_steps: int,
+    total_steps: int,
+    final_fraction: float = 0.1,
+    wsd_decay_fraction: float = 0.1,
+) -> Callable:
+    """Returns step -> lr (works on traced int32 steps)."""
+
+    def warmup(step):
+        return jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+
+    if kind == "constant":
+        def f(step):
+            return learning_rate * warmup(step)
+        return f
+
+    if kind == "cosine":
+        def f(step):
+            t = jnp.clip(
+                (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+            )
+            cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+            scale = final_fraction + (1 - final_fraction) * cos
+            return learning_rate * warmup(step) * scale
+        return f
+
+    if kind == "wsd":
+        decay_steps = max(int(total_steps * wsd_decay_fraction), 1)
+        decay_start = total_steps - decay_steps
+
+        def f(step):
+            in_decay = (step - decay_start) / decay_steps
+            decay = jnp.where(
+                step < decay_start,
+                1.0,
+                final_fraction ** jnp.clip(in_decay, 0.0, 1.0),
+            )
+            return learning_rate * warmup(step) * decay
+        return f
+
+    raise ValueError(f"unknown schedule {kind!r}")

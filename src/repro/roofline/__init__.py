@@ -1,0 +1,7 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HW,
+    RooflineReport,
+    analyze_compiled,
+    model_flops,
+    parse_collective_bytes,
+)

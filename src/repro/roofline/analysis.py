@@ -1,0 +1,246 @@
+"""Three-term roofline analysis from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs   / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes   / (chips x HBM_bw)
+    collective term = coll_bytes  / (chips x link_bw)
+
+``cost_analysis()`` yields per-device FLOPs/bytes of the post-SPMD module
+(global = per-device x chips, so the division by chips cancels — both
+views are reported).  Collective bytes are NOT in cost_analysis: we parse
+the post-SPMD HLO text and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, weighted
+by the op's ring-traffic factor.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class HWSpec:
+    peak_flops: float = 197e12   # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9        # bytes/s per chip
+    ici_bw: float = 50e9         # bytes/s per link
+
+
+HW = HWSpec()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# Ring traffic per device ~ (n-1)/n x payload ~ payload for large rings.
+# Payload source per op: the *larger* side of the transfer —
+#   all-gather: the gathered RESULT; reduce-scatter/all-to-all/permute:
+#   the full OPERAND; all-reduce: 2 x operand (RS + AG phases).
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+([a-z0-9\[\],{}() ]*?)\s*(all-gather|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute)(-start|-done)?\(([^)]*)\)",
+)
+
+
+def _shape_bytes(txt: str) -> int:
+    """Sum byte sizes of every dtype[shape] group in ``txt`` (handles
+    tuple-shaped results of variadic collectives)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(txt):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """Per-device collective traffic (bytes) from post-SPMD HLO text.
+    Returns (total, breakdown by op kind)."""
+    by_kind: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind, suffix = m.group(2), m.group(3)
+        if suffix == "-done":  # async pair: count only the -start
+            continue
+        result_txt, operand_txt = m.group(1), m.group(4)
+        if kind == "all-gather":
+            payload = _shape_bytes(result_txt)
+            if suffix == "-start":
+                # -start result is the (operand, output) tuple
+                payload -= _shape_bytes(operand_txt)
+        elif kind == "all-reduce":
+            payload = 2 * _shape_bytes(operand_txt)
+        else:
+            payload = _shape_bytes(operand_txt)
+        by_kind[kind] += payload
+    return sum(by_kind.values()), by_kind
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch_id: str
+    shape: str
+    mesh: str
+    tp_mode: str
+    chips: int
+    # per-device quantities from the compiled module
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, float]
+    # three terms in seconds
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    # "useful compute" accounting
+    model_flops: float = 0.0
+    bytes_per_device_peak: float = 0.0  # from memory_analysis (HBM footprint)
+
+    def __post_init__(self):
+        self.compute_s = self.flops_per_device / HW.peak_flops
+        self.memory_s = self.bytes_per_device / HW.hbm_bw
+        self.collective_s = self.collective_bytes_per_device / HW.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs — catches remat/redundant
+        compute (gather-mode replication shows up here)."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        """MODEL_FLOPS / (chips x peak x bound_s): the MFU this config
+        could at best reach if the dominant term were perfectly hidden."""
+        denom = self.chips * HW.peak_flops * self.bound_s
+        return self.model_flops / denom if denom else 0.0
+
+    def row(self) -> str:
+        return (
+            f"{self.arch_id:24s} {self.shape:12s} {self.mesh:9s} {self.tp_mode:8s} "
+            f"C={self.compute_s:9.3e} M={self.memory_s:9.3e} "
+            f"X={self.collective_s:9.3e} dom={self.dominant:10s} "
+            f"useful={self.useful_flops_ratio:6.1%} mfu<={self.mfu_upper_bound:6.1%}"
+        )
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(
+            compute_s=self.compute_s, memory_s=self.memory_s,
+            collective_s=self.collective_s, dominant=self.dominant,
+            useful_flops_ratio=self.useful_flops_ratio,
+            mfu_upper_bound=self.mfu_upper_bound,
+        )
+        return d
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Parameter count touched per token (MoE: top-k experts only)."""
+    import jax
+
+    from repro.models.registry import build_model
+
+    api = build_model(cfg)
+    abstract = jax.eval_shape(lambda: api.init(jax.random.key(0)))
+    flat = jax.tree_util.tree_flatten_with_path(abstract)[0]
+    total = 0.0
+    for path, leaf in flat:
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        size = float(np.prod(leaf.shape))
+        if cfg.moe is not None and any("moe" == k for k in keys) and any(
+            k in ("w_in", "w_gate", "w_out") for k in keys
+        ):
+            size *= cfg.moe.experts_per_token / cfg.moe.num_experts
+        total += size
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """The 6·N·D / 2·N·D "useful model FLOPs" yardstick (N = active
+    params, D = tokens processed).  train: fwd+bwd = 6·N·D; prefill:
+    2·N·D; decode: 2·N·B (one token per sequence)."""
+    n = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        if cfg.audio is not None:
+            d += shape.global_batch * cfg.audio.num_frames
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch  # decode: one new token
+
+
+def analyze_compiled(
+    compiled,
+    *,
+    cfg: ModelConfig,
+    shape: InputShape,
+    mesh_name: str,
+    tp_mode: str,
+    chips: int,
+    hlo_text: Optional[str] = None,
+) -> RooflineReport:
+    from repro.roofline.hlo_parse import analyze_hlo
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    hc = analyze_hlo(text, num_partitions=chips)
+    flops = hc.flops
+    byts = hc.memory_bytes
+    coll, breakdown = hc.collective_bytes, dict(hc.by_kind)
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)
+        )
+    except Exception:
+        peak = 0.0
+    return RooflineReport(
+        arch_id=cfg.arch_id,
+        shape=shape.name,
+        mesh=mesh_name,
+        tp_mode=tp_mode,
+        chips=chips,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=coll,
+        collective_breakdown=breakdown,
+        model_flops=model_flops(cfg, shape),
+        bytes_per_device_peak=peak,
+    )

@@ -1,0 +1,90 @@
+"""Aggregate dry-run JSONL records into the EXPERIMENTS.md tables."""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+
+def load(path: str) -> List[dict]:
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x >= 0.01:
+        return f"{x:.2f}"
+    return f"{x:.1e}"
+
+
+def markdown_table(recs: List[dict]) -> str:
+    header = (
+        "| arch | shape | C (s) | M (s) | X (s) | dominant | useful | "
+        "mfu<= | HBM/dev | note |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    rows = []
+    for r in recs:
+        hbm = r["hbm_bytes_per_device"] / 2 ** 30
+        fits = "" if hbm <= 16 else "**>16G**"
+        rows.append(
+            f"| {r['arch_id']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.1%} | "
+            f"{r['mfu_upper_bound']:.1%} | {hbm:.1f}G | {fits} |"
+        )
+    return header + "\n".join(rows) + "\n"
+
+
+def one_liner_per_pair(recs: List[dict]) -> str:
+    """The required 'what would move the dominant term down' sentence."""
+    out = []
+    for r in recs:
+        dom = r["dominant"]
+        if dom == "collective":
+            kinds = r["collective_breakdown"]
+            top = max(kinds, key=kinds.get)
+            hint = {
+                "all-gather": "keep activations sharded through the tail "
+                "(megatron pairing) or reduce TP degree for this size",
+                "all-reduce": "replace the gather+replicated-tail with a "
+                "row-parallel reduce-scatter, or fold model into the data axis",
+                "reduce-scatter": "already paired; next lever is TP degree",
+                "all-to-all": "larger expert capacity granularity / fewer "
+                "expert shards per token batch",
+                "collective-permute": "reorder the mesh so the sharded axis "
+                "is ICI-contiguous",
+            }.get(top, "reduce TP degree")
+            out.append(f"- {r['arch_id']}/{r['shape']}: collective-bound "
+                       f"({top}); {hint}.")
+        elif dom == "memory":
+            out.append(
+                f"- {r['arch_id']}/{r['shape']}: memory-bound; shard the "
+                "dominant resident tensor further (FSDP the params/opt state, "
+                "shard the KV cache over batch/heads) or raise arithmetic "
+                "intensity (fuse, larger per-device batch)."
+            )
+        else:
+            out.append(
+                f"- {r['arch_id']}/{r['shape']}: compute-bound; reduce "
+                "redundant FLOPs (remat policy, replicated tail) — "
+                f"useful ratio {r['useful_flops_ratio']:.1%}."
+            )
+    return "\n".join(out) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl")
+    ap.add_argument("--hints", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.jsonl)
+    print(markdown_table(recs))
+    if args.hints:
+        print(one_liner_per_pair(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.serve.engine import ServeEngine, make_serve_step, make_prefill_step  # noqa: F401

@@ -1,0 +1,104 @@
+"""Batched serving engine: prefill + step-wise decode over a KV/SSM cache.
+
+``make_serve_step`` builds the single-token decode function that
+launch/dryrun.py lowers for the decode input shapes (decode_32k,
+long_500k): ONE new token against a ``seq_len``-sized context, where the
+cache is full-length for dense archs, a window ring-buffer for SWA archs,
+and O(1) recurrent state for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.registry import ModelApi, rules_for_mode
+
+
+def make_serve_step(api: ModelApi, run: RunConfig, *, mesh=None,
+                    sample: bool = False, temperature: float = 1.0):
+    """decode_step(params, cache, tokens (B,1)[, key]) ->
+    (next_tokens (B,), logits (B,V), new_cache)."""
+    rules = rules_for_mode(run.tp_mode)
+
+    def serve_step(params, cache, tokens, key=None):
+        logits, new_cache = api.decode_step(
+            params, cache, tokens, rules=rules, mesh=mesh
+        )
+        if sample:
+            assert key is not None
+            nxt = jax.random.categorical(key, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), logits, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(api: ModelApi, run: RunConfig, *, mesh=None,
+                      cache_len: Optional[int] = None):
+    """prefill(params, batch) -> (last-token logits, cache)."""
+    rules = rules_for_mode(run.tp_mode)
+
+    def prefill(params, batch):
+        return api.prefill(
+            params, batch, rules=rules, mesh=mesh, remat="none",
+            cache_len=cache_len,
+        )
+
+    return prefill
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Eager convenience wrapper used by the examples: batched generate."""
+
+    api: ModelApi
+    run: RunConfig
+    params: Any
+    mesh: Any = None
+
+    def generate(
+        self,
+        batch: Dict[str, jax.Array],
+        *,
+        max_new_tokens: int,
+        cache_len: Optional[int] = None,
+        sample: bool = False,
+        temperature: float = 1.0,
+        seed: int = 0,
+        eos_id: Optional[int] = None,
+    ) -> jax.Array:
+        """Prefill the prompt batch then decode greedily/sampled.
+        Returns generated tokens (B, max_new_tokens)."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        cache_len = cache_len or (s + max_new_tokens)
+        prefill = jax.jit(make_prefill_step(self.api, self.run, mesh=self.mesh,
+                                            cache_len=cache_len))
+        step = jax.jit(make_serve_step(self.api, self.run, mesh=self.mesh,
+                                       sample=sample, temperature=temperature))
+        logits, cache = prefill(self.params, batch)
+        if sample:
+            key = jax.random.key(seed)
+            key, k0 = jax.random.split(key)
+            nxt = jax.random.categorical(k0, logits / temperature, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [nxt]
+        done = jnp.zeros((b,), bool) if eos_id is not None else None
+        for i in range(max_new_tokens - 1):
+            if sample:
+                key, ki = jax.random.split(key)
+                nxt, _, cache = step(self.params, cache, nxt[:, None], ki)
+            else:
+                nxt, _, cache = step(self.params, cache, nxt[:, None])
+            if eos_id is not None:
+                done = done | (out[-1] == eos_id)
+                nxt = jnp.where(done, eos_id, nxt)
+            out.append(nxt)
+        return jnp.stack(out, axis=1)

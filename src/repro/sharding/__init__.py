@@ -1,0 +1,21 @@
+from repro.sharding.axes import (
+    LOGICAL_RULES_GATHER,
+    LOGICAL_RULES_MEGATRON,
+    AxisRules,
+    logical_to_mesh_spec,
+)
+from repro.sharding.partitioning import (
+    constrain,
+    named_sharding,
+    param_sharding_for_tree,
+)
+
+__all__ = [
+    "AxisRules",
+    "LOGICAL_RULES_GATHER",
+    "LOGICAL_RULES_MEGATRON",
+    "logical_to_mesh_spec",
+    "constrain",
+    "named_sharding",
+    "param_sharding_for_tree",
+]

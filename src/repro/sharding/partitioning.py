@@ -1,0 +1,145 @@
+"""Helpers to apply logical-axis shardings to arrays and pytrees."""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.sharding.axes import AxisRules
+
+
+def named_sharding(mesh: Mesh, spec: PartitionSpec) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def constrain(
+    x: jax.Array, rules: AxisRules, *logical_axes: Optional[str]
+) -> jax.Array:
+    """with_sharding_constraint by logical axis names.
+
+    Safe to call outside a mesh context (becomes a no-op) so that layer
+    code runs unchanged in single-device tests.  Shape-aware: mesh axes
+    that do not evenly divide the corresponding dim are dropped.
+    """
+    return constrain_shaped(x, rules, *logical_axes)
+
+
+def filter_spec_for_mesh(mesh_axis_names: Sequence[str], spec: PartitionSpec) -> PartitionSpec:
+    """Drop mesh axes not present on this mesh from a PartitionSpec."""
+    names = set(mesh_axis_names)
+
+    def _filter(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return PartitionSpec(*[_filter(e) for e in spec])
+
+
+def spec_for_shape(
+    rules: AxisRules,
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    mesh_axis_sizes: dict,
+) -> PartitionSpec:
+    """Shape-aware logical->mesh spec.
+
+    Walks the dims of a concrete shape and maps each logical axis to its
+    mesh axes, *dropping* any mesh axis that (a) is not on the mesh,
+    (b) was already consumed by an earlier dim, or (c) does not evenly
+    divide the dim size.  This keeps every spec GSPMD-legal for
+    architectures whose head/expert/vocab counts do not divide the mesh
+    (e.g. hymba's 25 heads, mixtral's 8 experts on a 16-way model axis).
+    """
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    out = []
+    seen: set = set()
+    for dim, ax in zip(shape, logical_axes):
+        if ax is None or ax not in rules.rules:
+            out.append(None)
+            continue
+        mesh_ax = rules.rules[ax]
+        if mesh_ax is None:
+            out.append(None)
+            continue
+        cands = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+        kept = []
+        prod = 1
+        for m in cands:
+            if m not in mesh_axis_sizes or m in seen:
+                continue
+            if dim % (prod * mesh_axis_sizes[m]) != 0:
+                continue
+            kept.append(m)
+            prod *= mesh_axis_sizes[m]
+        seen.update(kept)
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def constrain_shaped(
+    x: jax.Array, rules: AxisRules, *logical_axes: Optional[str]
+) -> jax.Array:
+    """Shape-aware with_sharding_constraint (divisibility-safe constrain)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover
+        mesh = None
+    if mesh is None or getattr(mesh, "empty", True):
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    spec = spec_for_shape(rules, x.shape, logical_axes, sizes)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def param_sharding_for_tree(
+    mesh: Mesh, logical_tree: Any, rules: AxisRules, shape_tree: Any = None
+) -> Any:
+    """Map a pytree of logical-axis tuples to NamedShardings.
+
+    ``logical_tree`` mirrors the parameter pytree but holds tuples of
+    logical axis names (or None) per array dim.  If ``shape_tree`` (a
+    matching pytree of arrays / ShapeDtypeStructs) is given, specs are
+    shape-aware (divisibility-checked).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    is_leaf = lambda x: isinstance(x, tuple) or x is None
+
+    if shape_tree is None:
+        def _one(axes):
+            spec = rules.spec(*axes)
+            spec = filter_spec_for_mesh(mesh.axis_names, spec)
+            return NamedSharding(mesh, spec)
+
+        return jax.tree.map(_one, logical_tree, is_leaf=is_leaf)
+
+    def _one_shaped(axes, arr):
+        axes = axes if axes is not None else (None,) * len(arr.shape)
+        spec = spec_for_shape(rules, arr.shape, axes, sizes)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(_one_shaped, logical_tree, shape_tree, is_leaf=is_leaf)
+
+
+def constrain_logical_tree(tree: Any, rules: AxisRules, axes_tree: Any) -> Any:
+    """with_sharding_constraint over a pytree guided by a logical-axes
+    tree (tuple leaves).  Used to pin gradient shardings to the parameter
+    layout so GSPMD reduce-scatters instead of all-reducing."""
+    is_leaf = lambda n: isinstance(n, tuple) or n is None
+
+    def one(axes, x):
+        axes = axes if axes is not None else (None,) * x.ndim
+        return constrain_shaped(x, rules, *axes)
+
+    return jax.tree.map(one, axes_tree, tree, is_leaf=is_leaf)

@@ -1,0 +1,2 @@
+from repro.train.loss import softmax_cross_entropy  # noqa: F401
+from repro.train.step import TrainState, make_train_step, init_train_state  # noqa: F401

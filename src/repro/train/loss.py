@@ -1,0 +1,33 @@
+"""Loss functions."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_cross_entropy(
+    logits: jax.Array,
+    labels: jax.Array,
+    *,
+    mask: Optional[jax.Array] = None,
+    z_loss: float = 0.0,
+) -> jax.Array:
+    """Mean next-token cross-entropy.  logits (B, S, V) fp-any; labels
+    (B, S) int32.  ``z_loss`` adds the log-normaliser penalty (stabilises
+    large-vocab training; used by the 340B run config).
+
+    Computed in fp32 with the gather trick (no (B,S,V) one-hot), which
+    keeps the sharded-vocab case a single cross-shard gather.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)  # (B, S)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is not None:
+        denom = jnp.maximum(mask.sum(), 1.0)
+        return jnp.sum(nll * mask) / denom
+    return jnp.mean(nll)

@@ -1,0 +1,131 @@
+"""Train-step factory: loss + grad + optimizer update, with gradient
+accumulation (lax.scan over microbatches), global-norm clipping, and the
+remat policy threaded into the model forward.
+
+The returned ``train_step(state, batch)`` is what launch/dryrun.py lowers
+for every (architecture x input shape) on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.registry import ModelApi, rules_for_mode
+from repro.sharding.partitioning import constrain_logical_tree
+from repro.optim.optimizers import make_optimizer, optimizer_state_axes
+from repro.optim.schedule import make_schedule
+from repro.train.loss import softmax_cross_entropy
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: jax.Array
+    params: Any
+    opt_state: Any
+
+
+def init_train_state(key, api: ModelApi, run: RunConfig) -> TrainState:
+    params = api.init(key)
+    opt = make_optimizer(run.optimizer, weight_decay=run.weight_decay)
+    return TrainState(
+        step=jnp.zeros((), jnp.int32), params=params, opt_state=opt.init(params)
+    )
+
+
+def train_state_axes(api: ModelApi, run: RunConfig, abstract_params) -> TrainState:
+    """Logical-axes pytree matching TrainState (for the launcher)."""
+    p_axes = api.param_axes()
+    return TrainState(
+        step=None,
+        params=p_axes,
+        opt_state=optimizer_state_axes(run.optimizer, p_axes, abstract_params),
+    )
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def make_train_step(
+    api: ModelApi,
+    run: RunConfig,
+    *,
+    mesh=None,
+) -> Callable[[TrainState, Dict[str, jax.Array]], Tuple[TrainState, Dict[str, jax.Array]]]:
+    """Build the jittable train step for this model + run config.
+
+    ``batch``: {"tokens": (B, S) int32, "labels": (B, S) int32, + optional
+    modality inputs ("patches" / "frames")}.
+    """
+    rules = rules_for_mode(run.tp_mode)
+    opt = make_optimizer(run.optimizer, weight_decay=run.weight_decay)
+    schedule = make_schedule(
+        run.schedule,
+        learning_rate=run.learning_rate,
+        warmup_steps=run.warmup_steps,
+        total_steps=run.total_steps,
+    )
+
+    def loss_fn(params, micro):
+        logits, aux = api.forward(
+            params, micro, rules=rules, mesh=mesh, remat=run.remat
+        )
+        loss = softmax_cross_entropy(logits, micro["labels"])
+        return loss + aux, (loss, aux)
+
+    grad_fn = jax.grad(loss_fn, has_aux=True)
+
+    def microbatch_split(batch):
+        n = run.grad_accum
+        def split(x):
+            b = x.shape[0]
+            assert b % n == 0, (b, n)
+            return x.reshape(n, b // n, *x.shape[1:])
+        return jax.tree.map(split, batch)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        if run.grad_accum > 1:
+            micros = microbatch_split(batch)
+
+            def accum(carry, micro):
+                g_acc, l_acc, a_acc = carry
+                g, (l, a) = grad_fn(state.params, micro)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l, a_acc + a), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (grads, loss, aux), _ = jax.lax.scan(
+                accum, (zeros, jnp.zeros(()), jnp.zeros(())), micros
+            )
+            inv = 1.0 / run.grad_accum
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss, aux = loss * inv, aux * inv
+        else:
+            grads, (loss, aux) = grad_fn(state.params, batch)
+
+        # pin gradient layout to the parameter sharding: GSPMD then emits
+        # a reduce-scatter for FSDP gradients instead of an all-reduce
+        # (half the ring traffic) — SS Perf iteration B2
+        grads = constrain_logical_tree(grads, rules, api.param_axes())
+
+        metrics = {"loss": loss, "aux_loss": aux}
+        if run.max_grad_norm is not None:
+            grads, gnorm = _clip_by_global_norm(grads, run.max_grad_norm)
+            metrics["grad_norm"] = gnorm
+        lr = schedule(state.step)
+        metrics["lr"] = lr
+        new_params, new_opt = opt.update(grads, state.opt_state, state.params, lr)
+        return TrainState(step=state.step + 1, params=new_params, opt_state=new_opt), metrics
+
+    return train_step

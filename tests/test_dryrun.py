@@ -1,0 +1,50 @@
+"""Dry-run integration: the production-mesh lowering path runs in a
+subprocess (it needs its own XLA device-count flag, which must never leak
+into this test process — smoke tests see 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_this_process_has_one_device():
+    assert len(jax.devices()) == 1
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_single_pair(tmp_path):
+    """One cheap (arch x shape) through the REAL 16x16 dry-run."""
+    out = tmp_path / "rec.jsonl"
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mamba2-370m",
+         "--shape", "train_4k", "--mesh", "single", "--out", str(out)],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=1500,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(out.read_text().splitlines()[0])
+    assert rec["chips"] == 256
+    assert rec["flops_per_device"] > 0
+    assert rec["dominant"] in ("compute", "memory", "collective")
+    assert rec["hbm_bytes_per_device"] < 16 * 2 ** 30  # fits v5e HBM
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_multipod(tmp_path):
+    """The 2x16x16 multi-pod mesh lowers (the 'pod' axis shards)."""
+    out = tmp_path / "rec.jsonl"
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mamba2-370m",
+         "--shape", "decode_32k", "--mesh", "multi", "--out", str(out)],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=1500,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(out.read_text().splitlines()[0])
+    assert rec["chips"] == 512
+    assert rec["mesh"] == "2x16x16"

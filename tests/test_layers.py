@@ -1,0 +1,106 @@
+"""Layer-level unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.layers.attention import blockwise_attention, naive_attention
+from repro.layers.mlp import activation_fn
+from repro.layers.norm import apply_layernorm, apply_rmsnorm, init_layernorm, init_rmsnorm, local_response_norm
+from repro.layers.embedding import apply_rope
+
+
+def _qkv(key, b, s, t, h, kv, d):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, kv, d), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [None, 7])
+@pytest.mark.parametrize("h,kv", [(4, 4), (8, 2)])
+def test_blockwise_matches_naive(h, kv, window):
+    """The flash-style blockwise path must equal the naive path (GQA and
+    sliding-window included)."""
+    b, s, t, d = 2, 24, 40, 16
+    q, k, v = _qkv(jax.random.key(0), b, s, t, h, kv, d)
+    q_pos = jnp.broadcast_to(jnp.arange(16, 16 + s)[None], (b, s))
+    kv_pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    a = naive_attention(q, k, v, q_pos, kv_pos, causal=True, window=window)
+    bw = blockwise_attention(
+        q, k, v, q_pos, kv_pos, causal=True, window=window, block_k=8
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bw), atol=2e-5)
+
+
+def test_attention_invalid_slots_ignored():
+    """kv slots with position -1 (empty cache) must not contribute."""
+    b, s, t, h, d = 1, 1, 8, 2, 8
+    q, k, v = _qkv(jax.random.key(1), b, s, t, h, h, d)
+    q_pos = jnp.full((b, s), 100)
+    kv_pos = jnp.concatenate(
+        [jnp.arange(4)[None], jnp.full((1, 4), -1)], axis=1
+    )
+    full = naive_attention(q, k, v, q_pos, kv_pos, causal=True, window=None)
+    trunc = naive_attention(
+        q, k[:, :4], v[:, :4], q_pos, kv_pos[:, :4], causal=True, window=None
+    )
+    np.testing.assert_allclose(np.asarray(full), np.asarray(trunc), atol=1e-6)
+
+
+def test_rope_preserves_norm_and_relative_property():
+    x = jax.random.normal(jax.random.key(2), (1, 6, 2, 16))
+    pos = jnp.arange(6)[None]
+    y = apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.key(3), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.key(4), (1, 1, 1, 16))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([[i]]), 10000.0)
+        kj = apply_rope(k, jnp.array([[j]]), 10000.0)
+        return float(jnp.sum(qi * kj))
+    assert np.isclose(dot_at(3, 1), dot_at(10, 8), atol=1e-4)
+
+
+@given(st.integers(min_value=1, max_value=64), st.integers(min_value=0, max_value=2 ** 31))
+@settings(max_examples=20, deadline=None)
+def test_rmsnorm_unit_rms(d, seed):
+    x = jax.random.normal(jax.random.key(seed), (3, d)) * 7.0
+    p = init_rmsnorm(d)
+    y = np.asarray(apply_rmsnorm(p, x))
+    rms = np.sqrt(np.mean(y ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-2)
+
+
+def test_layernorm_zero_mean_unit_var():
+    x = jax.random.normal(jax.random.key(5), (4, 32)) * 3 + 5
+    p = init_layernorm(32)
+    y = np.asarray(apply_layernorm(p, x))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(y.var(-1), 1.0, rtol=1e-3)
+
+
+def test_lrn_matches_direct_window_sum():
+    """cuda-convnet LRN: y = x / (k + a * windowed sum of squares)^b."""
+    x = jax.random.normal(jax.random.key(6), (2, 4, 4, 10))
+    y = np.asarray(local_response_norm(x, size=5, alpha=1e-4, beta=0.75, k=2.0))
+    xn = np.asarray(x)
+    for c in range(10):
+        lo, hi = max(0, c - 2), min(10, c + 3)
+        denom = (2.0 + 1e-4 * (xn[..., lo:hi] ** 2).sum(-1)) ** 0.75
+        np.testing.assert_allclose(y[..., c], xn[..., c] / denom, rtol=1e-5)
+
+
+def test_squared_relu():
+    f = activation_fn("squared_relu")
+    x = jnp.array([-2.0, 0.0, 3.0])
+    np.testing.assert_allclose(np.asarray(f(x)), [0.0, 0.0, 9.0])

@@ -1,0 +1,91 @@
+"""Eq. 1 workload-share invariants (hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.partitioner import (
+    allocate_kernels,
+    predicted_conv_time,
+    speedup,
+    workload_shares,
+)
+
+times_strategy = st.lists(
+    st.floats(min_value=1e-3, max_value=1e3, allow_nan=False, allow_infinity=False),
+    min_size=1,
+    max_size=32,
+)
+
+
+@given(times_strategy)
+def test_shares_sum_to_one(times):
+    s = workload_shares(times)
+    assert np.isclose(s.sum(), 1.0)
+    assert np.all(s > 0)
+
+
+@given(times_strategy)
+def test_shares_inverse_monotonic(times):
+    """Faster device (smaller time) never gets a smaller share."""
+    s = workload_shares(times)
+    t = np.asarray(times)
+    order = np.argsort(t)
+    assert np.all(np.diff(s[order]) <= 1e-12)
+
+
+@given(times_strategy, st.integers(min_value=0, max_value=5000))
+def test_allocation_preserves_total(times, num_kernels):
+    k = allocate_kernels(num_kernels, times)
+    assert k.sum() == num_kernels
+    assert np.all(k >= 0)
+
+
+@given(times_strategy, st.integers(min_value=64, max_value=5000))
+@settings(max_examples=50)
+def test_allocation_close_to_ideal(times, num_kernels):
+    """Integer allocation is within 1 kernel of the fractional ideal."""
+    s = workload_shares(times)
+    k = allocate_kernels(num_kernels, times)
+    assert np.all(np.abs(k - s * num_kernels) <= 1.0 + 1e-9)
+
+
+def test_paper_example():
+    """§4.1.1: devices at 10 s and 20 s -> shares (2/3, 1/3), both finish
+    in 6.67 s, speedup 1.5x vs device 1."""
+    times = [10.0, 20.0]
+    s = workload_shares(times)
+    assert np.allclose(s, [2 / 3, 1 / 3])
+    k = allocate_kernels(300, times)
+    assert list(k) == [200, 100]
+    t = predicted_conv_time(times, k, 300)
+    assert np.isclose(t, 20 / 3, rtol=1e-6)
+    assert np.isclose(speedup(times, k, 300), 1.5, rtol=1e-6)
+
+
+@given(times_strategy)
+@settings(max_examples=50)
+def test_balanced_finish_times(times):
+    """Under fractional Eq. 1 shares every device finishes simultaneously
+    in the harmonic-aggregate time."""
+    t = np.asarray(times)
+    s = workload_shares(times)
+    finish = t * s
+    assert np.allclose(finish, finish[0], rtol=1e-9)
+    assert np.allclose(finish[0], 1.0 / np.sum(1.0 / t), rtol=1e-9)
+
+
+def test_homogeneous_fixed_point():
+    """Homogeneous devices -> uniform shares (the TPU-mesh degenerate
+    case noted in DESIGN.md)."""
+    s = workload_shares([3.7] * 8)
+    assert np.allclose(s, 1 / 8)
+
+
+def test_invalid_inputs():
+    with pytest.raises(ValueError):
+        workload_shares([])
+    with pytest.raises(ValueError):
+        workload_shares([1.0, -2.0])
+    with pytest.raises(ValueError):
+        allocate_kernels(-1, [1.0])

@@ -1,0 +1,125 @@
+"""Sharding rule system: shape-aware spec construction properties."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.axes import (
+    AxisRules,
+    LOGICAL_RULES_GATHER,
+    LOGICAL_RULES_MEGATRON,
+)
+from repro.sharding.partitioning import spec_for_shape
+
+SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_megatron_basic_specs():
+    spec = spec_for_shape(
+        LOGICAL_RULES_MEGATRON, (4096, 14336), ("fsdp_embed", "mlp"), SIZES
+    )
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_gather_mode_keeps_weights_sharded_but_acts_replicated():
+    w = spec_for_shape(LOGICAL_RULES_GATHER, (4096, 14336), ("embed", "mlp"), SIZES)
+    assert w == P(None, "model")
+    act = spec_for_shape(
+        LOGICAL_RULES_GATHER, (256, 4096, 14336), ("batch", None, "act_mlp"), SIZES
+    )
+    assert act == P(("pod", "data"))  # hidden gathered
+    act_col = spec_for_shape(
+        LOGICAL_RULES_GATHER, (256, 4096, 14336), ("batch", None, "act_mlp_col"), SIZES
+    )
+    assert act_col == P(("pod", "data"), None, "model")
+
+
+def test_non_divisible_axis_dropped():
+    # hymba: 25 heads on a 16-way model axis -> replicated
+    spec = spec_for_shape(
+        LOGICAL_RULES_MEGATRON, (4096, 25, 64), ("fsdp_embed", "heads", "head_dim"), SIZES
+    )
+    assert spec == P(("pod", "data"))
+    # mixtral: 8 experts on 16-way -> dropped on experts
+    spec = spec_for_shape(
+        LOGICAL_RULES_MEGATRON, (8, 6144, 16384),
+        ("experts", "fsdp_embed", "expert_mlp"), SIZES,
+    )
+    assert spec[0] is None
+
+
+def test_mesh_axis_used_once():
+    """A mesh axis consumed by an earlier dim cannot repeat."""
+    spec = spec_for_shape(
+        LOGICAL_RULES_MEGATRON, (64, 128), ("heads", "mlp"), SIZES
+    )
+    # both map to "model"; only the first keeps it
+    assert spec == P("model")
+
+
+def test_partial_divisibility_of_compound_axis():
+    """batch maps to (pod, data): a batch of 2 shards only over pod."""
+    spec = spec_for_shape(LOGICAL_RULES_MEGATRON, (2, 128), ("batch", None), SIZES)
+    assert spec == P("pod")
+    spec = spec_for_shape(LOGICAL_RULES_MEGATRON, (1, 128), ("batch", None), SIZES)
+    assert spec == P()
+
+
+@given(
+    st.integers(min_value=1, max_value=4096),
+    st.sampled_from(["batch", "mlp", "heads", "embed", "vocab", "experts"]),
+)
+@settings(max_examples=100, deadline=None)
+def test_spec_always_divides(dim, axis):
+    """PROPERTY: every mesh axis kept in a spec divides its dim."""
+    spec = spec_for_shape(LOGICAL_RULES_MEGATRON, (dim,), (axis,), SIZES)
+    entry = spec[0] if len(spec) else None
+    if entry is None:
+        return
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    prod = int(np.prod([SIZES[a] for a in axes]))
+    assert dim % prod == 0
+
+
+def test_rules_spec_trailing_nones_trimmed():
+    spec = LOGICAL_RULES_MEGATRON.spec("batch", None, None)
+    assert spec == P(("pod", "data"))
+
+
+def test_fsdp_mode_folds_model_into_batch():
+    from repro.sharding.axes import LOGICAL_RULES_FSDP
+
+    # batch 512 divides pod*data*model = 512; 256 would keep (pod, data)
+    act = spec_for_shape(
+        LOGICAL_RULES_FSDP, (512, 4096, 4096), ("batch", None, "act_embed"), SIZES
+    )
+    assert act == P(("pod", "data", "model"))
+    act256 = spec_for_shape(
+        LOGICAL_RULES_FSDP, (256, 4096, 4096), ("batch", None, "act_embed"), SIZES
+    )
+    assert act256 == P(("pod", "data"))  # divisibility-safe prefix
+    w = spec_for_shape(
+        LOGICAL_RULES_FSDP, (4096, 11008), ("fsdp_embed", "mlp"), SIZES
+    )
+    assert w == P(("pod", "data", "model"))  # ZeRO-3; no TP on the out axis
+    # experts keep the model axis for expert parallelism
+    e = spec_for_shape(
+        LOGICAL_RULES_FSDP, (128, 4096, 1536),
+        ("experts", "fsdp_embed", "expert_mlp"), SIZES,
+    )
+    assert e[0] == "model"
+
+
+def test_zero1_params_replicated_opt_sharded():
+    from repro.sharding.axes import LOGICAL_RULES_ZERO1
+
+    w = spec_for_shape(
+        LOGICAL_RULES_ZERO1, (4096, 11008), ("fsdp_embed", "mlp"), SIZES
+    )
+    assert w == P()  # params replicated
+    m = spec_for_shape(
+        LOGICAL_RULES_ZERO1, (4096, 11008), ("opt_embed", "mlp"), SIZES
+    )
+    assert m == P(("pod", "data", "model"))  # moments sharded everywhere

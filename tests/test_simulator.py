@@ -1,0 +1,87 @@
+"""Calibration + scalability simulator vs the paper's reported numbers."""
+import numpy as np
+import pytest
+
+from repro.core.costmodel import paper_network
+from repro.core.simulator import (
+    ClusterSpec,
+    PAPER_TABLE4_CPU,
+    PAPER_TABLE5_GPU,
+    amdahl_ceiling,
+    fit_paper_row,
+    gaussian_cluster,
+    simulate,
+    speedup_curve,
+)
+
+
+@pytest.mark.parametrize("key", list(PAPER_TABLE4_CPU))
+def test_cpu_table4_fit(key):
+    """Eq.1+Eq.2 model reproduces Table 4 within 6% per entry."""
+    r = fit_paper_row(*key, PAPER_TABLE4_CPU[key], device="cpu")
+    assert r["max_rel_err"] < 0.06, r
+
+
+@pytest.mark.parametrize("key", list(PAPER_TABLE5_GPU))
+def test_gpu_table5_fit(key):
+    """GPU rows fit within 12% (their 2-GPU smallest-net entry exceeds
+    the conv-only bound for any fixed speed ratio — noted in the bench)."""
+    r = fit_paper_row(*key, PAPER_TABLE5_GPU[key], device="gpu")
+    assert r["max_rel_err"] < 0.12, r
+
+
+def test_gpu_trend_decreasing_cpu_increasing():
+    """§5.3.3's qualitative claim: CPU speedups grow with network size,
+    GPU speedups shrink."""
+    cpu2 = [PAPER_TABLE4_CPU[k][0] for k in sorted(PAPER_TABLE4_CPU)]
+    gpu2 = [PAPER_TABLE5_GPU[k][0] for k in sorted(PAPER_TABLE5_GPU)]
+    # fitted model must reproduce the direction of both trends at n=2
+    fits_cpu = [
+        fit_paper_row(*k, PAPER_TABLE4_CPU[k], device="cpu")["predicted"][0]
+        for k in sorted(PAPER_TABLE4_CPU)
+    ]
+    fits_gpu = [
+        fit_paper_row(*k, PAPER_TABLE5_GPU[k], device="gpu")["predicted"][0]
+        for k in sorted(PAPER_TABLE5_GPU)
+    ]
+    assert fits_cpu[-1] > fits_cpu[0]  # grows with size
+    assert fits_gpu[-1] < fits_gpu[0]  # shrinks with size
+
+
+def _spec(n=32, bw=5.0, seed=0):
+    return gaussian_cluster(
+        n_nodes=n, base_conv_time=100.0, rel_speed_low=0.8, rel_speed_high=2.0,
+        master_comp_time=15.0, bandwidth_mbps=bw,
+        layers=paper_network(500, 1500), batch=1024, seed=seed,
+    )
+
+
+def test_scalability_saturates():
+    """Figs 9/10: speedup grows then stabilises; adding nodes never makes
+    the balanced schedule slower (comm here is input-broadcast bound)."""
+    curve = speedup_curve(_spec(bw=1e4))
+    assert curve[0] == pytest.approx(1.0)
+    assert curve[3] > 2.0
+    # saturation: the last doublings gain little
+    assert curve[-1] / curve[15] < 1.35
+
+
+def test_amdahl_ceiling_respected():
+    spec = _spec(bw=1e9)
+    curve = speedup_curve(spec)
+    assert np.all(curve <= amdahl_ceiling(spec) + 1e-9)
+
+
+def test_slow_bandwidth_can_hurt():
+    """§5.4: at low enough bandwidth distribution is SLOWER than one
+    device (speedup < 1) — the GPU simulation's observed regime."""
+    slow = _spec(bw=0.05)
+    curve = speedup_curve(slow)
+    assert curve.min() < 1.0
+
+
+def test_comm_grows_with_nodes():
+    spec = _spec()
+    t8 = simulate(spec, 8)
+    t32 = simulate(spec, 32)
+    assert t32.comm_time > t8.comm_time  # more slaves -> more input broadcast
