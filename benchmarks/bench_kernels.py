@@ -25,9 +25,46 @@ def _time(f, *args, reps=3):
     return (time.perf_counter() - t0) / reps
 
 
-def run():
+def _bench_backends(rows, smoke: bool):
+    """Conv backend comparison through the registry contract — the same
+    code the cluster's devices run (core/backends.py)."""
+    from repro.core.backends import get_backend
+
+    rng = np.random.default_rng(0)
+    b, s, cin, cout = (2, 8, 4, 16) if smoke else (8, 32, 3, 64)
+    x = rng.normal(size=(b, s, s, cin)).astype(np.float32)
+    w = rng.normal(size=(5, 5, cin, cout)).astype(np.float32)
+    g = rng.normal(size=(b, s, s, cout)).astype(np.float32)
+    flops = 2 * b * s * s * 25 * cin * cout
+    for name in ("numpy", "xla"):
+        bk = get_backend(name)
+        dt = _time(bk.conv, x, w)
+        dtv = _time(lambda *a: bk.conv_vjp(*a), x, w, g)
+        rows.append((
+            f"backend_conv_{name}", dt * 1e6,
+            f"host_gflops={flops / dt / 1e9:.2f} vjp_us={dtv * 1e6:.0f}",
+        ))
+    # pallas runs in interpret mode on CPU (Python): tiny shape, parity
+    # timing only — kernel perf is only meaningful on a real TPU
+    xt = x[:1, :8, :8, :2].copy()
+    wt = w[:, :, :2, :8].copy()
+    gt = g[:1, :8, :8, :8].copy()
+    bk = get_backend("pallas")
+    dt = _time(bk.conv, xt, wt)
+    dtv = _time(lambda *a: bk.conv_vjp(*a), xt, wt, gt)
+    rows.append((
+        "backend_conv_pallas_interpret_tiny", dt * 1e6,
+        f"vjp_us={dtv * 1e6:.0f} (interpret mode; not kernel perf)",
+    ))
+
+
+def run(smoke: bool = False):
     rows = []
     jit = jax.jit
+
+    _bench_backends(rows, smoke)
+    if smoke:
+        return rows
 
     # conv2d: the paper's C2 layer geometry (16x16x500 -> 1500 kernels)
     x = jax.random.normal(jax.random.key(0), (8, 16, 16, 500), jnp.float32)

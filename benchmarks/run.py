@@ -1,14 +1,21 @@
 """Benchmark aggregator: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only name]
+    PYTHONPATH=src python -m benchmarks.run [--only a,b] [--smoke] [--json OUT]
 
 Prints ``name,us_per_call,derived`` CSV rows.  us_per_call is 0 for
 model-predicted (simulator) rows; wall-clock rows come from the real
 master/slave cluster and the data-parallel baseline on this host.
+
+``--smoke`` asks each module that supports it (run(smoke=True)) for a
+tiny-shape pass — the CI benchmark-smoke lane.  ``--json`` additionally
+writes the rows as a JSON artifact (the ``BENCH_*.json`` perf
+trajectory).
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
 import sys
 import time
 import traceback
@@ -34,28 +41,52 @@ MODULES = {
     "mobile": bench_mobile,          # Fig 13
     "data_parallel": bench_data_parallel,  # Table 1 baseline
     "master_slave": bench_master_slave,  # Alg 1/2 real wall-clock
-    "kernels": bench_kernels,        # Pallas kernel rooflines
+    "kernels": bench_kernels,        # Pallas kernel rooflines + backends
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=list(MODULES))
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape pass where the module supports it")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write rows as a JSON artifact")
     args = ap.parse_args()
-    mods = {args.only: MODULES[args.only]} if args.only else MODULES
+    if args.only:
+        names = args.only.split(",")
+        unknown = [n for n in names if n not in MODULES]
+        if unknown:
+            raise SystemExit(f"unknown benchmark(s) {unknown}; choose from {list(MODULES)}")
+        mods = {n: MODULES[n] for n in names}
+    else:
+        mods = MODULES
 
     print("name,us_per_call,derived")
+    records = []
     failed = 0
     for name, mod in mods.items():
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kwargs["smoke"] = True
         try:
             t0 = time.time()
-            for row_name, us, derived in mod.run():
+            for row_name, us, derived in mod.run(**kwargs):
                 print(f"{row_name},{us:.1f},{derived}")
+                records.append(
+                    {"bench": name, "name": row_name, "us_per_call": us,
+                     "derived": derived}
+                )
             print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception:
             failed += 1
             print(f"# {name} FAILED", file=sys.stderr)
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, "rows": records}, f, indent=2)
+        print(f"# wrote {len(records)} rows to {args.json}", file=sys.stderr)
     if failed:
         raise SystemExit(1)
 

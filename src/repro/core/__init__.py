@@ -10,10 +10,17 @@ from repro.core.costmodel import (  # noqa: F401
     upload_elements,
     upload_elements_nodes,
 )
+from repro.core.backends import (  # noqa: F401
+    available_backends,
+    get_backend,
+    probe_conv_time,
+    register_backend,
+)
 from repro.core.master_slave import HeteroCluster, make_distributed_conv  # noqa: F401
 from repro.core.partitioner import (  # noqa: F401
     allocate_kernels,
     predicted_conv_time,
+    probe_device,
     speedup,
     workload_shares,
 )

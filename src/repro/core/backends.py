@@ -1,0 +1,373 @@
+"""Pluggable conv compute backends for the distributed engine.
+
+The paper distributes ONE operation — the stride-1 SAME convolution over
+the output-channel ("kernel") axis — so every device in the cluster only
+ever needs two primitives:
+
+    conv(x, w)        -> y                (Algorithm 2's `convn`)
+    conv_vjp(x, w, g) -> (dx, dw)         (the backward shard)
+
+``ConvBackend`` pins that contract; the registry maps a name to an
+implementation so a heterogeneous cluster can mix devices running
+different kernels (the paper's CPU/GPU scenario):
+
+    numpy   — serial im2col, callback- and thread-safe everywhere; the
+              master's default since it runs inside jax host callbacks
+              where re-entering jit dispatch can deadlock the runtime.
+    xla     — ``jax.lax.conv_general_dilated`` jitted per shape (jit's
+              own cache keys on shapes/dtypes).
+    pallas  — the MXU direct-conv kernel (kernels/conv2d.py) forward and
+              the Pallas dX/dW backward; interpret mode off-TPU.
+
+All primitives take and return **numpy** arrays: the master/slave
+protocol moves serialized host buffers (the emulated sockets), and numpy
+is the one currency every backend speaks.  ``probe_conv_time`` times the
+SAME code a device will run for the real workload, so the Eq. 1 shares
+computed from probe times are exact per backend.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class ConvBackend:
+    """The per-device compute contract of the distributed conv engine."""
+
+    name: str = "base"
+
+    def conv(self, x: np.ndarray, w: np.ndarray) -> np.ndarray:
+        """NHWC x HWIO -> NHWC, SAME padding, stride 1."""
+        raise NotImplementedError
+
+    def conv_vjp(
+        self, x: np.ndarray, w: np.ndarray, g: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(dx, dw) of sum(conv(x, w) * g)."""
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Callable[[], ConvBackend]] = {}
+_INSTANCES: Dict[str, ConvBackend] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: ``@register_backend("mine")`` adds a factory."""
+
+    def deco(factory: Callable[[], ConvBackend]):
+        _REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def get_backend(name: str) -> ConvBackend:
+    """Resolve (and cache) a backend instance by registry name."""
+    if name not in _INSTANCES:
+        if name not in _REGISTRY:
+            raise KeyError(
+                f"unknown conv backend {name!r}; available: {available_backends()}"
+            )
+        _INSTANCES[name] = _REGISTRY[name]()
+    return _INSTANCES[name]
+
+
+def available_backends() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# numpy: serial im2col — the seed implementation, kept as the reference
+# and as the only backend safe inside jax host callbacks.
+# ---------------------------------------------------------------------------
+
+
+def _im2col(x: np.ndarray, kh: int, kw: int) -> np.ndarray:
+    """SAME-padded im2col.  x: (B,H,W,C) -> (B,H,W, kh*kw*C)."""
+    b, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = np.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+    win = np.lib.stride_tricks.sliding_window_view(xp, (kh, kw), axis=(1, 2))
+    # win: (B, H, W, C, kh, kw) -> (B, H, W, kh, kw, C)
+    win = win.transpose(0, 1, 2, 4, 5, 3)
+    return np.ascontiguousarray(win).reshape(b, h, w, kh * kw * c)
+
+
+def numpy_conv(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """NHWC x HWIO SAME conv, stride 1 (the slave's `convn`)."""
+    kh, kw, cin, cout = w.shape
+    cols = _im2col(np.asarray(x, np.float32), kh, kw)
+    y = cols.reshape(-1, kh * kw * cin) @ w.reshape(kh * kw * cin, cout)
+    return y.reshape(x.shape[0], x.shape[1], x.shape[2], cout)
+
+
+def numpy_conv_vjp(x: np.ndarray, w: np.ndarray, g: np.ndarray):
+    """Returns (dx, dw) of sum(conv(x, w) * g)."""
+    x = np.asarray(x, np.float32)
+    g = np.asarray(g, np.float32)
+    kh, kw, cin, cout = w.shape
+    b, h, wd, _ = x.shape
+    cols = _im2col(x, kh, kw).reshape(-1, kh * kw * cin)
+    dw = (cols.T @ g.reshape(-1, cout)).reshape(kh, kw, cin, cout)
+    # dx: scatter the columns of dG @ W^T back into the padded image
+    dcols = (g.reshape(-1, cout) @ w.reshape(kh * kw * cin, cout).T).reshape(
+        b, h, wd, kh, kw, cin
+    )
+    ph, pw = kh // 2, kw // 2
+    dxp = np.zeros((b, h + kh - 1, wd + kw - 1, cin), np.float32)
+    for di in range(kh):
+        for dj in range(kw):
+            dxp[:, di : di + h, dj : dj + wd, :] += dcols[:, :, :, di, dj, :]
+    dx = dxp[:, ph : ph + h, pw : pw + wd, :]
+    return dx, dw
+
+
+@register_backend("numpy")
+class NumpyBackend(ConvBackend):
+    name = "numpy"
+
+    def conv(self, x, w):
+        return numpy_conv(x, w)
+
+    def conv_vjp(self, x, w, g):
+        return numpy_conv_vjp(x, w, g)
+
+
+# ---------------------------------------------------------------------------
+# xla: jax.lax.conv_general_dilated, jitted per shape.
+# ---------------------------------------------------------------------------
+
+
+@register_backend("xla")
+class XlaBackend(ConvBackend):
+    name = "xla"
+
+    def __init__(self):
+        import jax
+
+        def _conv(x, w):
+            return jax.lax.conv_general_dilated(
+                x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+            )
+
+        def _vjp(x, w, g):
+            _, pullback = jax.vjp(_conv, x, w)
+            return pullback(g)
+
+        # jit caches per (shape, dtype), so every shard shape compiles once
+        self._conv = jax.jit(_conv)
+        self._vjp = jax.jit(_vjp)
+
+    def conv(self, x, w):
+        return np.asarray(self._conv(np.asarray(x), np.asarray(w)))
+
+    def conv_vjp(self, x, w, g):
+        dx, dw = self._vjp(np.asarray(x), np.asarray(w), np.asarray(g))
+        return np.asarray(dx), np.asarray(dw)
+
+
+# ---------------------------------------------------------------------------
+# pallas: the MXU direct-conv kernel + the Pallas dX/dW backward.
+# ---------------------------------------------------------------------------
+
+
+@register_backend("pallas")
+class PallasBackend(ConvBackend):
+    """Runs kernels/conv2d.py.  Off-TPU the kernels execute in Pallas
+    interpret mode — bit-accurate but slow, meant for CI parity tests."""
+
+    name = "pallas"
+
+    def __init__(self, interpret: Optional[bool] = None):
+        import jax
+
+        if interpret is None:
+            interpret = jax.devices()[0].platform != "tpu"
+        self.interpret = bool(interpret)
+
+    def conv(self, x, w):
+        import jax.numpy as jnp
+
+        from repro.kernels.conv2d import conv2d_pallas
+
+        return np.asarray(
+            conv2d_pallas(jnp.asarray(x), jnp.asarray(w), interpret=self.interpret)
+        )
+
+    def conv_vjp(self, x, w, g):
+        import jax.numpy as jnp
+
+        from repro.kernels.conv2d import conv2d_dw_pallas, conv2d_dx_pallas
+
+        kh, kw = w.shape[0], w.shape[1]
+        dx = conv2d_dx_pallas(jnp.asarray(g), jnp.asarray(w), interpret=self.interpret)
+        dw = conv2d_dw_pallas(
+            jnp.asarray(x), jnp.asarray(g), kh, kw, interpret=self.interpret
+        )
+        return np.asarray(dx), np.asarray(dw)
+
+
+# ---------------------------------------------------------------------------
+# sim: a deterministic virtual device for protocol/scheduling studies.
+# ---------------------------------------------------------------------------
+
+
+@register_backend("sim")
+class SimBackend(ConvBackend):
+    """Sleeps exactly ``flops / flops_per_s`` and returns ZEROS of the
+    right shape.  Wall-clock behaves like a device of known speed with
+    none of the host's compute noise — for benchmarking the master/slave
+    protocol schedule (bench_master_slave.py), NEVER for numerics."""
+
+    name = "sim"
+
+    def __init__(self, flops_per_s: float = 1e9):
+        self.flops_per_s = float(flops_per_s)
+
+    def _flops(self, x, w) -> float:
+        b, h, wd, _ = x.shape
+        kh, kw, cin, cout = w.shape
+        return 2.0 * b * h * wd * kh * kw * cin * cout
+
+    def conv(self, x, w):
+        time.sleep(self._flops(x, w) / self.flops_per_s)
+        return np.zeros(x.shape[:-1] + (w.shape[-1],), np.float32)
+
+    def conv_vjp(self, x, w, g):
+        # backward is ~2x the forward cost (dX + dW)
+        time.sleep(2.0 * self._flops(x, w) / self.flops_per_s)
+        return np.zeros(x.shape, np.float32), np.zeros(w.shape, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# probing — §4.1.1, generalized so each device times its OWN backend.
+# ---------------------------------------------------------------------------
+
+
+def probe_conv_time(
+    backend,
+    *,
+    image_size: int,
+    in_channels: int,
+    kernel_size: int,
+    num_kernels: int,
+    batch: int,
+    repeats: int = 3,
+    slowdown: float = 1.0,
+    seed: int = 0,
+) -> float:
+    """The paper's probe: median wall-clock of the reference convolution
+    on the given backend (name or instance), scaled by the emulated
+    slowdown.  Probing the backend a device actually runs keeps the
+    Eq. 1 ratios exact for mixed-backend clusters."""
+    if isinstance(backend, str):
+        backend = get_backend(backend)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(batch, image_size, image_size, in_channels)).astype(np.float32)
+    w = rng.normal(
+        size=(kernel_size, kernel_size, in_channels, num_kernels)
+    ).astype(np.float32)
+    backend.conv(x, w)  # warm caches / jit
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        backend.conv(x, w)
+        times.append(time.perf_counter() - t0)
+    measured = float(np.median(times))
+    return measured * slowdown if slowdown > 1.0 else measured
+
+
+# ---------------------------------------------------------------------------
+# jax-level conv_fn factory — threads a backend choice into models/cnn.py
+# (single-process path; the cluster path lives in core/master_slave.py).
+# ---------------------------------------------------------------------------
+
+
+def make_conv_fn(name: str, *, interpret: Optional[bool] = None):
+    """Return a ``conv_fn(params, x)`` for ``cnn_forward`` that computes
+    the convolution with the named backend, differentiable end to end."""
+    import jax
+
+    if name == "xla":
+        from repro.layers.conv import apply_conv
+
+        return apply_conv
+
+    if name == "pallas":
+        from repro.kernels.conv2d import (
+            conv2d_dw_pallas,
+            conv2d_dx_pallas,
+            conv2d_pallas,
+        )
+
+        interp = (
+            jax.devices()[0].platform != "tpu" if interpret is None else bool(interpret)
+        )
+
+        @jax.custom_vjp
+        def pconv(x, w):
+            return conv2d_pallas(x, w, interpret=interp)
+
+        def pconv_fwd(x, w):
+            return pconv(x, w), (x, w)
+
+        def pconv_bwd(res, g):
+            x, w = res
+            dx = conv2d_dx_pallas(g, w, interpret=interp)
+            dw = conv2d_dw_pallas(x, g, w.shape[0], w.shape[1], interpret=interp)
+            return dx, dw.astype(w.dtype)
+
+        pconv.defvjp(pconv_fwd, pconv_bwd)
+
+        def conv_fn(params, x, padding: str = "SAME"):
+            y = pconv(x, params["kernel"].astype(x.dtype))
+            return y + params["bias"].astype(y.dtype)[None, None, None, :]
+
+        return conv_fn
+
+    if name == "numpy":
+        backend = get_backend("numpy")
+
+        @jax.custom_vjp
+        def nconv(x, w):
+            return _np_callback_conv(x, w)
+
+        def _np_callback_conv(x, w):
+            out_shape = jax.ShapeDtypeStruct(x.shape[:-1] + (w.shape[-1],), x.dtype)
+            return jax.pure_callback(
+                lambda xx, ww: backend.conv(np.asarray(xx), np.asarray(ww)).astype(
+                    xx.dtype
+                ),
+                out_shape, x, w,
+            )
+
+        def nconv_fwd(x, w):
+            return _np_callback_conv(x, w), (x, w)
+
+        def nconv_bwd(res, g):
+            x, w = res
+            out_shape = (
+                jax.ShapeDtypeStruct(x.shape, x.dtype),
+                jax.ShapeDtypeStruct(w.shape, w.dtype),
+            )
+            return jax.pure_callback(
+                lambda xx, ww, gg: tuple(
+                    np.asarray(o, xx.dtype)
+                    for o in backend.conv_vjp(
+                        np.asarray(xx), np.asarray(ww), np.asarray(gg)
+                    )
+                ),
+                out_shape, x, w, g,
+            )
+
+        nconv.defvjp(nconv_fwd, nconv_bwd)
+
+        def conv_fn(params, x, padding: str = "SAME"):
+            y = nconv(x, params["kernel"].astype(x.dtype))
+            return y + params["bias"].astype(y.dtype)[None, None, None, :]
+
+        return conv_fn
+
+    raise KeyError(f"no conv_fn for backend {name!r}; available: {available_backends()}")

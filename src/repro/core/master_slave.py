@@ -17,6 +17,31 @@ The protocol per convolutional layer (Algorithm 1 lines 6-23):
   * master gathers the output feature maps and concatenates them,
   * master computes every non-convolutional layer alone.
 
+Beyond the seed implementation, two orthogonal upgrades:
+
+**Per-device compute backends** (core/backends.py): each device — the
+master and every slave — picks a conv backend by name (``numpy`` im2col,
+``xla`` jitted lax conv, ``pallas`` MXU kernels), so a cluster can mix
+numpy-CPU and pallas-TPU nodes, the paper's actual heterogeneous
+scenario.  The probe times the backend a device really runs, keeping the
+Eq. 1 shares exact.  NOTE: when the cluster is driven through
+``make_distributed_conv`` (jax host callbacks), the *master's* backend
+should stay ``numpy`` — re-entering jit dispatch on the runtime thread
+can deadlock — and slaves should avoid ``pallas`` in INTERPRET mode
+(interpret re-enters jax from the slave thread and can deadlock against
+the blocked callback; compiled TPU pallas and ``xla`` slaves are fine,
+as is any backend under direct ``conv_forward``/``conv_backward`` calls).
+
+**Asynchronous, pipelined scatter/gather**: the per-op barrier (scatter
+-> compute -> gather -> ack) is replaced by split ``scatter_*`` /
+``gather_*`` halves with FIFO ordering per socket.  With
+``pipeline=True`` the batch is cut into microbatches and double-buffered:
+the master issues the next microbatch's scatter while the slaves' results
+for the current one are still in flight, and ``conv_forward_chain`` keeps
+slave queues non-empty across consecutive conv layers so the master's
+non-conv work overlaps slave compute.  ``LayerTiming`` accounts the
+overlap window.
+
 Backward propagation is distributed the same way ("forward and backward
 propagation included", §1): each slave computes the VJP of its own kernel
 shard — dW for its shard and its partial dX — and the master sums the
@@ -28,27 +53,63 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backends import get_backend, numpy_conv, numpy_conv_vjp, probe_conv_time
 from repro.core.partitioner import allocate_kernels
 
 _TRAIN_OVER = "trainOver"
-_ALL_OK = "allOk"
 
 
 class _Socket:
-    """Queue pair standing in for the paper's TCP socket; counts traffic."""
+    """Queue pair standing in for the paper's TCP socket; counts traffic.
 
-    def __init__(self):
+    With ``bandwidth_mbps`` set, each direction gets a delivery thread
+    that sleeps ``bytes * 8 / bandwidth`` before handing a message over —
+    a full-duplex link of finite speed (the paper's ~5 Mbps Wi-Fi).
+    Writers return immediately (the NIC DMAs asynchronously), so comm
+    can genuinely overlap compute when the protocol allows it; messages
+    on one direction serialize, exactly like a real link."""
+
+    def __init__(self, bandwidth_mbps: Optional[float] = None):
         self.to_slave: "queue.Queue" = queue.Queue()
         self.to_master: "queue.Queue" = queue.Queue()
         self.bytes_to_slave = 0
         self.bytes_to_master = 0
         self._lock = threading.Lock()
+        self.bandwidth_mbps = bandwidth_mbps
+        if bandwidth_mbps is not None:
+            assert bandwidth_mbps > 0
+            self._stage_to_slave: "queue.Queue" = queue.Queue()
+            self._stage_to_master: "queue.Queue" = queue.Queue()
+            for stage, dest in (
+                (self._stage_to_slave, self.to_slave),
+                (self._stage_to_master, self.to_master),
+            ):
+                threading.Thread(
+                    target=self._deliver, args=(stage, dest), daemon=True
+                ).start()
+
+    _LINK_DOWN = object()  # sentinel: stops a delivery thread
+
+    def _deliver(self, stage: "queue.Queue", dest: "queue.Queue"):
+        while True:
+            item = stage.get()
+            if item is _Socket._LINK_DOWN:
+                return
+            obj, nbytes = item
+            time.sleep(nbytes * 8.0 / (self.bandwidth_mbps * 1e6))
+            dest.put(obj)
+
+    def close(self):
+        """Stop the delivery threads (queued messages drain first)."""
+        if self.bandwidth_mbps is not None:
+            self._stage_to_slave.put(_Socket._LINK_DOWN)
+            self._stage_to_master.put(_Socket._LINK_DOWN)
 
     def _nbytes(self, obj) -> int:
         if isinstance(obj, np.ndarray):
@@ -60,14 +121,22 @@ class _Socket:
         return 8  # flags / scalars, one double in the paper's protocol
 
     def write_to_slave(self, obj):
+        n = self._nbytes(obj)
         with self._lock:
-            self.bytes_to_slave += self._nbytes(obj)
-        self.to_slave.put(obj)
+            self.bytes_to_slave += n
+        if self.bandwidth_mbps is not None:
+            self._stage_to_slave.put((obj, n))
+        else:
+            self.to_slave.put(obj)
 
     def write_to_master(self, obj):
+        n = self._nbytes(obj)
         with self._lock:
-            self.bytes_to_master += self._nbytes(obj)
-        self.to_master.put(obj)
+            self.bytes_to_master += n
+        if self.bandwidth_mbps is not None:
+            self._stage_to_master.put((obj, n))
+        else:
+            self.to_master.put(obj)
 
     def read_on_slave(self):
         return self.to_slave.get()
@@ -80,103 +149,75 @@ class _Socket:
         return self.bytes_to_slave + self.bytes_to_master
 
 
-# The node compute is pure NumPy (im2col): the master's side runs inside
-# jax host callbacks, where re-entering jax (jit dispatch) can deadlock
-# the runtime thread — numpy is callback-safe and thread-safe.
+# Seed-compatible aliases: the numpy im2col conv now lives in
+# core/backends.py as the `numpy` backend (callback- and thread-safe).
+_conv = numpy_conv
+_conv_vjp = numpy_conv_vjp
 
 
-def _im2col(x: np.ndarray, kh: int, kw: int) -> np.ndarray:
-    """SAME-padded im2col.  x: (B,H,W,C) -> (B,H,W, kh*kw*C)."""
-    b, h, w, c = x.shape
-    ph, pw = kh // 2, kw // 2
-    xp = np.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
-    win = np.lib.stride_tricks.sliding_window_view(xp, (kh, kw), axis=(1, 2))
-    # win: (B, H, W, C, kh, kw) -> (B, H, W, kh, kw, C)
-    win = win.transpose(0, 1, 2, 4, 5, 3)
-    return np.ascontiguousarray(win).reshape(b, h, w, kh * kw * c)
+def _np_probe(*, slowdown: float = 1.0, **probe_kwargs) -> float:
+    """The paper's §4.1.1 probe on the numpy backend (seed behaviour)."""
+    return probe_conv_time("numpy", slowdown=slowdown, **probe_kwargs)
 
 
-def _conv(x: np.ndarray, w: np.ndarray) -> np.ndarray:
-    """NHWC x HWIO SAME conv, stride 1 (the slave's `convn`)."""
-    kh, kw, cin, cout = w.shape
-    cols = _im2col(np.asarray(x, np.float32), kh, kw)
-    y = cols.reshape(-1, kh * kw * cin) @ w.reshape(kh * kw * cin, cout)
-    return y.reshape(x.shape[0], x.shape[1], x.shape[2], cout)
-
-
-def _conv_vjp(x: np.ndarray, w: np.ndarray, g: np.ndarray):
-    """Returns (dx, dw) of sum(conv(x, w) * g)."""
-    x = np.asarray(x, np.float32)
-    g = np.asarray(g, np.float32)
-    kh, kw, cin, cout = w.shape
-    b, h, wd, _ = x.shape
-    cols = _im2col(x, kh, kw).reshape(-1, kh * kw * cin)
-    dw = (cols.T @ g.reshape(-1, cout)).reshape(kh, kw, cin, cout)
-    # dx: scatter the columns of dG @ W^T back into the padded image
-    dcols = (g.reshape(-1, cout) @ w.reshape(kh * kw * cin, cout).T).reshape(
-        b, h, wd, kh, kw, cin
-    )
-    ph, pw = kh // 2, kw // 2
-    dxp = np.zeros((b, h + kh - 1, wd + kw - 1, cin), np.float32)
-    for di in range(kh):
-        for dj in range(kw):
-            dxp[:, di : di + h, dj : dj + wd, :] += dcols[:, :, :, di, dj, :]
-    dx = dxp[:, ph : ph + h, pw : pw + wd, :]
-    return dx, dw
-
-
-def _np_probe(*, image_size: int, in_channels: int, kernel_size: int,
-              num_kernels: int, batch: int, repeats: int = 3,
-              slowdown: float = 1.0, seed: int = 0) -> float:
-    """The paper's §4.1.1 probe with the SAME kernel the nodes use for the
-    real workload (numpy im2col conv), so Eq. 1 ratios are exact."""
-    rng = np.random.default_rng(seed)
-    x = rng.normal(size=(batch, image_size, image_size, in_channels)).astype(np.float32)
-    w = rng.normal(size=(kernel_size, kernel_size, in_channels, num_kernels)).astype(np.float32)
-    _conv(x, w)  # warm caches
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        _conv(x, w)
-        times.append(time.perf_counter() - t0)
-    measured = float(np.median(times))
-    return measured * slowdown if slowdown > 1.0 else measured
-
-
-def _slave_loop(sock: _Socket, slowdown: float):
-    """Algorithm 2: read inputs/kernels, convolve, write outputs, repeat."""
+def _slave_loop(sock: _Socket, slowdown: float, backend_name: str):
+    """Algorithm 2, asynchronous: drain ops in FIFO order — read
+    inputs/kernels, convolve with this device's backend, write outputs.
+    No per-op ack: the master may queue several ops ahead (the pipeline);
+    results stream back in issue order."""
+    backend = None
+    cached_w = {}  # last kernel shard per op: pipelined microbatches after
+    #                the first send w=None instead of retransmitting it
     while True:
         msg = sock.read_on_slave()
         if msg == _TRAIN_OVER:
             return
         op, payload = msg
+        if backend is None:
+            backend = get_backend(backend_name)
+        if op == "probe":
+            sock.write_to_master(probe_conv_time(backend, slowdown=slowdown, **payload))
+            continue
         t0 = time.perf_counter()
         if op == "conv":
             x, w = payload
-            out = _conv(x, w)
+            w = cached_w[op] if w is None else w
+            cached_w[op] = w
+            out = backend.conv(x, w)
         elif op == "bwd":
             x, w, g = payload
-            out = _conv_vjp(x, w, g)
-        elif op == "probe":
-            kwargs = payload
-            out = _np_probe(slowdown=slowdown, **kwargs)
-            sock.write_to_master(out)
-            continue
+            w = cached_w[op] if w is None else w
+            cached_w[op] = w
+            out = backend.conv_vjp(x, w, g)
         else:  # pragma: no cover
             raise ValueError(f"unknown op {op}")
         elapsed = time.perf_counter() - t0
         if slowdown > 1.0:
             time.sleep(elapsed * (slowdown - 1.0))
         sock.write_to_master(out)
-        ack = sock.read_on_slave()
-        assert ack == _ALL_OK
 
 
 @dataclasses.dataclass
 class LayerTiming:
-    comm_s: float = 0.0
-    conv_s: float = 0.0
-    comp_s: float = 0.0  # non-conv layers (master only)
+    comm_s: float = 0.0         # scatter writes (master -> slave sockets)
+    conv_s: float = 0.0         # conv phase: master's shard + gather
+    comp_s: float = 0.0         # non-conv layers (master only)
+    gather_wait_s: float = 0.0  # time the master blocked on slave results
+    overlap_s: float = 0.0      # scatter->gather window minus the blocked
+    #                             wait: comm/compute genuinely overlapped
+
+
+@dataclasses.dataclass
+class _Pending:
+    """An in-flight scatter: the master's own shard is deferred to the
+    gather so issuing the NEXT scatter never waits on local compute."""
+
+    op: str                       # "conv" | "bwd"
+    seq: int                      # FIFO position; gathers must match
+    x: np.ndarray
+    my_w: np.ndarray              # master's kernel shard
+    my_g: Optional[np.ndarray]    # bwd only: master's grad slice
+    t_issued: float
 
 
 class HeteroCluster:
@@ -185,29 +226,68 @@ class HeteroCluster:
     Device 0 is the master itself (it convolves its own shard while the
     slaves work).  ``slowdowns[i]`` emulates device i's relative speed
     (1.0 = this host's full speed); slowdowns[0] applies to the master.
+
+    ``backends[i]`` names device i's conv backend (core/backends.py);
+    defaults to ``numpy`` everywhere, the seed behaviour.
+
+    ``pipeline=True`` enables the double-buffered microbatch protocol:
+    ``conv_forward``/``conv_backward`` split the batch into up to
+    ``microbatches`` slices and keep one scatter in flight ahead of every
+    gather.  With ``pipeline=False`` (default) every call is a single
+    scatter -> compute -> gather barrier, the paper's Algorithm 1.
+
+    ``bandwidth_mbps`` emulates finite master<->slave links (the paper's
+    ~5 Mbps Wi-Fi): message delivery is delayed by bytes/bandwidth on an
+    async delivery thread, so the pipelined protocol can hide transfer
+    time behind compute while the barrier protocol pays it serially.
+    Default ``None`` = infinitely fast links (the seed behaviour).
     """
 
-    def __init__(self, slowdowns: Sequence[float]):
+    def __init__(
+        self,
+        slowdowns: Sequence[float],
+        backends: Optional[Sequence[str]] = None,
+        *,
+        pipeline: bool = False,
+        microbatches: int = 4,
+        bandwidth_mbps: Optional[float] = None,
+    ):
         assert len(slowdowns) >= 1
         self.slowdowns = list(slowdowns)
         self.n_slaves = len(slowdowns) - 1
-        self.sockets = [_Socket() for _ in range(self.n_slaves)]
+        if backends is None:
+            backends = ["numpy"] * len(self.slowdowns)
+        assert len(backends) == len(self.slowdowns), "one backend per device"
+        self.backends = list(backends)
+        # resolve every name NOW: an unknown backend must raise here, not
+        # kill a slave thread later and leave the master blocked forever
+        for name in self.backends:
+            get_backend(name)
+        self._master_backend = get_backend(self.backends[0])
+        self.pipeline = bool(pipeline)
+        self.microbatches = int(microbatches)
+        self.sockets = [_Socket(bandwidth_mbps) for _ in range(self.n_slaves)]
         self.threads = [
             threading.Thread(
-                target=_slave_loop, args=(s, sd), daemon=True
+                target=_slave_loop, args=(s, sd, bk), daemon=True
             )
-            for s, sd in zip(self.sockets, self.slowdowns[1:])
+            for s, sd, bk in zip(self.sockets, self.slowdowns[1:], self.backends[1:])
         ]
         for t in self.threads:
             t.start()
         self.probe_times: Optional[List[float]] = None
         self.timing = LayerTiming()
+        self._seq_issued = 0
+        self._seq_gathered = 0
 
     # -- §4.1.1 pre-processing -------------------------------------------
     def probe(self, **probe_kwargs) -> List[float]:
-        """Every device runs the timed reference convolution — sequential
-        so the 1-core host's timings do not interfere."""
-        master_t = _np_probe(slowdown=self.slowdowns[0], **probe_kwargs)
+        """Every device runs the timed reference convolution on its OWN
+        backend — sequential so the 1-core host's timings do not
+        interfere."""
+        master_t = probe_conv_time(
+            self._master_backend, slowdown=self.slowdowns[0], **probe_kwargs
+        )
         slave_ts = []
         for s in self.sockets:
             s.write_to_slave(("probe", probe_kwargs))
@@ -219,60 +299,208 @@ class HeteroCluster:
         assert self.probe_times is not None, "run probe() first"
         return allocate_kernels(num_kernels, self.probe_times)
 
-    # -- Algorithm 1, the conv layer loop --------------------------------
+    # -- async scatter/gather halves -------------------------------------
     def _split(self, w: np.ndarray, counts: np.ndarray) -> List[np.ndarray]:
         edges = np.cumsum(counts)[:-1]
         return np.split(w, edges, axis=-1)
 
-    def conv_forward(self, x: np.ndarray, w: np.ndarray) -> np.ndarray:
-        """Distributed convolution: broadcast x, scatter kernel shards,
-        gather and concatenate feature maps."""
-        counts = self.shares_for(w.shape[-1])
-        shards = self._split(w, counts)
+    def scatter_conv(self, x: np.ndarray, w: np.ndarray) -> _Pending:
+        """Broadcast x + scatter kernel shards to the slaves; returns a
+        handle.  The master's own shard runs at gather time."""
+        shards = self._split(w, self.shares_for(w.shape[-1]))
+        return self._scatter_conv_shards(x, shards, send_weights=True)
+
+    def _scatter_conv_shards(
+        self, x: np.ndarray, shards: List[np.ndarray], send_weights: bool
+    ) -> _Pending:
+        """send_weights=False sends w=None: the slave reuses its cached
+        shard, so pipelined microbatches pay the weight traffic once."""
         t0 = time.perf_counter()
         for sock, shard in zip(self.sockets, shards[1:]):
-            sock.write_to_slave(("conv", (x, shard)))
-        self.timing.comm_s += time.perf_counter() - t0
+            sock.write_to_slave(("conv", (x, shard if send_weights else None)))
+        now = time.perf_counter()
+        self.timing.comm_s += now - t0
+        self._seq_issued += 1
+        return _Pending("conv", self._seq_issued, x, shards[0], None, now)
 
+    def gather_conv(self, p: _Pending) -> np.ndarray:
+        """Compute the master's shard, collect the slaves' feature maps
+        (FIFO: gathers must be issued in scatter order), concatenate."""
+        self._check_order(p, "conv")
         t0 = time.perf_counter()
-        my_out = _conv(x, shards[0])
+        my_out = self._master_compute(lambda: self._master_backend.conv(p.x, p.my_w))
+        outs = [my_out]
+        t_wait = time.perf_counter()
+        for sock in self.sockets:
+            outs.append(sock.read_on_master())
+        t1 = time.perf_counter()
+        self._account_gather(p, t0, t_wait, t1)
+        return np.concatenate(outs, axis=-1)
+
+    def scatter_bwd(self, x: np.ndarray, w: np.ndarray, g: np.ndarray) -> _Pending:
+        counts = self.shares_for(w.shape[-1])
+        return self._scatter_bwd_shards(
+            x, self._split(w, counts), g, counts, send_weights=True
+        )
+
+    def _scatter_bwd_shards(
+        self,
+        x: np.ndarray,
+        w_shards: List[np.ndarray],
+        g: np.ndarray,
+        counts: np.ndarray,
+        send_weights: bool,
+    ) -> _Pending:
+        g_shards = self._split(g, counts)
+        t0 = time.perf_counter()
+        for sock, ws, gs in zip(self.sockets, w_shards[1:], g_shards[1:]):
+            sock.write_to_slave(("bwd", (x, ws if send_weights else None, gs)))
+        now = time.perf_counter()
+        self.timing.comm_s += now - t0
+        self._seq_issued += 1
+        return _Pending("bwd", self._seq_issued, x, w_shards[0], g_shards[0], now)
+
+    def gather_bwd(self, p: _Pending) -> Tuple[np.ndarray, np.ndarray]:
+        """Master's shard VJP + gather: sum partial dX, concat dW shards."""
+        self._check_order(p, "bwd")
+        t0 = time.perf_counter()
+        dx, dw0 = self._master_compute(
+            lambda: self._master_backend.conv_vjp(p.x, p.my_w, p.my_g)
+        )
+        dws = [dw0]
+        t_wait = time.perf_counter()
+        for sock in self.sockets:
+            dxi, dwi = sock.read_on_master()
+            dx = dx + dxi
+            dws.append(dwi)
+        t1 = time.perf_counter()
+        self._account_gather(p, t0, t_wait, t1)
+        return dx, np.concatenate(dws, axis=-1)
+
+    def _check_order(self, p: _Pending, op: str):
+        # real exceptions, not asserts: an out-of-order gather would pair
+        # one scatter's master shard with another's slave outputs and
+        # return silently corrupted feature maps (and -O strips asserts)
+        if p.op != op:
+            raise RuntimeError(f"pending is a {p.op!r} op, gathered as {op!r}")
+        if p.seq != self._seq_gathered + 1:
+            raise RuntimeError(
+                "gathers must follow scatter order (FIFO sockets): "
+                f"expected seq {self._seq_gathered + 1}, got {p.seq}"
+            )
+        self._seq_gathered = p.seq
+
+    def _master_compute(self, fn: Callable):
+        t0 = time.perf_counter()
+        out = fn()
         el = time.perf_counter() - t0
         if self.slowdowns[0] > 1.0:
             time.sleep(el * (self.slowdowns[0] - 1.0))
-        outs = [my_out]
-        for sock in self.sockets:
-            outs.append(sock.read_on_master())
-            sock.write_to_slave(_ALL_OK)
-        self.timing.conv_s += time.perf_counter() - t0
-        return np.concatenate(outs, axis=-1)
+        return out
+
+    def _account_gather(self, p: _Pending, t0: float, t_wait: float, t1: float):
+        self.timing.conv_s += t1 - t0
+        self.timing.gather_wait_s += t1 - t_wait
+        # in-flight window minus the time the master actually blocked:
+        # the comm/compute overlap the pipeline buys
+        self.timing.overlap_s += max(0.0, (t_wait - p.t_issued))
+
+    # -- Algorithm 1, the conv layer loop --------------------------------
+    def _n_micro(self, batch: int) -> int:
+        if not self.pipeline:
+            return 1
+        return max(1, min(self.microbatches, batch))
+
+    def conv_forward(self, x: np.ndarray, w: np.ndarray) -> np.ndarray:
+        """Distributed convolution: broadcast x, scatter kernel shards,
+        gather and concatenate feature maps.  Pipelined mode double-
+        buffers microbatches along the batch axis."""
+        n = self._n_micro(x.shape[0])
+        if n == 1:
+            return self.gather_conv(self.scatter_conv(x, w))
+        parts = np.array_split(x, n, axis=0)
+        shards = self._split(w, self.shares_for(w.shape[-1]))
+        outs = []
+        pending = self._scatter_conv_shards(parts[0], shards, True)
+        for nxt in parts[1:]:
+            # next scatter in flight; slaves reuse the cached shard
+            nxt_pending = self._scatter_conv_shards(nxt, shards, False)
+            outs.append(self.gather_conv(pending))
+            pending = nxt_pending
+        outs.append(self.gather_conv(pending))
+        return np.concatenate(outs, axis=0)
 
     def conv_backward(
         self, x: np.ndarray, w: np.ndarray, g: np.ndarray
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Distributed VJP: each node takes the output-gradient slice of
         its own kernels, returns (partial dX, its dW shard); the master
-        sums dX and concatenates dW."""
+        sums dX and concatenates dW.  Pipelined mode double-buffers
+        microbatches; per-microbatch dW shards are summed."""
+        n = self._n_micro(x.shape[0])
+        if n == 1:
+            return self.gather_bwd(self.scatter_bwd(x, w, g))
+        xs = np.array_split(x, n, axis=0)
+        gs = np.array_split(g, n, axis=0)
         counts = self.shares_for(w.shape[-1])
         w_shards = self._split(w, counts)
-        g_shards = self._split(g, counts)
-        t0 = time.perf_counter()
-        for sock, ws, gs in zip(self.sockets, w_shards[1:], g_shards[1:]):
-            sock.write_to_slave(("bwd", (x, ws, gs)))
-        self.timing.comm_s += time.perf_counter() - t0
+        dxs: List[np.ndarray] = []
+        dw_total: Optional[np.ndarray] = None
+        pending = self._scatter_bwd_shards(xs[0], w_shards, gs[0], counts, True)
+        for xi, gi in zip(xs[1:], gs[1:]):
+            nxt_pending = self._scatter_bwd_shards(xi, w_shards, gi, counts, False)
+            dx_i, dw_i = self.gather_bwd(pending)
+            dxs.append(dx_i)
+            dw_total = dw_i if dw_total is None else dw_total + dw_i
+            pending = nxt_pending
+        dx_i, dw_i = self.gather_bwd(pending)
+        dxs.append(dx_i)
+        dw_total = dw_i if dw_total is None else dw_total + dw_i
+        return np.concatenate(dxs, axis=0), dw_total
 
+    def conv_forward_chain(
+        self,
+        x: np.ndarray,
+        layer_weights: Sequence[np.ndarray],
+        between: Optional[Sequence[Optional[Callable[[np.ndarray], np.ndarray]]]] = None,
+    ) -> np.ndarray:
+        """Run consecutive conv layers over the cluster; ``between[k]``
+        is the master-only non-conv stage after layer k (ReLU/LRN/pool).
+
+        In pipelined mode the microbatches are double-buffered through
+        each layer, so the master's between-layer work for microbatch i
+        overlaps the slaves' convolutions for microbatch i+1 — the
+        slave queues stay non-empty across the whole chain.  In barrier
+        mode every layer is scatter -> compute -> gather -> between on
+        the full batch, the paper's schedule."""
+        if between is None:
+            between = [None] * len(layer_weights)
+        assert len(between) == len(layer_weights)
+        n = self._n_micro(x.shape[0])
+        parts: List[np.ndarray] = np.array_split(x, n, axis=0) if n > 1 else [x]
+        for w, f in zip(layer_weights, between):
+            if len(parts) == 1:
+                y = self.gather_conv(self.scatter_conv(parts[0], w))
+                parts = [self._master_comp(f, y) if f else y]
+                continue
+            shards = self._split(w, self.shares_for(w.shape[-1]))
+            outs: List[np.ndarray] = []
+            pending = self._scatter_conv_shards(parts[0], shards, True)
+            for nxt in parts[1:]:
+                nxt_pending = self._scatter_conv_shards(nxt, shards, False)
+                y = self.gather_conv(pending)
+                outs.append(self._master_comp(f, y) if f else y)
+                pending = nxt_pending
+            y = self.gather_conv(pending)
+            outs.append(self._master_comp(f, y) if f else y)
+            parts = outs
+        return np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+
+    def _master_comp(self, f: Callable, y: np.ndarray) -> np.ndarray:
         t0 = time.perf_counter()
-        dx, dw0 = _conv_vjp(x, w_shards[0], g_shards[0])
-        el = time.perf_counter() - t0
-        if self.slowdowns[0] > 1.0:
-            time.sleep(el * (self.slowdowns[0] - 1.0))
-        dws = [dw0]
-        for sock in self.sockets:
-            dxi, dwi = sock.read_on_master()
-            dx = dx + dxi
-            dws.append(dwi)
-            sock.write_to_slave(_ALL_OK)
-        self.timing.conv_s += time.perf_counter() - t0
-        return dx, np.concatenate(dws, axis=-1)
+        out = f(y)
+        self.timing.comp_s += time.perf_counter() - t0
+        return out
 
     # ---------------------------------------------------------------------
     @property
@@ -290,11 +518,16 @@ class HeteroCluster:
             s.write_to_slave(_TRAIN_OVER)
         for t in self.threads:
             t.join(timeout=10)
+        for s in self.sockets:
+            s.close()
 
 
 def make_distributed_conv(cluster: HeteroCluster):
     """A drop-in ``conv_fn`` for models/cnn.py: jax custom-VJP convolution
-    whose forward and backward run over the cluster via callbacks."""
+    whose forward and backward run over the cluster via callbacks.  If the
+    cluster is pipelined, every conv call is internally microbatched and
+    double-buffered; keep the master's backend ``numpy`` here (see module
+    docstring)."""
 
     @jax.custom_vjp
     def dconv(x, w, b):

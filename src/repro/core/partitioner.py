@@ -86,8 +86,33 @@ class DeviceProfile:
     name: str
     conv_time: float  # seconds for the reference conv workload
     bandwidth_mbps: float = 5.0  # link to the master (paper: ~5 Mbps Wi-Fi)
+    backend: str = "numpy"  # conv compute backend the device runs (core/backends.py)
 
     @property
     def gflops(self) -> float:
         # informational only; the partitioner uses times, not FLOPs
         return 1.0 / self.conv_time
+
+
+def probe_device(
+    name: str,
+    backend: str = "numpy",
+    *,
+    slowdown: float = 1.0,
+    bandwidth_mbps: float = 5.0,
+    **probe_kwargs,
+) -> DeviceProfile:
+    """Run the §4.1.1 reference convolution on the named compute backend
+    and return the resulting profile.  Probing the backend a device will
+    actually run keeps the Eq. 1 shares exact for mixed-backend clusters
+    (probe_kwargs: image_size, in_channels, kernel_size, num_kernels,
+    batch, repeats, seed — see core/backends.py)."""
+    from repro.core.backends import probe_conv_time
+
+    t = probe_conv_time(backend, slowdown=slowdown, **probe_kwargs)
+    return DeviceProfile(name, t, bandwidth_mbps, backend)
+
+
+def profiles_to_shares(profiles: Sequence[DeviceProfile]) -> np.ndarray:
+    """Eq. 1 over a probed device set."""
+    return workload_shares([p.conv_time for p in profiles])

@@ -43,6 +43,37 @@ def _conv2d_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, out_h: int, out_w: 
     o_ref[0] = acc.reshape(out_h, out_w, tco).astype(o_ref.dtype)
 
 
+def _direct_conv(xp: jax.Array, w: jax.Array, out_h: int, out_w: int,
+                 cout_tile: int, interpret: bool) -> jax.Array:
+    """Shared driver: pre-padded input xp (B, out_h+kh-1, out_w+kw-1, Cin)
+    against w (kh, kw, Cin, Cout), tiled over batch x Cout."""
+    b = xp.shape[0]
+    kh, kw, cin, cout = w.shape
+
+    tco = min(cout_tile, cout)
+    pad_co = (-cout) % tco
+    if pad_co:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, pad_co)))
+    n_co = w.shape[-1] // tco
+
+    out = pl.pallas_call(
+        functools.partial(_conv2d_kernel, kh=kh, kw=kw, out_h=out_h, out_w=out_w),
+        grid=(b, n_co),
+        in_specs=[
+            pl.BlockSpec(
+                (1, out_h + kh - 1, out_w + kw - 1, cin), lambda bi, ci: (bi, 0, 0, 0)
+            ),
+            pl.BlockSpec((kh, kw, cin, tco), lambda bi, ci: (0, 0, 0, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, out_h, out_w, tco), lambda bi, ci: (bi, 0, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((b, out_h, out_w, w.shape[-1]), xp.dtype),
+        interpret=interpret,
+    )(xp, w)
+    if pad_co:
+        out = out[..., :cout]
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "cout_tile"))
 def conv2d_pallas(
     x: jax.Array,  # (B, H, W, Cin)
@@ -56,26 +87,91 @@ def conv2d_pallas(
     kh, kw, _, cout = w.shape
     ph, pw = kh // 2, kw // 2
     xp = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+    return _direct_conv(xp, w, h, wd, cout_tile, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "cin_tile"))
+def conv2d_dx_pallas(
+    g: jax.Array,  # (B, H, W, Cout) — upstream gradient
+    w: jax.Array,  # (kh, kw, Cin, Cout) — the forward kernel (shard)
+    *,
+    cin_tile: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """dX of the SAME stride-1 conv: the transpose convolution, expressed
+    as a direct conv of g against the spatially flipped, channel-swapped
+    kernel — so it reuses the exact forward MXU kernel with Cin as the
+    tiled output axis.  The pad is the complement of the forward pad
+    (identical for odd kernels)."""
+    kh, kw = w.shape[0], w.shape[1]
+    ph, pw = kh // 2, kw // 2
+    wt = jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2)  # (kh, kw, Cout, Cin)
+    gp = jnp.pad(g, ((0, 0), (kh - 1 - ph, ph), (kw - 1 - pw, pw), (0, 0)))
+    return _direct_conv(gp, wt, g.shape[1], g.shape[2], cin_tile, interpret)
+
+
+def _conv2d_dw_kernel(x_ref, g_ref, o_ref, *, kh: int, kw: int, out_h: int, out_w: int):
+    """x_ref: (1, out_h+kh-1, out_w+kw-1, cin) padded input block (VMEM)
+    g_ref: (1, out_h, out_w, tco); o_ref: (kh, kw, cin, tco), accumulated
+    over the batch grid axis (innermost, so writes are consecutive)."""
+    cin = x_ref.shape[-1]
+    tco = g_ref.shape[-1]
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros(o_ref.shape, o_ref.dtype)
+
+    gs = g_ref[0].reshape(out_h * out_w, tco).astype(jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            xs = x_ref[0, i : i + out_h, j : j + out_w, :].reshape(
+                out_h * out_w, cin
+            ).astype(jnp.float32)
+            # contract the pixel axis: (cin, tco) += xs^T @ gs on the MXU
+            o_ref[i, j] += jax.lax.dot_general(
+                xs, gs, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw", "interpret", "cout_tile"))
+def conv2d_dw_pallas(
+    x: jax.Array,  # (B, H, W, Cin)
+    g: jax.Array,  # (B, H, W, Cout)
+    kh: int,
+    kw: int,
+    *,
+    cout_tile: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """dW of the SAME stride-1 conv: per-tap (Cin, Cout) matmuls between
+    shifted input windows and the upstream gradient, accumulated across
+    the batch in fp32 (batch is the innermost grid axis so each Cout tile
+    of dW is revisited consecutively)."""
+    b, h, wd, cin = x.shape
+    cout = g.shape[-1]
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
 
     tco = min(cout_tile, cout)
     pad_co = (-cout) % tco
     if pad_co:
-        w = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, pad_co)))
-    n_co = w.shape[-1] // tco
+        g = jnp.pad(g, ((0, 0), (0, 0), (0, 0), (0, pad_co)))
+    n_co = g.shape[-1] // tco
 
     out = pl.pallas_call(
-        functools.partial(_conv2d_kernel, kh=kh, kw=kw, out_h=h, out_w=wd),
-        grid=(b, n_co),
+        functools.partial(_conv2d_dw_kernel, kh=kh, kw=kw, out_h=h, out_w=wd),
+        grid=(n_co, b),
         in_specs=[
             pl.BlockSpec(
-                (1, h + kh - 1, wd + kw - 1, cin), lambda bi, ci: (bi, 0, 0, 0)
+                (1, h + kh - 1, wd + kw - 1, cin), lambda ci, bi: (bi, 0, 0, 0)
             ),
-            pl.BlockSpec((kh, kw, cin, tco), lambda bi, ci: (0, 0, 0, ci)),
+            pl.BlockSpec((1, h, wd, tco), lambda ci, bi: (bi, 0, 0, ci)),
         ],
-        out_specs=pl.BlockSpec((1, h, wd, tco), lambda bi, ci: (bi, 0, 0, ci)),
-        out_shape=jax.ShapeDtypeStruct((b, h, wd, w.shape[-1]), x.dtype),
+        out_specs=pl.BlockSpec((kh, kw, cin, tco), lambda ci, bi: (0, 0, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((kh, kw, cin, g.shape[-1]), jnp.float32),
         interpret=interpret,
-    )(xp, w)
+    )(xp, g)
     if pad_co:
         out = out[..., :cout]
     return out

@@ -55,6 +55,18 @@ def cnn_axes():
     }
 
 
+def conv_fn_for_backend(backend: str = "xla", *, interpret=None):
+    """Return a ``conv_fn`` for ``cnn_forward`` that computes the
+    convolutions with the named compute backend (core/backends.py):
+    ``xla`` (lax conv, the default reference), ``pallas`` (the MXU
+    kernels forward + Pallas dX/dW backward), or ``numpy`` (im2col via
+    host callback).  The distributed variants stay separate:
+    core/conv_shard.py (mesh) and core/master_slave.py (cluster)."""
+    from repro.core.backends import make_conv_fn
+
+    return make_conv_fn(backend, interpret=interpret)
+
+
 def cnn_forward(params, images: jax.Array, *, cfg: CNNConfig,
                 conv_fn=apply_conv) -> jax.Array:
     """images: (B, 32, 32, 3) NHWC -> logits (B, 10).

@@ -3,3 +3,16 @@ import sys
 
 # src/ layout import without install
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property tests use hypothesis (pinned in requirements-dev.txt, installed
+# in CI).  On minimal hosts without it, install the deterministic stub so
+# every test module still collects and the properties still run.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - exercised only on minimal hosts
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    _mod = _hypothesis_stub.build_module()
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
