@@ -40,7 +40,8 @@ MODULES = {
     "device_range": bench_device_range,  # Figs 11/12
     "mobile": bench_mobile,          # Fig 13
     "data_parallel": bench_data_parallel,  # Table 1 baseline
-    "master_slave": bench_master_slave,  # Alg 1/2 real wall-clock
+    "master_slave": bench_master_slave,  # Alg 1/2 real wall-clock + the
+    #                                      pipelined full-train-step gain
     "kernels": bench_kernels,        # Pallas kernel rooflines + backends
 }
 

@@ -46,6 +46,26 @@ Backward propagation is distributed the same way ("forward and backward
 propagation included", §1): each slave computes the VJP of its own kernel
 shard — dW for its shard and its partial dX — and the master sums the
 partial dX contributions (the gather of the backward pass).
+
+``conv_train_chain`` / ``conv_train_step`` extend the pipeline to the
+WHOLE training step: the forward chain stashes each conv layer's input
+and the VJP of every master-only between stage, the master computes the
+loss head, and the backward chain reuses the same ``_Pending`` FIFO and
+microbatch machinery for the ``bwd`` op — the backward scatter of layer
+k is issued while layer k+1's backward gathers (and the master's
+between-VJP / head gradients) are still in flight, so a real training
+step hides the per-layer barrier cost, not just the forward.  Unlike
+the depth-2 ``conv_forward_chain``, the train chain keeps up to
+``microbatches`` ops in flight per phase boundary (the total queued
+bytes still equal ONE barrier-mode scatter of the full batch); a real
+flow-controlled transport behind ``_Socket`` would need a window of
+that many messages.
+
+The cluster is also *comp-aware* (``comp_aware=True``): the master's
+measured non-conv duty (``LayerTiming.comp_s`` vs its own conv time)
+automatically discounts its Eq. 1 share, since a master busy with
+ReLU/LRN/pool/fc work has proportionally less throughput left for its
+conv shard.
 """
 from __future__ import annotations
 
@@ -53,6 +73,7 @@ import dataclasses
 import queue
 import threading
 import time
+import traceback
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -60,7 +81,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.backends import get_backend, numpy_conv, numpy_conv_vjp, probe_conv_time
-from repro.core.partitioner import allocate_kernels
+from repro.core.partitioner import allocate_kernels, comp_aware_times
 
 _TRAIN_OVER = "trainOver"
 
@@ -160,11 +181,38 @@ def _np_probe(*, slowdown: float = 1.0, **probe_kwargs) -> float:
     return probe_conv_time("numpy", slowdown=slowdown, **probe_kwargs)
 
 
-def _slave_loop(sock: _Socket, slowdown: float, backend_name: str):
+class _SlaveError:
+    """A slave's exception, shipped to the master instead of silently
+    killing the slave thread (which would hang the master's gather)."""
+
+    def __init__(self, device: int, tb: str):
+        self.device = device
+        self.tb = tb
+
+
+def _conv_shard(backend, x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Backend conv with the 0-kernel fast path: comp-aware shares (or a
+    very slow device) may legally allocate 0 kernels, which not every
+    backend kernel tolerates (pallas grid math divides by cout)."""
+    if w.shape[-1] == 0:
+        return np.zeros(x.shape[:-1] + (0,), np.float32)
+    return backend.conv(x, w)
+
+
+def _bwd_shard(backend, x, w, g) -> Tuple[np.ndarray, np.ndarray]:
+    """Backend conv_vjp with the 0-kernel fast path (see _conv_shard)."""
+    if w.shape[-1] == 0:
+        return np.zeros(x.shape, np.float32), np.zeros(w.shape, np.float32)
+    return backend.conv_vjp(x, w, g)
+
+
+def _slave_loop(sock: _Socket, slowdown: float, backend_name: str, device: int):
     """Algorithm 2, asynchronous: drain ops in FIFO order — read
     inputs/kernels, convolve with this device's backend, write outputs.
     No per-op ack: the master may queue several ops ahead (the pipeline);
-    results stream back in issue order."""
+    results stream back in issue order.  A compute exception is shipped
+    back as a _SlaveError (the master raises it at the matching gather)
+    so a broken backend fails loudly instead of hanging the protocol."""
     backend = None
     cached_w = {}  # last kernel shard per op: pipelined microbatches after
     #                the first send w=None instead of retransmitting it
@@ -173,27 +221,33 @@ def _slave_loop(sock: _Socket, slowdown: float, backend_name: str):
         if msg == _TRAIN_OVER:
             return
         op, payload = msg
-        if backend is None:
-            backend = get_backend(backend_name)
-        if op == "probe":
-            sock.write_to_master(probe_conv_time(backend, slowdown=slowdown, **payload))
+        try:
+            if backend is None:
+                backend = get_backend(backend_name)
+            if op == "probe":
+                sock.write_to_master(
+                    probe_conv_time(backend, slowdown=slowdown, **payload)
+                )
+                continue
+            t0 = time.perf_counter()
+            if op == "conv":
+                x, w = payload
+                w = cached_w[op] if w is None else w
+                cached_w[op] = w
+                out = _conv_shard(backend, x, w)
+            elif op == "bwd":
+                x, w, g = payload
+                w = cached_w[op] if w is None else w
+                cached_w[op] = w
+                out = _bwd_shard(backend, x, w, g)
+            else:  # pragma: no cover
+                raise ValueError(f"unknown op {op}")
+            elapsed = time.perf_counter() - t0
+            if slowdown > 1.0:
+                time.sleep(elapsed * (slowdown - 1.0))
+        except Exception:
+            sock.write_to_master(_SlaveError(device, traceback.format_exc()))
             continue
-        t0 = time.perf_counter()
-        if op == "conv":
-            x, w = payload
-            w = cached_w[op] if w is None else w
-            cached_w[op] = w
-            out = backend.conv(x, w)
-        elif op == "bwd":
-            x, w, g = payload
-            w = cached_w[op] if w is None else w
-            cached_w[op] = w
-            out = backend.conv_vjp(x, w, g)
-        else:  # pragma: no cover
-            raise ValueError(f"unknown op {op}")
-        elapsed = time.perf_counter() - t0
-        if slowdown > 1.0:
-            time.sleep(elapsed * (slowdown - 1.0))
         sock.write_to_master(out)
 
 
@@ -205,6 +259,17 @@ class LayerTiming:
     gather_wait_s: float = 0.0  # time the master blocked on slave results
     overlap_s: float = 0.0      # scatter->gather window minus the blocked
     #                             wait: comm/compute genuinely overlapped
+    master_conv_s: float = 0.0  # master's own conv/bwd shard compute — the
+    #                             denominator of its non-conv duty
+
+
+@dataclasses.dataclass
+class TrainStepResult:
+    """What one distributed training step hands back to the driver."""
+
+    head_aux: list                 # per-microbatch head outputs (loss, ...)
+    dw: List[np.ndarray]           # kernel gradient per conv layer
+    dx: np.ndarray                 # gradient wrt the chain input
 
 
 @dataclasses.dataclass
@@ -241,6 +306,13 @@ class HeteroCluster:
     async delivery thread, so the pipelined protocol can hide transfer
     time behind compute while the barrier protocol pays it serially.
     Default ``None`` = infinitely fast links (the seed behaviour).
+
+    ``comp_aware=True`` (default) makes the Eq. 1 shares discount the
+    master's measured non-conv duty: once ``conv_forward_chain`` or
+    ``conv_train_chain`` has observed master-only between/head work
+    (``LayerTiming.comp_s`` vs ``master_conv_s``), ``shares_for`` inflates
+    the master's probe time by ``1/(1-duty)`` automatically — the share
+    bench_master_slave used to pin by hand.
     """
 
     def __init__(
@@ -251,6 +323,7 @@ class HeteroCluster:
         pipeline: bool = False,
         microbatches: int = 4,
         bandwidth_mbps: Optional[float] = None,
+        comp_aware: bool = True,
     ):
         assert len(slowdowns) >= 1
         self.slowdowns = list(slowdowns)
@@ -269,14 +342,19 @@ class HeteroCluster:
         self.sockets = [_Socket(bandwidth_mbps) for _ in range(self.n_slaves)]
         self.threads = [
             threading.Thread(
-                target=_slave_loop, args=(s, sd, bk), daemon=True
+                target=_slave_loop, args=(s, sd, bk, i), daemon=True
             )
-            for s, sd, bk in zip(self.sockets, self.slowdowns[1:], self.backends[1:])
+            for i, (s, sd, bk) in enumerate(
+                zip(self.sockets, self.slowdowns[1:], self.backends[1:]), start=1
+            )
         ]
         for t in self.threads:
             t.start()
         self.probe_times: Optional[List[float]] = None
         self.timing = LayerTiming()
+        self.comp_aware = bool(comp_aware)
+        self.comp_duty = 0.0  # measured master non-conv duty (see shares_for)
+        self._duty_mark = (0.0, 0.0)  # (comp_s, master_conv_s) at last update
         self._seq_issued = 0
         self._seq_gathered = 0
 
@@ -291,13 +369,32 @@ class HeteroCluster:
         slave_ts = []
         for s in self.sockets:
             s.write_to_slave(("probe", probe_kwargs))
-            slave_ts.append(s.read_on_master())
+            slave_ts.append(self._check_result(s.read_on_master()))
         self.probe_times = [master_t] + slave_ts
         return self.probe_times
 
     def shares_for(self, num_kernels: int) -> np.ndarray:
+        """Eq. 1 kernel counts from the probe times; with ``comp_aware``
+        the master's measured non-conv duty discounts its share."""
         assert self.probe_times is not None, "run probe() first"
-        return allocate_kernels(num_kernels, self.probe_times)
+        times = self.probe_times
+        if self.comp_aware and self.comp_duty > 0.0:
+            times = comp_aware_times(times, self.comp_duty)
+        return allocate_kernels(num_kernels, times)
+
+    def _update_comp_duty(self):
+        """Refresh the measured non-conv duty — the fraction of the
+        master's busy time spent OUTSIDE its conv shard — from the window
+        since the LAST update (deltas, not cumulative): a one-off cost in
+        an early step (jit compilation of the master-only stages, cold
+        caches) then mis-shapes at most the next step's shares before the
+        first clean window corrects it."""
+        t = self.timing
+        dc = t.comp_s - self._duty_mark[0]
+        dm = t.master_conv_s - self._duty_mark[1]
+        self._duty_mark = (t.comp_s, t.master_conv_s)
+        if dc + dm > 0.0:
+            self.comp_duty = dc / (dc + dm)
 
     # -- async scatter/gather halves -------------------------------------
     def _split(self, w: np.ndarray, counts: np.ndarray) -> List[np.ndarray]:
@@ -328,11 +425,11 @@ class HeteroCluster:
         (FIFO: gathers must be issued in scatter order), concatenate."""
         self._check_order(p, "conv")
         t0 = time.perf_counter()
-        my_out = self._master_compute(lambda: self._master_backend.conv(p.x, p.my_w))
+        my_out = self._master_compute(lambda: _conv_shard(self._master_backend, p.x, p.my_w))
         outs = [my_out]
         t_wait = time.perf_counter()
         for sock in self.sockets:
-            outs.append(sock.read_on_master())
+            outs.append(self._check_result(sock.read_on_master()))
         t1 = time.perf_counter()
         self._account_gather(p, t0, t_wait, t1)
         return np.concatenate(outs, axis=-1)
@@ -365,17 +462,27 @@ class HeteroCluster:
         self._check_order(p, "bwd")
         t0 = time.perf_counter()
         dx, dw0 = self._master_compute(
-            lambda: self._master_backend.conv_vjp(p.x, p.my_w, p.my_g)
+            lambda: _bwd_shard(self._master_backend, p.x, p.my_w, p.my_g)
         )
         dws = [dw0]
         t_wait = time.perf_counter()
         for sock in self.sockets:
-            dxi, dwi = sock.read_on_master()
+            dxi, dwi = self._check_result(sock.read_on_master())
             dx = dx + dxi
             dws.append(dwi)
         t1 = time.perf_counter()
         self._account_gather(p, t0, t_wait, t1)
         return dx, np.concatenate(dws, axis=-1)
+
+    def _check_result(self, out):
+        """Re-raise a slave's shipped exception at the gather that would
+        otherwise consume its (missing) result."""
+        if isinstance(out, _SlaveError):
+            raise RuntimeError(
+                f"slave device {out.device} failed while computing its "
+                f"shard:\n{out.tb}"
+            )
+        return out
 
     def _check_order(self, p: _Pending, op: str):
         # real exceptions, not asserts: an out-of-order gather would pair
@@ -396,6 +503,7 @@ class HeteroCluster:
         el = time.perf_counter() - t0
         if self.slowdowns[0] > 1.0:
             time.sleep(el * (self.slowdowns[0] - 1.0))
+        self.timing.master_conv_s += time.perf_counter() - t0
         return out
 
     def _account_gather(self, p: _Pending, t0: float, t_wait: float, t1: float):
@@ -494,6 +602,7 @@ class HeteroCluster:
             y = self.gather_conv(pending)
             outs.append(self._master_comp(f, y) if f else y)
             parts = outs
+        self._update_comp_duty()
         return np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
 
     def _master_comp(self, f: Callable, y: np.ndarray) -> np.ndarray:
@@ -502,6 +611,175 @@ class HeteroCluster:
         self.timing.comp_s += time.perf_counter() - t0
         return out
 
+    # -- the full training step, pipelined (fwd + bwd, Algorithm 1 whole) --
+    def microbatch_slices(self, batch: int) -> List[slice]:
+        """The batch-axis slices the pipelined schedules will use for a
+        given batch size — drivers split labels/targets identically."""
+        n = self._n_micro(batch)
+        sizes = [a.size for a in np.array_split(np.arange(batch), n)]
+        out, start = [], 0
+        for s in sizes:
+            out.append(slice(start, start + s))
+            start += s
+        return out
+
+    def conv_train_chain(
+        self,
+        x: np.ndarray,
+        layer_weights: Sequence[np.ndarray],
+        between: Optional[Sequence[Optional[Callable]]] = None,
+        head: Optional[Callable] = None,
+    ) -> TrainStepResult:
+        """One distributed training step over consecutive conv layers —
+        forward AND backward pipelined across the cluster.
+
+        ``between[k]`` is the master-only stage after conv layer k:
+        ``f(y) -> (z, vjp)`` with ``vjp(gz) -> gy`` (None = identity).
+        ``head(z, i) -> (aux, gz)`` is the master-only loss head on the
+        final stage output of microbatch i (indices follow
+        ``microbatch_slices``); its gradient seeds the backward chain.
+
+        The schedule is ONE software pipeline over the phases
+        ``[fwd L0 .. fwd Lk, bwd Lk .. bwd L0]``: each phase's scatters
+        are issued as the previous phase's gathers complete, so the
+        backward scatter of layer k goes out while layer k+1's backward
+        gathers — and the master-only between-VJPs / head gradients — are
+        still in flight, and the slave queues stay non-empty across the
+        forward->backward turnaround.  Pipeline depth is the microbatch
+        count (the first phase fills the pipe; total queued bytes match
+        one barrier-mode full-batch scatter), deeper than the depth-2
+        ``conv_forward_chain``.  The forward stashes each conv
+        layer's input and each between stage's VJP; every phase re-sends
+        its kernel shard once and microbatches after the first ride the
+        slave's cached copy.  Gathers follow global scatter order, so the
+        FIFO-socket contract holds even though ``conv`` and ``bwd`` ops
+        interleave on the wire.
+        """
+        L = len(layer_weights)
+        assert L >= 1 and head is not None, "need >= 1 conv layer and a head"
+        if between is None:
+            between = [None] * L
+        assert len(between) == L
+        # split along the SAME slices drivers use for labels/targets, by
+        # construction (head(z, i) pairs activations with slice i)
+        slices = self.microbatch_slices(x.shape[0])
+        parts: List[np.ndarray] = [x[sl] for sl in slices]
+        n = len(parts)
+
+        # shares fixed for the whole step: fwd and bwd must split every
+        # layer's kernels identically (comp_duty updates only at the end)
+        counts = [self.shares_for(w.shape[-1]) for w in layer_weights]
+        shards = [self._split(w, c) for w, c in zip(layer_weights, counts)]
+
+        stash_x: List[List[Optional[np.ndarray]]] = [[None] * n for _ in range(L)]
+        stash_vjp: List[List[Optional[Callable]]] = [[None] * n for _ in range(L)]
+        head_aux: list = [None] * n
+
+        def fwd_finish(k: int, i: int, p: _Pending) -> np.ndarray:
+            """Gather conv layer k / microbatch i and run the master-only
+            between stage, stashing its VJP for the backward sweep."""
+            y = self.gather_conv(p)
+            f = between[k]
+            if f is None:
+                return y
+            t0 = time.perf_counter()
+            z, vjp = f(y)
+            self.timing.comp_s += time.perf_counter() - t0
+            stash_vjp[k][i] = vjp
+            return z
+
+        def bwd_through(k: int, i: int, g: np.ndarray) -> np.ndarray:
+            """Pull g back through layer k's between stage (master-only)."""
+            vjp = stash_vjp[k][i]
+            if vjp is None:
+                return g
+            t0 = time.perf_counter()
+            gy = vjp(g)
+            self.timing.comp_s += time.perf_counter() - t0
+            return gy
+
+        # ---- forward phases: layer k's scatters interleave with k-1's
+        # gathers (and the between stages between them)
+        pend: List[_Pending] = []
+        for k in range(L):
+            cur: List[_Pending] = []
+            for i in range(n):
+                xi = parts[i] if k == 0 else fwd_finish(k - 1, i, pend[i])
+                stash_x[k][i] = xi
+                cur.append(
+                    self._scatter_conv_shards(xi, shards[k], send_weights=(i == 0))
+                )
+            pend = cur
+
+        # ---- turnaround: finish the last fwd layer, compute the head
+        # grads, and seed the backward — the bwd scatter of the last layer
+        # goes out while its later fwd microbatches are still in flight
+        cur = []
+        for i in range(n):
+            z = fwd_finish(L - 1, i, pend[i])
+            t0 = time.perf_counter()
+            head_aux[i], gz = head(z, i)
+            self.timing.comp_s += time.perf_counter() - t0
+            gy = bwd_through(L - 1, i, np.asarray(gz, np.float32))
+            cur.append(
+                self._scatter_bwd_shards(
+                    stash_x[L - 1][i], shards[L - 1], gy, counts[L - 1],
+                    send_weights=(i == 0),
+                )
+            )
+        pend = cur
+
+        # ---- backward phases: layer k's scatters interleave with layer
+        # k+1's gathers and the between-VJPs; dW shards sum per microbatch
+        dw: List[Optional[np.ndarray]] = [None] * L
+
+        def acc_dw(k: int, dwi: np.ndarray):
+            dw[k] = dwi if dw[k] is None else dw[k] + dwi
+
+        for k in range(L - 2, -1, -1):
+            cur = []
+            for i in range(n):
+                dx_next, dw_next = self.gather_bwd(pend[i])
+                acc_dw(k + 1, dw_next)
+                gy = bwd_through(k, i, dx_next)
+                cur.append(
+                    self._scatter_bwd_shards(
+                        stash_x[k][i], shards[k], gy, counts[k],
+                        send_weights=(i == 0),
+                    )
+                )
+            pend = cur
+
+        # ---- drain the first layer's backward
+        dxs: List[np.ndarray] = []
+        for i in range(n):
+            dx_i, dw_i = self.gather_bwd(pend[i])
+            acc_dw(0, dw_i)
+            dxs.append(dx_i)
+        self._update_comp_duty()
+        return TrainStepResult(
+            head_aux=head_aux,
+            dw=[d for d in dw],
+            dx=np.concatenate(dxs, axis=0) if n > 1 else dxs[0],
+        )
+
+    def conv_train_step(
+        self,
+        x: np.ndarray,
+        layer_weights: Sequence[np.ndarray],
+        between: Optional[Sequence[Optional[Callable]]] = None,
+        head: Optional[Callable] = None,
+        *,
+        update: Optional[Callable[[np.ndarray, np.ndarray], np.ndarray]] = None,
+    ) -> Tuple[List[np.ndarray], TrainStepResult]:
+        """One full forward+backward ``conv_train_chain`` plus the
+        optimizer step on the conv kernels: ``update(w, dw) -> new_w``
+        (None leaves the weights untouched and just returns the grads)."""
+        res = self.conv_train_chain(x, layer_weights, between=between, head=head)
+        if update is None:
+            return list(layer_weights), res
+        return [update(w, d) for w, d in zip(layer_weights, res.dw)], res
+
     # ---------------------------------------------------------------------
     @property
     def comm_bytes(self) -> int:
@@ -509,6 +787,7 @@ class HeteroCluster:
 
     def reset_stats(self):
         self.timing = LayerTiming()
+        self._duty_mark = (0.0, 0.0)
         for s in self.sockets:
             s.bytes_to_slave = 0
             s.bytes_to_master = 0
@@ -528,6 +807,33 @@ def make_distributed_conv(cluster: HeteroCluster):
     cluster is pipelined, every conv call is internally microbatched and
     double-buffered; keep the master's backend ``numpy`` here (see module
     docstring)."""
+    # Fail fast on the documented deadlock instead of hanging at 0% CPU:
+    # the callbacks below block the jax runtime thread while the master
+    # computes its shard, so any master backend that re-enters jit
+    # dispatch — everything but numpy — deadlocks, as does a pallas slave
+    # in interpret mode (interpret re-enters jax from the slave thread
+    # against the blocked callback).
+    if cluster.backends[0] != "numpy":
+        raise RuntimeError(
+            f"make_distributed_conv drives the cluster through jax host "
+            f"callbacks; the master (device 0) backend must be 'numpy', got "
+            f"{cluster.backends[0]!r}: re-entering jax from inside "
+            f"pure_callback deadlocks the runtime thread.  Use the direct "
+            f"conv_train_step / conv_forward drivers (no callbacks) for a "
+            f"non-numpy master."
+        )
+    interp_pallas = [
+        i for i, b in enumerate(cluster.backends)
+        if i > 0 and b == "pallas" and getattr(get_backend("pallas"), "interpret", False)
+    ]
+    if interp_pallas:
+        raise RuntimeError(
+            f"slave device(s) {interp_pallas} run the 'pallas' backend in "
+            f"interpret mode, which re-enters jax from the slave thread and "
+            f"can deadlock against a blocked make_distributed_conv callback. "
+            f"Use compiled TPU pallas, 'xla', or 'numpy' slaves here, or "
+            f"drive the cluster directly via conv_train_step."
+        )
 
     @jax.custom_vjp
     def dconv(x, w, b):

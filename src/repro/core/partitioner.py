@@ -60,6 +60,27 @@ def allocate_kernels(
     return base
 
 
+_MAX_COMP_DUTY = 0.95  # clamp: a duty of 1.0 would zero the device out
+
+
+def comp_aware_times(
+    times: Sequence[float], comp_duty: float, *, device: int = 0
+) -> np.ndarray:
+    """Discount one device's Eq. 1 share by its non-conv duty.
+
+    A master that spends fraction ``comp_duty`` of its busy time on the
+    master-only non-conv layers (ReLU/LRN/pool/fc) has only
+    ``1 - comp_duty`` of its throughput left for its conv shard, so its
+    probe time is inflated to ``t / (1 - comp_duty)`` before Eq. 1.
+    ``times`` is returned unchanged (copied) when ``comp_duty <= 0``.
+    """
+    t = np.asarray(times, dtype=np.float64).copy()
+    d = min(float(comp_duty), _MAX_COMP_DUTY)
+    if d > 0.0:
+        t[device] = t[device] / (1.0 - d)
+    return t
+
+
 def predicted_conv_time(
     times: Sequence[float], kernels: Sequence[int], num_kernels: int
 ) -> float:
@@ -87,11 +108,27 @@ class DeviceProfile:
     conv_time: float  # seconds for the reference conv workload
     bandwidth_mbps: float = 5.0  # link to the master (paper: ~5 Mbps Wi-Fi)
     backend: str = "numpy"  # conv compute backend the device runs (core/backends.py)
+    comp_duty: float = 0.0  # measured fraction of busy time spent on the
+    #                         master-only non-conv layers (LayerTiming.comp_s
+    #                         over comp_s + master_conv_s); 0 for slaves
 
     @property
     def gflops(self) -> float:
         # informational only; the partitioner uses times, not FLOPs
         return 1.0 / self.conv_time
+
+    @property
+    def effective_conv_time(self) -> float:
+        """Probe time inflated by the non-conv duty — the Eq. 1 input for
+        a device that cannot devote its whole throughput to conv."""
+        return float(
+            comp_aware_times([self.conv_time], self.comp_duty, device=0)[0]
+        )
+
+    def with_comp_duty(self, comp_duty: float) -> "DeviceProfile":
+        """Record a measured non-conv duty (e.g. from a cluster's
+        ``LayerTiming``) on an otherwise identical profile."""
+        return dataclasses.replace(self, comp_duty=float(comp_duty))
 
 
 def probe_device(
@@ -114,5 +151,6 @@ def probe_device(
 
 
 def profiles_to_shares(profiles: Sequence[DeviceProfile]) -> np.ndarray:
-    """Eq. 1 over a probed device set."""
-    return workload_shares([p.conv_time for p in profiles])
+    """Eq. 1 over a probed device set, comp-aware: each profile's
+    non-conv duty discounts its share."""
+    return workload_shares([p.effective_conv_time for p in profiles])

@@ -17,6 +17,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.compat import mesh_context  # noqa: E402
 from repro.configs import (  # noqa: E402
     ARCH_IDS,
     INPUT_SHAPES,
@@ -91,7 +92,7 @@ def lower_train(cfg: ModelConfig, shape: InputShape, mesh, tp_mode: str,
         out_shardings=(state_sh, None),
         donate_argnums=(0,),
     )
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jitted.lower(abstract_state, specs)
         compiled = lowered.compile()
     return lowered, compiled
@@ -124,7 +125,7 @@ def lower_decode(cfg: ModelConfig, shape: InputShape, mesh, tp_mode: str):
         out_shardings=(None, cache_sh),
         donate_argnums=(1,),
     )
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jitted.lower(abstract_params, cache, specs["tokens"])
         compiled = lowered.compile()
     return lowered, compiled
@@ -146,7 +147,7 @@ def lower_prefill(cfg: ModelConfig, shape: InputShape, mesh, tp_mode: str):
         return api.prefill(params, batch, rules=rules, mesh=mesh, remat="dots")
 
     jitted = jax.jit(prefill, in_shardings=(param_sh, batch_sh))
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jitted.lower(abstract_params, specs)
         compiled = lowered.compile()
     return lowered, compiled

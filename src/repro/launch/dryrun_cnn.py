@@ -12,6 +12,7 @@ import json  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro.compat import mesh_context  # noqa: E402
 from repro.configs.base import InputShape  # noqa: E402
 from repro.configs.cifar_cnn import CONFIGS  # noqa: E402
 from repro.core.conv_shard import make_sharded_conv  # noqa: E402
@@ -52,7 +53,7 @@ def dryrun_cnn(arch: str, batch: int, tp_mode: str, multi_pod: bool = False):
         in_shardings=(param_sh, img_sh, lbl_sh),
         out_shardings=(param_sh, None, None),
     )
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jitted.lower(
             abstract,
             jax.ShapeDtypeStruct((batch, 32, 32, 3), jnp.float32),

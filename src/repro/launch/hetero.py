@@ -11,6 +11,16 @@ driving real training steps of the CIFAR CNN (models/cnn.py).
 
 Device 0 is the master; keep its backend ``numpy`` (the training loop
 drives the cluster through jax host callbacks — see master_slave.py).
+
+``--train-pipeline`` switches to the activation-stashing full-step
+schedule (``conv_train_step``): forward AND backward of every conv layer
+are pipelined across the cluster and the master-only stages overlap
+slave compute.  It drives the cluster directly (no jax callbacks), so
+any master backend is safe, and the comp-aware partitioner discounts the
+master's measured non-conv duty automatically:
+
+    PYTHONPATH=src python -m repro.launch.hetero \
+        --slowdowns 1.0,1.5,3.0 --train-pipeline --microbatches 4 --steps 4
 """
 from __future__ import annotations
 
@@ -25,7 +35,12 @@ import numpy as np
 
 from repro.core.master_slave import HeteroCluster, make_distributed_conv
 from repro.core.partitioner import workload_shares
-from repro.models.cnn import cnn_loss, init_cnn, make_cnn_config
+from repro.models.cnn import (
+    cnn_loss,
+    init_cnn,
+    make_cluster_train_step,
+    make_cnn_config,
+)
 
 
 def run_hetero(
@@ -33,6 +48,7 @@ def run_hetero(
     backends=None,
     *,
     pipeline: bool = False,
+    train_pipeline: bool = False,
     microbatches: int = 4,
     c1: int = 8,
     c2: int = 16,
@@ -40,18 +56,20 @@ def run_hetero(
     steps: int = 2,
     lr: float = 0.05,
 ) -> dict:
-    if backends is not None and backends[0] != "numpy":
-        # the training loop below drives the cluster through jax host
-        # callbacks; a non-numpy master re-enters jax on the blocked
-        # runtime thread and can deadlock — fail fast instead of hanging
+    if not train_pipeline and backends is not None and backends[0] != "numpy":
+        # the callback training loop re-enters jax on the blocked runtime
+        # thread with a non-numpy master and can deadlock — fail fast
+        # (make_distributed_conv raises too; this gives the CLI message)
         raise SystemExit(
             f"device 0 (the master) must use the 'numpy' backend with "
             f"callback-driven training, got {backends[0]!r}; slaves may "
-            f"use any backend"
+            f"use any backend.  --train-pipeline drives the cluster "
+            f"directly and lifts this restriction."
         )
     cfg = make_cnn_config(c1, c2)
     cluster = HeteroCluster(
-        slowdowns, backends, pipeline=pipeline, microbatches=microbatches
+        slowdowns, backends,
+        pipeline=pipeline or train_pipeline, microbatches=microbatches,
     )
     try:
         probe = cluster.probe(
@@ -65,17 +83,27 @@ def run_hetero(
         print(f"Eq.1 shares: {np.round(shares, 3).tolist()} -> "
               f"c2 kernels {cluster.shares_for(c2).tolist()}")
 
-        conv_fn = make_distributed_conv(cluster)
         params = init_cnn(jax.random.key(0), cfg)
         imgs = jax.random.normal(jax.random.key(1), (batch, 32, 32, 3))
         labels = jnp.arange(batch) % cfg.num_classes
 
-        def train_step(p):
-            (loss, acc), grads = jax.value_and_grad(
-                lambda q: cnn_loss(q, imgs, labels, cfg=cfg, conv_fn=conv_fn),
-                has_aux=True,
-            )(p)
-            return jax.tree.map(lambda a, g: a - lr * g, p, grads), loss
+        if train_pipeline:
+            # full-step pipeline: fwd + bwd distributed, direct driver
+            cluster_step = make_cluster_train_step(cluster, cfg, lr=lr)
+
+            def train_step(p):
+                p, loss, _acc = cluster_step(p, imgs, labels)
+                return p, loss
+        else:
+            # seed path: jax custom-VJP conv via host callbacks
+            conv_fn = make_distributed_conv(cluster)
+
+            def train_step(p):
+                (loss, acc), grads = jax.value_and_grad(
+                    lambda q: cnn_loss(q, imgs, labels, cfg=cfg, conv_fn=conv_fn),
+                    has_aux=True,
+                )(p)
+                return jax.tree.map(lambda a, g: a - lr * g, p, grads), loss
 
         cluster.reset_stats()
         t0 = time.perf_counter()
@@ -87,8 +115,12 @@ def run_hetero(
 
         t = cluster.timing
         rec = {
-            "protocol": "pipelined" if pipeline else "barrier",
-            "microbatches": microbatches if pipeline else 1,
+            "protocol": (
+                "trainstep-pipelined" if train_pipeline
+                else "pipelined" if pipeline else "barrier"
+            ),
+            "microbatches": microbatches if (pipeline or train_pipeline) else 1,
+            "comp_duty": cluster.comp_duty,
             "backends": list(cluster.backends),
             "probe_s": [float(x) for x in probe],
             "losses": losses,
@@ -100,6 +132,9 @@ def run_hetero(
         print(f"comm={rec['comm_mb']:.1f}MiB  scatter={t.comm_s:.3f}s "
               f"conv={t.conv_s:.3f}s wait={t.gather_wait_s:.3f}s "
               f"overlap={t.overlap_s:.3f}s")
+        if train_pipeline:
+            print(f"comp-aware: master non-conv duty={cluster.comp_duty:.2f} -> "
+                  f"c2 kernels now {cluster.shares_for(c2).tolist()}")
         return rec
     finally:
         cluster.shutdown()
@@ -110,11 +145,17 @@ def main():
     ap.add_argument("--slowdowns", default="1.0,1.5,3.0",
                     help="comma list; device 0 is the master")
     ap.add_argument("--backends", default=None,
-                    help="comma list of conv backends per device; the "
-                         "master (device 0) must stay numpy, slaves may "
-                         "be numpy|xla|pallas; default numpy everywhere")
+                    help="comma list of conv backends per device "
+                         "(numpy|xla|pallas|sim), default numpy everywhere; "
+                         "in callback mode (no --train-pipeline) the master "
+                         "(device 0) must stay numpy")
     ap.add_argument("--pipeline", action="store_true",
                     help="double-buffered microbatch scatter/gather")
+    ap.add_argument("--train-pipeline", action="store_true",
+                    help="pipeline the FULL training step (forward + "
+                         "backward) with the activation-stashing "
+                         "conv_train_step schedule; implies --pipeline and "
+                         "allows any master backend (direct driver)")
     ap.add_argument("--microbatches", type=int, default=4)
     ap.add_argument("--c1", type=int, default=8)
     ap.add_argument("--c2", type=int, default=16)
@@ -127,6 +168,7 @@ def main():
     backends = args.backends.split(",") if args.backends else None
     rec = run_hetero(
         slowdowns, backends, pipeline=args.pipeline,
+        train_pipeline=args.train_pipeline,
         microbatches=args.microbatches, c1=args.c1, c2=args.c2,
         batch=args.batch, steps=args.steps,
     )

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.io import save_checkpoint
+from repro.compat import mesh_context
 from repro.configs import INPUT_SHAPES, RunConfig, get_config, reduced_for_smoke
 from repro.data.pipeline import make_global_batch, synthetic_token_batches
 from repro.launch.mesh import make_host_mesh, make_production_mesh
@@ -90,7 +91,7 @@ def main():
     it = synthetic_token_batches(args.batch, args.seq, cfg.vocab_size, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         for i in range(args.steps):
             host = add_modalities(next(it), cfg, rng)
             batch = make_global_batch(host, mesh)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.layers.linear import init_dense
 from repro.layers.mlp import activation_fn
@@ -240,7 +241,7 @@ def apply_moe(
             aux = jax.lax.pmean(aux, ax)
         return out, aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(tok_spec, None), w_spec),
@@ -312,7 +313,7 @@ def _apply_moe_a2a(params, x_flat, *, cfg: ModelConfig, mesh, tok_spec, n_model)
             aux = jax.lax.pmean(aux, ax)
         return out, aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(tok_spec, None), w_spec),

@@ -14,6 +14,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import CNNConfig
 from repro.layers.conv import apply_conv, conv_axes, init_conv, max_pool
@@ -95,3 +96,135 @@ def cnn_loss(params, images: jax.Array, labels: jax.Array, *, cfg: CNNConfig,
     loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
     acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
     return loss, acc
+
+
+def make_cluster_train_step(cluster, cfg: CNNConfig, *, lr: float = 0.05):
+    """Full training steps of the paper's CNN over a HeteroCluster via the
+    pipelined ``conv_train_step`` schedule: both conv layers run
+    distributed — forward and backward — while the master-only stages
+    (bias add, ReLU, LRN, pool, fc, softmax loss) overlap slave compute
+    through the activation-stashing pipeline.
+
+    This is a DIRECT driver (no jax host callbacks), so unlike
+    ``make_distributed_conv`` it is safe with any master backend, and the
+    cluster's comp-aware partitioner sees the master's real non-conv duty.
+
+    Returns ``step(params, images, labels) -> (new_params, loss, acc)``
+    applying plain SGD with ``lr`` to every parameter.
+    """
+
+    def _stage(y, b):
+        """The master-only block after each conv: +bias, ReLU, LRN, pool."""
+        z = jax.nn.relu(y + b[None, None, None, :])
+        z = local_response_norm(z)
+        return max_pool(z, cfg.pool_stride, cfg.pool_stride)
+
+    def _head_sums(z, fc, labels, denom):
+        """Loss contribution (sum/denom) + correct-count of one microbatch."""
+        logits = apply_dense(fc, z.reshape(z.shape[0], -1))
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        loss = -jnp.sum(jnp.take_along_axis(logp, labels[:, None], axis=1)) / denom
+        correct = jnp.sum((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return loss, correct
+
+    # jit the master-only stages (cached per microbatch shape); the
+    # backward halves rematerialize the forward instead of holding jax
+    # residuals across the pipeline
+    _stage_fwd = jax.jit(_stage)
+    _stage_bwd = jax.jit(lambda y, b, gz: jax.vjp(_stage, y, b)[1](gz))
+
+    @jax.jit
+    def _head_both(z, fc, labels, denom):
+        (loss, correct), vjp = jax.vjp(
+            lambda zz, f: _head_sums(zz, f, labels, denom), z, fc
+        )
+        gz, gfc = vjp((jnp.ones((), jnp.float32), jnp.zeros((), jnp.float32)))
+        return loss, correct, gz, gfc
+
+    warmed: set = set()  # microbatch sizes whose jits are compiled
+
+    def _warm(mb, params):
+        """Compile the master-only jits for this microbatch size OUTSIDE
+        the pipeline: one-time compilation must not pollute the cluster's
+        measured non-conv duty (it would strip the master's conv share)."""
+        if mb in warmed:
+            return
+        warmed.add(mb)
+        h1 = cfg.image_size
+        h2, h3 = h1 // cfg.pool_stride, h1 // cfg.pool_stride ** 2
+        for h, c, b in ((h1, cfg.c1_kernels, params["conv1"]["bias"]),
+                        (h2, cfg.c2_kernels, params["conv2"]["bias"])):
+            y = jnp.zeros((mb, h, h, c), jnp.float32)
+            gz = jnp.zeros((mb, h // cfg.pool_stride, h // cfg.pool_stride, c),
+                           jnp.float32)
+            _stage_fwd(y, b)
+            _stage_bwd(y, b, gz)
+        _head_both(
+            jnp.zeros((mb, h3, h3, cfg.c2_kernels), jnp.float32), params["fc"],
+            jnp.zeros((mb,), jnp.int32), jnp.float32(1.0),
+        )
+
+    def step(params, images, labels):
+        images = np.asarray(images, np.float32)
+        labels = np.asarray(labels)
+        batch = images.shape[0]
+        slices = cluster.microbatch_slices(batch)
+        for sl in slices:
+            _warm(sl.stop - sl.start, params)
+
+        db = {0: None, 1: None}       # conv bias grads, summed over microbatches
+        fc_grad = [None]              # fc param grads (a pytree), ditto
+
+        def make_between(k, bias):
+            def f(y):
+                y = jnp.asarray(y)
+                z = _stage_fwd(y, bias)
+
+                def pull(gz):
+                    gy, gb = _stage_bwd(y, bias, jnp.asarray(gz, jnp.float32))
+                    gb = np.asarray(gb)
+                    db[k] = gb if db[k] is None else db[k] + gb
+                    return np.asarray(gy, np.float32)
+
+                return np.asarray(z, np.float32), pull
+            return f
+
+        def head(z, i):
+            lbl = jnp.asarray(labels[slices[i]])
+            loss_i, correct_i, gz, gfc = _head_both(
+                jnp.asarray(z), params["fc"], lbl, jnp.float32(batch)
+            )
+            fc_grad[0] = gfc if fc_grad[0] is None else jax.tree.map(
+                jnp.add, fc_grad[0], gfc
+            )
+            return (float(loss_i), float(correct_i)), np.asarray(gz, np.float32)
+
+        between = [
+            make_between(0, params["conv1"]["bias"]),
+            make_between(1, params["conv2"]["bias"]),
+        ]
+        kernels = [
+            np.asarray(params["conv1"]["kernel"], np.float32),
+            np.asarray(params["conv2"]["kernel"], np.float32),
+        ]
+        new_kernels, res = cluster.conv_train_step(
+            images, kernels, between, head,
+            update=lambda w, dw: w - lr * dw,
+        )
+
+        loss = float(sum(a[0] for a in res.head_aux))
+        acc = float(sum(a[1] for a in res.head_aux)) / batch
+        new_params = {
+            "conv1": {
+                "kernel": jnp.asarray(new_kernels[0]),
+                "bias": params["conv1"]["bias"] - lr * db[0],
+            },
+            "conv2": {
+                "kernel": jnp.asarray(new_kernels[1]),
+                "bias": params["conv2"]["bias"] - lr * db[1],
+            },
+            "fc": jax.tree.map(lambda p, g: p - lr * g, params["fc"], fc_grad[0]),
+        }
+        return new_params, loss, acc
+
+    return step

@@ -92,11 +92,10 @@ def constrain_shaped(
     x: jax.Array, rules: AxisRules, *logical_axes: Optional[str]
 ) -> jax.Array:
     """Shape-aware with_sharding_constraint (divisibility-safe constrain)."""
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-    except Exception:  # pragma: no cover
-        mesh = None
-    if mesh is None or getattr(mesh, "empty", True):
+    from repro.compat import get_active_mesh
+
+    mesh = get_active_mesh()
+    if mesh is None:
         return x
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
     spec = spec_for_shape(rules, x.shape, logical_axes, sizes)
