@@ -44,6 +44,34 @@ def _bench_backends(rows, smoke: bool):
             f"backend_conv_{name}", dt * 1e6,
             f"host_gflops={flops / dt / 1e9:.2f} vjp_us={dtv * 1e6:.0f}",
         ))
+
+    # the numpy forward's hot path.  Copy-free formulations of the k>1
+    # conv (tensordot/einsum on the strided window view, per-tap shifted
+    # GEMMs) all measured SLOWER than the single large im2col GEMM —
+    # tensordot materializes the same copy internally — so the copy
+    # stays only where the GEMM genuinely needs it, and 1x1 kernels skip
+    # the lowering entirely: one GEMM on a free reshape, no pad, no
+    # window copy.  This row times that lowering-free path against
+    # forcing the same shape through im2col.
+    from repro.core.backends import _im2col, numpy_conv
+
+    def _im2col_conv(xx, ww):
+        kh, kw, cin_, cout_ = ww.shape
+        cols = _im2col(np.asarray(xx, np.float32), kh, kw)
+        y = cols.reshape(-1, kh * kw * cin_) @ ww.reshape(kh * kw * cin_, cout_)
+        return y.reshape(xx.shape[0], xx.shape[1], xx.shape[2], cout_)
+
+    bm, sm, cm = (2, 8, 16) if smoke else (8, 32, 64)
+    xm = rng.normal(size=(bm, sm, sm, cm)).astype(np.float32)
+    wm = rng.normal(size=(1, 1, cm, 2 * cm)).astype(np.float32)
+    dt_new = min(_time(numpy_conv, xm, wm, reps=5) for _ in range(3))
+    dt_old = min(_time(_im2col_conv, xm, wm, reps=5) for _ in range(3))
+    rows.append((
+        "numpy_fwd_1x1_nocopy", dt_new * 1e6,
+        f"im2col_us={dt_old * 1e6:.0f} "
+        f"gain={dt_old / dt_new:.2f}x (>1 means the lowering-free 1x1 "
+        f"GEMM beats forcing the im2col window copy)",
+    ))
     # pallas runs in interpret mode on CPU (Python): tiny shape, parity
     # timing only — kernel perf is only meaningful on a real TPU
     xt = x[:1, :8, :8, :2].copy()

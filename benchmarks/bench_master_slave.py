@@ -13,11 +13,19 @@ devices.  Four comparisons:
      pipelined vs per-layer barrier calls — the ``trainstep_pipeline_gain``
      row, deterministic sim devices over finite links,
   4. real compute backends (numpy im2col vs jitted XLA) on the same
-     cluster, the host's actual wall-clock.
+     cluster, the host's actual wall-clock,
+  5. the wire itself: per-layer scatter+gather BYTES of kernel vs
+     spatial partitioning (``comm_bytes_kernel_vs_spatial``), the fp16
+     codec's byte reduction (``codec_gain``), and the train-step
+     wall-clock of ``partition="auto"`` vs the paper's kernel axis under
+     a 25 Mbps link (``auto_partition_trainstep_gain``) — all exact byte
+     counts or deterministic sim compute.
 
-Rows 1-3 run the ``sim`` backend (deterministic sleep-for-flops virtual
-devices) plus emulated link bandwidth, so the protocol effects are not
-drowned by host CPU contention; row 4 is genuinely noisy host compute.
+Rows 1-3 and 5 run the ``sim`` backend (deterministic sleep-for-flops
+virtual devices) plus emulated link bandwidth, so the protocol effects
+are not drowned by host CPU contention; row 4 is genuinely noisy host
+compute.  ``TRAJECTORY_ROWS`` names the rows the CI bench-smoke lane
+extracts into ``BENCH_PR3.json``, the machine-readable perf trajectory.
 """
 from __future__ import annotations
 
@@ -28,6 +36,16 @@ import numpy as np
 from repro.core.master_slave import HeteroCluster
 
 SLOWDOWNS = [1.0, 1.5, 3.0]  # master + 1.5x slave + 3x-slow slave
+
+# The deterministic rows the CI bench-smoke lane extracts into
+# BENCH_PR3.json (benchmarks/run.py --trajectory): exact byte counts and
+# sim-backend ratios, comparable across commits.
+TRAJECTORY_ROWS = (
+    "comm_bytes_kernel_vs_spatial",
+    "codec_gain",
+    "auto_partition_trainstep_gain",
+    "trainstep_pipeline_gain",
+)
 
 
 def _relu_pool(y: np.ndarray) -> np.ndarray:
@@ -213,6 +231,94 @@ def run(smoke: bool = False):
         ("trainstep_pipeline_gain", gain,
          f"gain={gain:.2f}x (>1 means pipelining the full fwd+bwd training "
          f"step beats per-layer barrier calls; value is the ratio, not us)")
+    )
+
+    # -- 5. the wire: spatial partitioning + the compact codec -----------
+    # (a) EXACT per-layer scatter+gather bytes, kernel vs spatial, at 3
+    # slaves (the ISSUE's acceptance shape: activation-dominated layer,
+    # cin == cout).  One forward + one backward = one training layer.
+    # Byte counters are deterministic: only shapes and Eq. 1 counts
+    # (pinned probe times) enter.
+    slow4 = [1.0, 1.5, 2.0, 3.0]  # master + 3 slaves
+    bw, hw_, cw = (4, 16, 16) if smoke else (8, 32, 16)
+    xw = rng.normal(size=(bw, hw_, hw_, cw)).astype(np.float32)
+    ww = rng.normal(size=(3, 3, cw, cw)).astype(np.float32)
+    gw = rng.normal(size=(bw, hw_, hw_, cw)).astype(np.float32)
+    wire = {}
+    for mode in ("kernel", "spatial"):
+        cluster = HeteroCluster(slow4, ["sim"] * 4, partition=mode)
+        try:
+            cluster.probe_times = list(slow4)
+            cluster.conv_forward(xw, ww)
+            cluster.conv_backward(xw, ww, gw)
+            wire[mode] = cluster.comm_bytes
+        finally:
+            cluster.shutdown()
+    ratio = wire["kernel"] / wire["spatial"]
+    rows.append(
+        ("comm_bytes_kernel_vs_spatial", ratio,
+         f"kernel={wire['kernel']}B spatial={wire['spatial']}B per "
+         f"fwd+bwd layer at 3 slaves (>=2 means spatial cuts the wire "
+         f"by the acceptance margin; value is the byte ratio, not us)")
+    )
+
+    # (b) the fp16 codec halves the bytes of the SAME traffic.
+    wire_fp16 = {}
+    for dtype in (None, "fp16"):
+        cluster = HeteroCluster(slow4, ["sim"] * 4, wire_dtype=dtype)
+        try:
+            cluster.probe_times = list(slow4)
+            cluster.conv_forward(xw, ww)
+            cluster.conv_backward(xw, ww, gw)
+            wire_fp16[dtype or "fp32"] = cluster.comm_bytes
+        finally:
+            cluster.shutdown()
+    ratio = wire_fp16["fp32"] / wire_fp16["fp16"]
+    rows.append(
+        ("codec_gain", ratio,
+         f"fp32={wire_fp16['fp32']}B fp16={wire_fp16['fp16']}B "
+         f"(~2 means the codec halves the wire; ratio, not us)")
+    )
+
+    # (c) wall-clock: the comm-aware auto axis vs the paper's kernel axis
+    # on a 2-layer pipelined train step over 25 Mbps links (the paper's
+    # regime is ~5 Mbps; 25 keeps the bench fast while comm still
+    # dominates, so the pipeline cannot hide the kernel axis's full-x
+    # broadcast).  Deterministic: sim compute is sleep-for-flops and the
+    # probe is pinned to the exact sim times (flops/rate x slowdown),
+    # which also calibrates the predictor's probe_flops scale.
+    probe_flops = (
+        2.0 * batch * size ** 2 * 25 * 3 * probe_kw["num_kernels"]
+    )
+    bc = 4 if smoke else 8
+    xc = rng.normal(size=(bc, 32, 32, cw)).astype(np.float32)
+    wwide1 = rng.normal(size=(3, 3, cw, cw)).astype(np.float32)
+    wwide2 = rng.normal(size=(3, 3, cw, cw)).astype(np.float32)
+    results = {}
+    choices = {}
+    for mode in ("kernel", "auto"):
+        cluster = HeteroCluster(
+            SLOWDOWNS, ["sim"] * len(SLOWDOWNS), partition=mode,
+            pipeline=True, microbatches=micro, bandwidth_mbps=25.0,
+        )
+        try:
+            cluster.probe_times = [sd * probe_flops / 1e9 for sd in SLOWDOWNS]
+            cluster.probe_flops = probe_flops
+            results[mode] = _time_trainstep(cluster, xc, [wwide1, wwide2], reps)
+            choices[mode] = dict(cluster.partition_choices)
+            timing = cluster.timing
+        finally:
+            cluster.shutdown()
+        rows.append(
+            (f"trainstep_sim_bw25_{mode}_axis", results[mode] * 1e6,
+             f"overlap_s={timing.overlap_s:.3f} wait_s={timing.gather_wait_s:.3f} "
+             f"picks={sorted(set(choices[mode].values())) or ['kernel']}")
+        )
+    gain = results["kernel"] / results["auto"]
+    rows.append(
+        ("auto_partition_trainstep_gain", gain,
+         f"gain={gain:.2f}x (>1 means partition='auto' beats the paper's "
+         f"kernel axis under a 25 Mbps link; ratio, not us)")
     )
 
     # -- 4. real compute backends on this host (noisy, informational) ----

@@ -9,7 +9,10 @@ master/slave cluster and the data-parallel baseline on this host.
 ``--smoke`` asks each module that supports it (run(smoke=True)) for a
 tiny-shape pass — the CI benchmark-smoke lane.  ``--json`` additionally
 writes the rows as a JSON artifact (the ``BENCH_*.json`` perf
-trajectory).
+trajectory).  ``--trajectory OUT`` extracts just the DETERMINISTIC
+trajectory rows (bench_master_slave.TRAJECTORY_ROWS: wire-byte ratios
+and sim-backend gains, comparable across commits) — the CI bench-smoke
+lane writes them to ``BENCH_PR3.json`` at the repo root.
 """
 from __future__ import annotations
 
@@ -54,6 +57,10 @@ def main() -> None:
                     help="tiny-shape pass where the module supports it")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write rows as a JSON artifact")
+    ap.add_argument("--trajectory", default=None, metavar="OUT",
+                    help="also write the deterministic trajectory rows "
+                         "(TRAJECTORY_ROWS) as a JSON artifact, e.g. "
+                         "BENCH_PR3.json")
     args = ap.parse_args()
     if args.only:
         names = args.only.split(",")
@@ -88,6 +95,17 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump({"smoke": args.smoke, "rows": records}, f, indent=2)
         print(f"# wrote {len(records)} rows to {args.json}", file=sys.stderr)
+    if args.trajectory:
+        wanted = set(bench_master_slave.TRAJECTORY_ROWS)
+        traj = [r for r in records if r["name"] in wanted]
+        missing = sorted(wanted - {r["name"] for r in traj})
+        with open(args.trajectory, "w") as f:
+            json.dump({"smoke": args.smoke, "rows": traj}, f, indent=2)
+        print(f"# wrote {len(traj)} trajectory rows to {args.trajectory}"
+              + (f" (missing: {missing})" if missing else ""),
+              file=sys.stderr)
+        if missing:
+            failed += 1
     if failed:
         raise SystemExit(1)
 

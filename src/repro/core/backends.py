@@ -49,14 +49,14 @@ class ConvBackend:
         raise NotImplementedError
 
 
-_REGISTRY: Dict[str, Callable[[], ConvBackend]] = {}
+_REGISTRY: Dict[str, Callable[..., ConvBackend]] = {}
 _INSTANCES: Dict[str, ConvBackend] = {}
 
 
 def register_backend(name: str):
     """Class decorator: ``@register_backend("mine")`` adds a factory."""
 
-    def deco(factory: Callable[[], ConvBackend]):
+    def deco(factory: Callable[..., ConvBackend]):
         _REGISTRY[name] = factory
         return factory
 
@@ -64,13 +64,25 @@ def register_backend(name: str):
 
 
 def get_backend(name: str) -> ConvBackend:
-    """Resolve (and cache) a backend instance by registry name."""
+    """Resolve (and cache) a backend instance by registry name.
+
+    Names may carry a parameter after a colon — ``"sim:5e9"`` is a sim
+    device at 5 GFLOP/s, ``"pallas:interpret"`` forces interpret mode —
+    so one cluster can mix several instances of the same backend at
+    different speeds without the per-device ``slowdown`` workaround.
+    Each parameterized name caches its OWN instance."""
     if name not in _INSTANCES:
-        if name not in _REGISTRY:
+        base, _, param = name.partition(":")
+        if base not in _REGISTRY:
             raise KeyError(
                 f"unknown conv backend {name!r}; available: {available_backends()}"
             )
-        _INSTANCES[name] = _REGISTRY[name]()
+        try:
+            _INSTANCES[name] = _REGISTRY[base](param) if param else _REGISTRY[base]()
+        except (TypeError, ValueError) as e:
+            raise ValueError(
+                f"backend {base!r} rejected parameter {param!r}: {e}"
+            ) from e
     return _INSTANCES[name]
 
 
@@ -84,21 +96,43 @@ def available_backends() -> List[str]:
 # ---------------------------------------------------------------------------
 
 
-def _im2col(x: np.ndarray, kh: int, kw: int) -> np.ndarray:
-    """SAME-padded im2col.  x: (B,H,W,C) -> (B,H,W, kh*kw*C)."""
-    b, h, w, c = x.shape
+def _conv_windows(x: np.ndarray, kh: int, kw: int) -> np.ndarray:
+    """SAME-padded sliding windows as a zero-copy strided VIEW.
+    x: (B,H,W,C) -> view (B,H,W,C,kh,kw)."""
     ph, pw = kh // 2, kw // 2
     xp = np.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
-    win = np.lib.stride_tricks.sliding_window_view(xp, (kh, kw), axis=(1, 2))
-    # win: (B, H, W, C, kh, kw) -> (B, H, W, kh, kw, C)
-    win = win.transpose(0, 1, 2, 4, 5, 3)
+    return np.lib.stride_tricks.sliding_window_view(xp, (kh, kw), axis=(1, 2))
+
+
+def _im2col(x: np.ndarray, kh: int, kw: int) -> np.ndarray:
+    """SAME-padded im2col.  x: (B,H,W,C) -> (B,H,W, kh*kw*C).
+
+    Materializes a contiguous copy of the windows — kept ONLY where the
+    reshape-to-matrix genuinely requires it: for kh,kw > 1 the single
+    large BLAS GEMM it enables beats every measured copy-free
+    formulation (tensordot/einsum on the strided view re-materialize the
+    same copy internally; per-tap shifted GEMMs lose to the strided
+    accumulate), and the VJP's ``cols.T @ g`` has no matrix without it.
+    The 1x1 forward skips the lowering entirely (see ``numpy_conv``)."""
+    b, h, w, c = x.shape
+    win = _conv_windows(x, kh, kw).transpose(0, 1, 2, 4, 5, 3)
     return np.ascontiguousarray(win).reshape(b, h, w, kh * kw * c)
 
 
 def numpy_conv(x: np.ndarray, w: np.ndarray) -> np.ndarray:
-    """NHWC x HWIO SAME conv, stride 1 (the slave's `convn`)."""
+    """NHWC x HWIO SAME conv, stride 1 (the slave's `convn`).
+
+    1x1 kernels take the lowering-free hot path: one GEMM on a FREE
+    reshape of the contiguous input — no pad, no window copy (1.4-17x
+    measured, ``numpy_fwd_1x1_nocopy`` in bench_kernels).  Larger
+    kernels keep the im2col copy the GEMM genuinely needs (see
+    ``_im2col``)."""
     kh, kw, cin, cout = w.shape
-    cols = _im2col(np.asarray(x, np.float32), kh, kw)
+    x = np.asarray(x, np.float32)
+    if kh == 1 and kw == 1:
+        b, h, wd, _ = x.shape
+        return (x.reshape(-1, cin) @ w[0, 0]).reshape(b, h, wd, cout)
+    cols = _im2col(x, kh, kw)
     y = cols.reshape(-1, kh * kw * cin) @ w.reshape(kh * kw * cin, cout)
     return y.reshape(x.shape[0], x.shape[1], x.shape[2], cout)
 
@@ -135,6 +169,73 @@ class NumpyBackend(ConvBackend):
 
     def conv_vjp(self, x, w, g):
         return numpy_conv_vjp(x, w, g)
+
+
+# ---------------------------------------------------------------------------
+# height-strip (spatial) partitioning helpers — shared by the master and
+# every slave, on top of ANY backend's plain SAME conv primitives.
+# ---------------------------------------------------------------------------
+
+
+def strip_conv(
+    backend: ConvBackend,
+    x_halo: np.ndarray,
+    w: np.ndarray,
+    pad_top: int,
+    pad_bot: int,
+) -> np.ndarray:
+    """Forward of one height strip of a SAME stride-1 conv.
+
+    ``x_halo`` holds the strip's input rows plus the ``kh//2`` halo rows
+    on each side, CLIPPED at the image border; ``pad_top``/``pad_bot``
+    zero-rows restore what the clip removed, so the padded strip carries
+    exactly the receptive field of the strip's output rows (the zeros
+    coincide with the global SAME padding).  Runs the backend's ordinary
+    SAME conv on the padded strip and slices out the interior rows —
+    every backend works unchanged.  Assumes odd ``kh`` (the repo's
+    ``kh//2``-low padding convention; even kernels differ per backend).
+    Returns the strip's output rows: (B, strip_h, W, cout)."""
+    kh = w.shape[0]
+    ph = kh // 2
+    strip_h = x_halo.shape[1] + pad_top + pad_bot - (kh - 1)
+    if strip_h <= 0:  # a device legally allocated 0 rows
+        return np.zeros(
+            (x_halo.shape[0], 0, x_halo.shape[2], w.shape[-1]), np.float32
+        )
+    xp = np.pad(x_halo, ((0, 0), (pad_top, pad_bot), (0, 0), (0, 0)))
+    y = backend.conv(xp, w)
+    return np.asarray(y[:, ph : ph + strip_h], np.float32)
+
+
+def strip_conv_vjp(
+    backend: ConvBackend,
+    x_halo: np.ndarray,
+    w: np.ndarray,
+    g_strip: np.ndarray,
+    pad_top: int,
+    pad_bot: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Backward of one height strip: ``(dx_halo, dw_partial)``.
+
+    ``dx_halo`` covers the strip PLUS its halo rows — contributions of
+    this strip's output-gradient rows to neighbouring strips' inputs —
+    so the master must overlap-ADD the seams when reassembling the full
+    dX.  ``dw_partial`` is this strip's contribution to the FULL kernel
+    gradient (strips see every output channel); the master sums it."""
+    kh = w.shape[0]
+    ph = kh // 2
+    strip_h = g_strip.shape[1]
+    if strip_h == 0 or x_halo.shape[1] == 0:
+        return (
+            np.zeros(x_halo.shape, np.float32),
+            np.zeros(w.shape, np.float32),
+        )
+    xp = np.pad(x_halo, ((0, 0), (pad_top, pad_bot), (0, 0), (0, 0)))
+    gp = np.zeros(xp.shape[:-1] + (w.shape[-1],), np.float32)
+    gp[:, ph : ph + strip_h] = g_strip
+    dxp, dw = backend.conv_vjp(xp, w, gp)
+    dx_halo = dxp[:, pad_top : pad_top + x_halo.shape[1]]
+    return np.asarray(dx_halo, np.float32), np.asarray(dw, np.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -182,9 +283,15 @@ class PallasBackend(ConvBackend):
 
     name = "pallas"
 
-    def __init__(self, interpret: Optional[bool] = None):
+    def __init__(self, interpret=None):
         import jax
 
+        if isinstance(interpret, str):  # registry parameter, e.g. "pallas:interpret"
+            if interpret not in ("interpret", "compiled"):
+                raise ValueError(
+                    f"pallas parameter must be 'interpret' or 'compiled', got {interpret!r}"
+                )
+            interpret = interpret == "interpret"
         if interpret is None:
             interpret = jax.devices()[0].platform != "tpu"
         self.interpret = bool(interpret)
@@ -225,8 +332,11 @@ class SimBackend(ConvBackend):
 
     name = "sim"
 
-    def __init__(self, flops_per_s: float = 1e9):
+    def __init__(self, flops_per_s=1e9):
+        # accepts the registry parameter string: "sim:5e9" = 5 GFLOP/s
         self.flops_per_s = float(flops_per_s)
+        if self.flops_per_s <= 0:
+            raise ValueError("sim flops_per_s must be positive")
 
     def _flops(self, x, w) -> float:
         b, h, wd, _ = x.shape
@@ -262,8 +372,15 @@ def probe_conv_time(
 ) -> float:
     """The paper's probe: median wall-clock of the reference convolution
     on the given backend (name or instance), scaled by the emulated
-    slowdown.  Probing the backend a device actually runs keeps the
-    Eq. 1 ratios exact for mixed-backend clusters."""
+    slowdown — in BOTH directions: ``slowdown < 1.0`` emulates a FASTER
+    device and must scale too, or its Eq. 1 share would be computed from
+    the unscaled host time.  (HeteroCluster rejects sub-1 slowdowns —
+    its op-level emulation can only sleep — but standalone Eq. 1 inputs
+    for genuinely faster remote devices need the scaling, as do
+    parameterized sim backends.)  Probing the backend a device actually
+    runs keeps the Eq. 1 ratios exact for mixed-backend clusters."""
+    if slowdown <= 0:
+        raise ValueError(f"slowdown must be positive, got {slowdown}")
     if isinstance(backend, str):
         backend = get_backend(backend)
     rng = np.random.default_rng(seed)
@@ -278,7 +395,7 @@ def probe_conv_time(
         backend.conv(x, w)
         times.append(time.perf_counter() - t0)
     measured = float(np.median(times))
-    return measured * slowdown if slowdown > 1.0 else measured
+    return measured * slowdown
 
 
 # ---------------------------------------------------------------------------

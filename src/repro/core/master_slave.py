@@ -66,6 +66,28 @@ measured non-conv duty (``LayerTiming.comp_s`` vs its own conv time)
 automatically discounts its Eq. 1 share, since a master busy with
 ReLU/LRN/pool/fc work has proportionally less throughput left for its
 conv shard.
+
+**Hybrid spatial x kernel partitioning** (``partition=``): the paper
+splits only the output-channel ("kernel") axis, which forces the master
+to broadcast the FULL input activation to every slave — scatter bytes
+grow with ``n_slaves x activation_bytes`` and throttle speedup on slow
+links.  ``partition="spatial"`` splits the HEIGHT axis instead: each
+device receives only its Eq. 1 share of input rows plus a ``kh//2``
+halo (and the full kernel, once per layer), convolves its strip
+(backends.strip_conv), and returns its output rows; the backward
+overlap-ADDS the dX halo seams on the master (backends.strip_conv_vjp).
+``partition="auto"`` picks the cheaper axis PER LAYER from the
+predicted wall-clock — the comm-extended Eq. 1
+(partitioner.link_aware_times): compute share + wire bytes over each
+device's measured link.  Shares themselves are comm-aware too once a
+real ``probe()`` has run (probe_flops known) and links are finite.
+
+**Compact wire codec** (``wire_dtype="fp16"|"bf16"``): float arrays are
+encoded to the 2-byte dtype at the ``_Socket`` boundary and decoded back
+to float32 on read, halving wire bytes in either partition mode;
+``_nbytes``/``LayerTiming``/``comm_bytes`` account the ENCODED size.
+Master-side arithmetic (shard compute, dX seam sums, dW sums) stays in
+float32 — only the wire narrows.
 """
 from __future__ import annotations
 
@@ -74,16 +96,49 @@ import queue
 import threading
 import time
 import traceback
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.backends import get_backend, numpy_conv, numpy_conv_vjp, probe_conv_time
-from repro.core.partitioner import allocate_kernels, comp_aware_times
+from repro.core.backends import (
+    get_backend,
+    numpy_conv,
+    numpy_conv_vjp,
+    probe_conv_time,
+    strip_conv,
+    strip_conv_vjp,
+)
+from repro.core.partitioner import (
+    allocate_kernels,
+    comp_aware_times,
+    link_aware_times,
+)
 
 _TRAIN_OVER = "trainOver"
+
+PARTITION_MODES = ("kernel", "spatial", "auto")
+
+
+def resolve_wire_dtype(name: Optional[str]) -> Optional[np.dtype]:
+    """Map a wire-dtype name to the numpy dtype arrays are encoded to on
+    the sockets; ``None``/``"fp32"`` means no codec (the seed wire)."""
+    if name is None or name in ("fp32", "float32"):
+        return None
+    if name in ("fp16", "float16"):
+        return np.dtype(np.float16)
+    if name in ("bf16", "bfloat16"):
+        try:
+            import ml_dtypes
+        except ImportError as e:  # pragma: no cover - ml_dtypes ships with jax
+            raise ValueError(
+                "wire_dtype='bf16' needs the ml_dtypes package"
+            ) from e
+        return np.dtype(ml_dtypes.bfloat16)
+    raise ValueError(
+        f"unknown wire_dtype {name!r}; use None/'fp32', 'fp16' or 'bf16'"
+    )
 
 
 class _Socket:
@@ -94,15 +149,25 @@ class _Socket:
     a full-duplex link of finite speed (the paper's ~5 Mbps Wi-Fi).
     Writers return immediately (the NIC DMAs asynchronously), so comm
     can genuinely overlap compute when the protocol allows it; messages
-    on one direction serialize, exactly like a real link."""
+    on one direction serialize, exactly like a real link.
 
-    def __init__(self, bandwidth_mbps: Optional[float] = None):
+    With ``wire_dtype`` set (a 2-byte float numpy dtype), float32/64
+    arrays are ENCODED to it on write and decoded back to float32 on
+    read — the compact wire codec.  Byte counters and the bandwidth
+    emulation see the encoded size, exactly like a real narrow wire."""
+
+    def __init__(
+        self,
+        bandwidth_mbps: Optional[float] = None,
+        wire_dtype: Optional[np.dtype] = None,
+    ):
         self.to_slave: "queue.Queue" = queue.Queue()
         self.to_master: "queue.Queue" = queue.Queue()
         self.bytes_to_slave = 0
         self.bytes_to_master = 0
         self._lock = threading.Lock()
         self.bandwidth_mbps = bandwidth_mbps
+        self.wire_dtype = wire_dtype
         if bandwidth_mbps is not None:
             assert bandwidth_mbps > 0
             self._stage_to_slave: "queue.Queue" = queue.Queue()
@@ -133,6 +198,8 @@ class _Socket:
             self._stage_to_master.put(_Socket._LINK_DOWN)
 
     def _nbytes(self, obj) -> int:
+        """Bytes on the wire — called AFTER encoding, so the counters and
+        the bandwidth emulation see the codec's compacted size."""
         if isinstance(obj, np.ndarray):
             return obj.nbytes
         if isinstance(obj, (tuple, list)):
@@ -141,7 +208,34 @@ class _Socket:
             return sum(self._nbytes(v) for v in obj.values())
         return 8  # flags / scalars, one double in the paper's protocol
 
+    def _encode(self, obj):
+        """Compact float arrays to the wire dtype (recursive)."""
+        if isinstance(obj, np.ndarray) and obj.dtype in (np.float32, np.float64):
+            return obj.astype(self.wire_dtype)
+        if isinstance(obj, tuple):
+            return tuple(self._encode(o) for o in obj)
+        if isinstance(obj, list):
+            return [self._encode(o) for o in obj]
+        if isinstance(obj, dict):
+            return {k: self._encode(v) for k, v in obj.items()}
+        return obj
+
+    def _decode(self, obj):
+        """Widen wire-dtype arrays back to float32 at the read side, so
+        every device COMPUTES and ACCUMULATES in float32."""
+        if isinstance(obj, np.ndarray) and obj.dtype == self.wire_dtype:
+            return obj.astype(np.float32)
+        if isinstance(obj, tuple):
+            return tuple(self._decode(o) for o in obj)
+        if isinstance(obj, list):
+            return [self._decode(o) for o in obj]
+        if isinstance(obj, dict):
+            return {k: self._decode(v) for k, v in obj.items()}
+        return obj
+
     def write_to_slave(self, obj):
+        if self.wire_dtype is not None:
+            obj = self._encode(obj)
         n = self._nbytes(obj)
         with self._lock:
             self.bytes_to_slave += n
@@ -151,6 +245,8 @@ class _Socket:
             self.to_slave.put(obj)
 
     def write_to_master(self, obj):
+        if self.wire_dtype is not None:
+            obj = self._encode(obj)
         n = self._nbytes(obj)
         with self._lock:
             self.bytes_to_master += n
@@ -160,10 +256,12 @@ class _Socket:
             self.to_master.put(obj)
 
     def read_on_slave(self):
-        return self.to_slave.get()
+        obj = self.to_slave.get()
+        return self._decode(obj) if self.wire_dtype is not None else obj
 
     def read_on_master(self):
-        return self.to_master.get()
+        obj = self.to_master.get()
+        return self._decode(obj) if self.wire_dtype is not None else obj
 
     @property
     def total_bytes(self) -> int:
@@ -240,6 +338,16 @@ def _slave_loop(sock: _Socket, slowdown: float, backend_name: str, device: int):
                 w = cached_w[op] if w is None else w
                 cached_w[op] = w
                 out = _bwd_shard(backend, x, w, g)
+            elif op == "sconv":  # spatial: a height strip + halo, full kernel
+                xh, w, pt, pb = payload
+                w = cached_w[op] if w is None else w
+                cached_w[op] = w
+                out = strip_conv(backend, xh, w, pt, pb)
+            elif op == "sbwd":  # spatial backward: halo dX + full-kernel dW
+                xh, w, g, pt, pb = payload
+                w = cached_w[op] if w is None else w
+                cached_w[op] = w
+                out = strip_conv_vjp(backend, xh, w, g, pt, pb)
             else:  # pragma: no cover
                 raise ValueError(f"unknown op {op}")
             elapsed = time.perf_counter() - t0
@@ -279,10 +387,55 @@ class _Pending:
 
     op: str                       # "conv" | "bwd"
     seq: int                      # FIFO position; gathers must match
-    x: np.ndarray
-    my_w: np.ndarray              # master's kernel shard
-    my_g: Optional[np.ndarray]    # bwd only: master's grad slice
+    x: np.ndarray                 # kernel mode: the broadcast input;
+    #                               spatial mode: the FULL input (the
+    #                               master slices its own strip at gather)
+    my_w: np.ndarray              # master's kernel shard (spatial: full w)
+    my_g: Optional[np.ndarray]    # bwd only: master's grad slice/strip
     t_issued: float
+    mode: str = "kernel"          # partition axis this op was split on
+    rows: Optional[List[Tuple[int, int]]] = None      # spatial: [r0, r1) per device
+    halos: Optional[List[Tuple[int, int, int, int]]] = None
+    #                               spatial: (lo, hi, pad_top, pad_bot) per device
+
+
+def _strip_plan(
+    h: int, kh: int, counts: Sequence[int]
+) -> Tuple[List[Tuple[int, int]], List[Tuple[int, int, int, int]]]:
+    """Cut H output rows into per-device strips sized by ``counts`` and
+    derive each strip's halo'd input window: rows [lo, hi) of the input
+    plus (pad_top, pad_bot) zero rows that restore the clipped SAME
+    padding at the image border.  Empty strips get empty windows."""
+    ph, pb = kh // 2, kh - 1 - (kh // 2)
+    rows: List[Tuple[int, int]] = []
+    halos: List[Tuple[int, int, int, int]] = []
+    r0 = 0
+    for c in counts:
+        r1 = r0 + int(c)
+        if r1 == r0:
+            rows.append((r0, r0))
+            halos.append((r0, r0, 0, 0))
+            continue
+        lo, hi = max(0, r0 - ph), min(h, r1 + pb)
+        halos.append((lo, hi, ph - (r0 - lo), pb - (hi - r1)))
+        rows.append((r0, r1))
+        r0 = r1
+    assert r0 == h, "strip counts must sum to H"
+    return rows, halos
+
+
+@dataclasses.dataclass
+class _LayerPlan:
+    """How ONE conv layer is split over the devices — fixed for every
+    microbatch of the layer (the slave caches one kernel shard per op,
+    so the split must not drift between microbatches)."""
+
+    mode: str                     # "kernel" | "spatial" (auto is resolved)
+    counts: np.ndarray            # kernels (kernel) or rows (spatial) per device
+    shards: Optional[List[np.ndarray]] = None  # kernel mode: w split per device
+    w: Optional[np.ndarray] = None             # spatial mode: the full kernel
+    rows: Optional[List[Tuple[int, int]]] = None
+    halos: Optional[List[Tuple[int, int, int, int]]] = None
 
 
 class HeteroCluster:
@@ -313,6 +466,15 @@ class HeteroCluster:
     (``LayerTiming.comp_s`` vs ``master_conv_s``), ``shares_for`` inflates
     the master's probe time by ``1/(1-duty)`` automatically — the share
     bench_master_slave used to pin by hand.
+
+    ``partition`` picks the conv split axis: ``"kernel"`` (the paper,
+    default), ``"spatial"`` (height strips + halo exchange — each slave
+    gets only its rows instead of the full activation), or ``"auto"``
+    (per layer, the axis with the smaller predicted wall-clock over the
+    measured links).  ``bandwidth_mbps`` may be a single float or one
+    value PER SLAVE (heterogeneous links); with a real ``probe()`` the
+    Eq. 1 shares then include each device's comm term.  ``wire_dtype``
+    ("fp16"/"bf16") turns on the compact wire codec.
     """
 
     def __init__(
@@ -322,10 +484,25 @@ class HeteroCluster:
         *,
         pipeline: bool = False,
         microbatches: int = 4,
-        bandwidth_mbps: Optional[float] = None,
+        bandwidth_mbps: Union[None, float, Sequence[Optional[float]]] = None,
         comp_aware: bool = True,
+        partition: str = "kernel",
+        wire_dtype: Optional[str] = None,
     ):
         assert len(slowdowns) >= 1
+        if any(sd < 1.0 for sd in slowdowns):
+            # the op-level emulation can only SLEEP (slowdown-1)x the
+            # measured compute — it cannot make the host faster — so a
+            # sub-1 slowdown would probe fast (probe_conv_time scales
+            # both directions) yet compute at 1.0x, and Eq. 1 would
+            # overfeed the device.  Emulate faster devices with a
+            # parameterized sim backend instead.
+            raise ValueError(
+                f"slowdowns must be >= 1.0 (got {list(slowdowns)}): the "
+                f"cluster emulates slower devices by sleeping; for a "
+                f"FASTER virtual device use a parameterized sim backend, "
+                f"e.g. backends=['sim:5e9', ...]"
+            )
         self.slowdowns = list(slowdowns)
         self.n_slaves = len(slowdowns) - 1
         if backends is None:
@@ -339,7 +516,27 @@ class HeteroCluster:
         self._master_backend = get_backend(self.backends[0])
         self.pipeline = bool(pipeline)
         self.microbatches = int(microbatches)
-        self.sockets = [_Socket(bandwidth_mbps) for _ in range(self.n_slaves)]
+        if partition not in PARTITION_MODES:
+            raise ValueError(
+                f"partition must be one of {PARTITION_MODES}, got {partition!r}"
+            )
+        self.partition = partition
+        self.partition_choices: Dict[tuple, str] = {}  # auto's per-layer picks
+        self.wire_dtype = wire_dtype
+        self._wire_np_dtype = resolve_wire_dtype(wire_dtype)
+        self._wire_itemsize = (
+            self._wire_np_dtype.itemsize if self._wire_np_dtype is not None else 4
+        )
+        if bandwidth_mbps is None or isinstance(bandwidth_mbps, (int, float)):
+            self.bandwidths: List[Optional[float]] = (
+                [bandwidth_mbps] * self.n_slaves
+            )
+        else:
+            self.bandwidths = list(bandwidth_mbps)
+            assert len(self.bandwidths) == self.n_slaves, "one bandwidth per slave"
+        self.sockets = [
+            _Socket(bw, self._wire_np_dtype) for bw in self.bandwidths
+        ]
         self.threads = [
             threading.Thread(
                 target=_slave_loop, args=(s, sd, bk, i), daemon=True
@@ -351,6 +548,7 @@ class HeteroCluster:
         for t in self.threads:
             t.start()
         self.probe_times: Optional[List[float]] = None
+        self.probe_flops: Optional[float] = None  # flops of the probe workload
         self.timing = LayerTiming()
         self.comp_aware = bool(comp_aware)
         self.comp_duty = 0.0  # measured master non-conv duty (see shares_for)
@@ -362,7 +560,9 @@ class HeteroCluster:
     def probe(self, **probe_kwargs) -> List[float]:
         """Every device runs the timed reference convolution on its OWN
         backend — sequential so the 1-core host's timings do not
-        interfere."""
+        interfere.  Also records the probe workload's FLOPs, the scale
+        factor that lets the comm-aware partitioner and the auto axis
+        chooser turn probe times into absolute per-layer predictions."""
         master_t = probe_conv_time(
             self._master_backend, slowdown=self.slowdowns[0], **probe_kwargs
         )
@@ -371,15 +571,52 @@ class HeteroCluster:
             s.write_to_slave(("probe", probe_kwargs))
             slave_ts.append(self._check_result(s.read_on_master()))
         self.probe_times = [master_t] + slave_ts
+        self.probe_flops = (
+            2.0
+            * probe_kwargs["batch"]
+            * probe_kwargs["image_size"] ** 2
+            * probe_kwargs["kernel_size"] ** 2
+            * probe_kwargs["in_channels"]
+            * probe_kwargs["num_kernels"]
+        )
         return self.probe_times
 
-    def shares_for(self, num_kernels: int) -> np.ndarray:
-        """Eq. 1 kernel counts from the probe times; with ``comp_aware``
-        the master's measured non-conv duty discounts its share."""
+    def _effective_times(self) -> List[float]:
+        """Probe times with the comp-aware master discount applied."""
         assert self.probe_times is not None, "run probe() first"
         times = self.probe_times
         if self.comp_aware and self.comp_duty > 0.0:
             times = comp_aware_times(times, self.comp_duty)
+        return list(times)
+
+    def shares_for(
+        self,
+        num_kernels: int,
+        *,
+        unit_bytes: float = 0.0,
+        layer_flops: Optional[float] = None,
+    ) -> np.ndarray:
+        """Eq. 1 unit counts (kernels or rows) from the probe times; with
+        ``comp_aware`` the master's measured non-conv duty discounts its
+        share.  When the layer's wire cost is known (``unit_bytes`` per
+        unit, ``layer_flops`` to scale probe times to this layer) and the
+        links are finite, each slave's comm term joins its compute term —
+        the comm-extended Eq. 1 (partitioner.link_aware_times)."""
+        times = self._effective_times()
+        if (
+            unit_bytes > 0.0
+            and layer_flops
+            and self.probe_flops
+            and any(bw is not None for bw in self.bandwidths)
+        ):
+            scale = layer_flops / self.probe_flops
+            wire = [0.0] + [
+                float(num_kernels) * unit_bytes if bw is not None else 0.0
+                for bw in self.bandwidths
+            ]
+            times = link_aware_times(
+                [t * scale for t in times], wire, [None] + list(self.bandwidths)
+            )
         return allocate_kernels(num_kernels, times)
 
     def _update_comp_duty(self):
@@ -396,16 +633,180 @@ class HeteroCluster:
         if dc + dm > 0.0:
             self.comp_duty = dc / (dc + dm)
 
+    # -- hybrid spatial x kernel partitioning: per-layer plans ------------
+    def _unit_bytes(self, x_shape, w_shape, mode: str, op: str) -> float:
+        """Share-proportional wire bytes per allocation unit — one KERNEL
+        (w column out + feature-map column back, plus the gradient slice
+        and dW column for bwd) or one ROW (x row out + y row back, plus
+        the g row and dX row for bwd).  ``op="train"`` is one forward
+        plus one backward, what a train-chain plan governs.  Fixed
+        per-slave costs (the x broadcast, the halo, the full kernel, the
+        kernel-mode backward's full-dX return) do not move the optimal
+        split and are left to the mode predictor."""
+        b, h, wd, cin = x_shape
+        kh, kw, _, cout = w_shape
+        item = self._wire_itemsize
+        if mode == "kernel":
+            w_col = kh * kw * cin * item
+            y_col = b * h * wd * item
+            conv = w_col + y_col       # w col out + y col back
+            # bwd: w col + g col out, dW col back; the full-dX return is
+            # a FIXED per-slave cost, excluded by this contract
+            bwd = 2 * w_col + y_col
+        else:
+            x_row = b * wd * cin * item
+            y_row = b * wd * cout * item
+            conv = x_row + y_row       # x row out + y row back
+            bwd = 2 * x_row + y_row    # x + g rows out, dX row back
+        if op == "conv":
+            return conv
+        if op == "bwd":
+            return bwd
+        return conv + bwd              # "train"
+
+    def predict_partition_seconds(
+        self, x_shape, w_shape, op: str = "conv"
+    ) -> Dict[str, float]:
+        """Predicted per-layer wall-clock of each partition axis: every
+        slave's wire bytes over its OWN link plus its balanced compute
+        share (absolute once a real ``probe()`` has calibrated
+        ``probe_flops``; otherwise the comm term alone decides — the
+        compute splits near-identically on both axes).  ``op`` is what
+        the plan will govern: ``"conv"`` (forward only), ``"bwd"``, or
+        ``"train"`` (one forward + one backward) — the backward's wire
+        differs by axis (kernel mode re-broadcasts x AND returns a
+        full-size dX per slave; spatial ships strips both ways), so a
+        train-step plan must weigh both directions."""
+        b, h, wd, cin = x_shape
+        kh, kw, _, cout = w_shape
+        item = self._wire_itemsize
+        x_b = float(b * h * wd * cin * item)
+        y_b = float(b * h * wd * cout * item)
+        w_b = float(kh * kw * cin * cout * item)
+        times = self._effective_times()
+        layer_flops = 2.0 * b * h * wd * kh * kw * cin * cout
+        # the backward (dX + dW) costs ~2x the forward's flops
+        flops_mult = {"conv": 1.0, "bwd": 2.0, "train": 3.0}[op]
+        scale = (layer_flops / self.probe_flops) if self.probe_flops else None
+        out: Dict[str, float] = {}
+        for mode in ("kernel", "spatial"):
+            n_units = cout if mode == "kernel" else h
+            counts = self.shares_for(
+                n_units,
+                unit_bytes=self._unit_bytes(x_shape, w_shape, mode, op),
+                layer_flops=flops_mult * layer_flops,
+            )
+            worst = 0.0
+            for i, c in enumerate(counts):
+                bw = None if i == 0 else self.bandwidths[i - 1]
+                frac = float(c) / n_units if n_units else 0.0
+                halo = min(kh - 1, h) if c > 0 else 0
+                if mode == "kernel":
+                    fwd_wire = x_b + frac * (w_b + y_b)
+                    # x re-broadcast + g slice out; full dX + dW cols back
+                    bwd_wire = 2.0 * x_b + frac * (w_b + y_b)
+                    comp_frac = frac
+                    active = i > 0
+                else:
+                    hfrac = (c + halo) / h
+                    fwd_wire = hfrac * x_b + w_b + frac * y_b
+                    # x strip + g strip out; dX halo strip + full dW back
+                    bwd_wire = 2.0 * hfrac * x_b + 2.0 * w_b + frac * y_b
+                    comp_frac = hfrac
+                    active = i > 0 and c > 0
+                wire = {
+                    "conv": fwd_wire,
+                    "bwd": bwd_wire,
+                    "train": fwd_wire + bwd_wire,
+                }[op] if active else 0.0
+                t_comm = wire * 8.0 / (bw * 1e6) if bw is not None else 0.0
+                t_comp = (
+                    times[i] * scale * comp_frac * flops_mult if scale else 0.0
+                )
+                worst = max(worst, t_comm + t_comp)
+            out[mode] = worst
+        return out
+
+    def _resolve_mode(
+        self, x_shape, w_shape, override: Optional[str], op: str = "conv"
+    ) -> str:
+        """The partition axis for one layer; ``"auto"`` resolves against
+        the predicted wall-clock of ``op`` and records its pick."""
+        mode = override or self.partition
+        if mode not in PARTITION_MODES:
+            raise ValueError(
+                f"partition must be one of {PARTITION_MODES}, got {mode!r}"
+            )
+        if mode != "auto":
+            return mode
+        if all(bw is None for bw in self.bandwidths):
+            # free links: the paper's kernel axis, no halo overhead
+            choice = "kernel"
+        else:
+            pred = self.predict_partition_seconds(x_shape, w_shape, op)
+            choice = "spatial" if pred["spatial"] < pred["kernel"] else "kernel"
+        self.partition_choices[(tuple(x_shape), tuple(w_shape))] = choice
+        return choice
+
+    def plan_conv(
+        self, x_shape, w: np.ndarray, op: str = "conv",
+        partition: Optional[str] = None,
+    ) -> _LayerPlan:
+        """Freeze how one conv layer splits over the devices: the axis
+        (resolving ``"auto"`` against what the plan will govern — ``op``
+        is ``"conv"``, ``"bwd"`` or ``"train"``), the Eq. 1(+comm) unit
+        counts, and the per-device kernel shards or row strips.  One
+        plan serves every microbatch of the layer — the slave caches ONE
+        kernel shard per op, so the split must not drift within a
+        layer."""
+        mode = self._resolve_mode(tuple(x_shape), tuple(w.shape), partition, op)
+        b, h, wd, cin = x_shape
+        kh, kw, _, cout = w.shape
+        layer_flops = 2.0 * b * h * wd * kh * kw * cin * cout
+        unit_bytes = self._unit_bytes(x_shape, w.shape, mode, op)
+        if mode == "kernel":
+            counts = self.shares_for(
+                cout, unit_bytes=unit_bytes, layer_flops=layer_flops
+            )
+            return _LayerPlan("kernel", counts, shards=self._split(w, counts))
+        counts = self.shares_for(h, unit_bytes=unit_bytes, layer_flops=layer_flops)
+        rows, halos = _strip_plan(h, kh, counts)
+        return _LayerPlan(
+            "spatial", counts, w=np.asarray(w, np.float32), rows=rows, halos=halos
+        )
+
     # -- async scatter/gather halves -------------------------------------
     def _split(self, w: np.ndarray, counts: np.ndarray) -> List[np.ndarray]:
         edges = np.cumsum(counts)[:-1]
         return np.split(w, edges, axis=-1)
 
-    def scatter_conv(self, x: np.ndarray, w: np.ndarray) -> _Pending:
-        """Broadcast x + scatter kernel shards to the slaves; returns a
-        handle.  The master's own shard runs at gather time."""
-        shards = self._split(w, self.shares_for(w.shape[-1]))
-        return self._scatter_conv_shards(x, shards, send_weights=True)
+    def scatter_conv(
+        self, x: np.ndarray, w: np.ndarray, *, partition: Optional[str] = None
+    ) -> _Pending:
+        """Scatter one conv: broadcast x + kernel shards (kernel mode) or
+        height strips + the full kernel (spatial mode); returns a handle.
+        The master's own shard runs at gather time."""
+        x = np.asarray(x, np.float32)
+        plan = self.plan_conv(x.shape, w, "conv", partition)
+        return self._scatter_conv_planned(x, plan, send_weights=True)
+
+    def _scatter_conv_planned(
+        self, x: np.ndarray, plan: _LayerPlan, send_weights: bool
+    ) -> _Pending:
+        if plan.mode == "kernel":
+            return self._scatter_conv_shards(x, plan.shards, send_weights)
+        t0 = time.perf_counter()
+        for sock, (lo, hi, pt, pb) in zip(self.sockets, plan.halos[1:]):
+            sock.write_to_slave(
+                ("sconv", (x[:, lo:hi], plan.w if send_weights else None, pt, pb))
+            )
+        now = time.perf_counter()
+        self.timing.comm_s += now - t0
+        self._seq_issued += 1
+        return _Pending(
+            "conv", self._seq_issued, x, plan.w, None, now,
+            mode="spatial", rows=plan.rows, halos=plan.halos,
+        )
 
     def _scatter_conv_shards(
         self, x: np.ndarray, shards: List[np.ndarray], send_weights: bool
@@ -422,22 +823,62 @@ class HeteroCluster:
 
     def gather_conv(self, p: _Pending) -> np.ndarray:
         """Compute the master's shard, collect the slaves' feature maps
-        (FIFO: gathers must be issued in scatter order), concatenate."""
+        (FIFO: gathers must be issued in scatter order), concatenate —
+        along channels (kernel mode) or height (spatial strips)."""
         self._check_order(p, "conv")
         t0 = time.perf_counter()
-        my_out = self._master_compute(lambda: _conv_shard(self._master_backend, p.x, p.my_w))
+        if p.mode == "spatial":
+            lo, hi, pt, pb = p.halos[0]
+            my_out = self._master_compute(
+                lambda: strip_conv(self._master_backend, p.x[:, lo:hi], p.my_w, pt, pb)
+            )
+            axis = 1
+        else:
+            my_out = self._master_compute(
+                lambda: _conv_shard(self._master_backend, p.x, p.my_w)
+            )
+            axis = -1
         outs = [my_out]
         t_wait = time.perf_counter()
         for sock in self.sockets:
             outs.append(self._check_result(sock.read_on_master()))
         t1 = time.perf_counter()
         self._account_gather(p, t0, t_wait, t1)
-        return np.concatenate(outs, axis=-1)
+        return np.concatenate(outs, axis=axis)
 
-    def scatter_bwd(self, x: np.ndarray, w: np.ndarray, g: np.ndarray) -> _Pending:
-        counts = self.shares_for(w.shape[-1])
-        return self._scatter_bwd_shards(
-            x, self._split(w, counts), g, counts, send_weights=True
+    def scatter_bwd(
+        self, x: np.ndarray, w: np.ndarray, g: np.ndarray,
+        *, partition: Optional[str] = None,
+    ) -> _Pending:
+        x = np.asarray(x, np.float32)
+        g = np.asarray(g, np.float32)
+        plan = self.plan_conv(x.shape, w, "bwd", partition)
+        return self._scatter_bwd_planned(x, plan, g, send_weights=True)
+
+    def _scatter_bwd_planned(
+        self, x: np.ndarray, plan: _LayerPlan, g: np.ndarray, send_weights: bool
+    ) -> _Pending:
+        if plan.mode == "kernel":
+            return self._scatter_bwd_shards(
+                x, plan.shards, g, plan.counts, send_weights
+            )
+        t0 = time.perf_counter()
+        for sock, (r0, r1), (lo, hi, pt, pb) in zip(
+            self.sockets, plan.rows[1:], plan.halos[1:]
+        ):
+            sock.write_to_slave(
+                ("sbwd", (
+                    x[:, lo:hi], plan.w if send_weights else None,
+                    g[:, r0:r1], pt, pb,
+                ))
+            )
+        now = time.perf_counter()
+        self.timing.comm_s += now - t0
+        self._seq_issued += 1
+        r0, r1 = plan.rows[0]
+        return _Pending(
+            "bwd", self._seq_issued, x, plan.w, g[:, r0:r1], now,
+            mode="spatial", rows=plan.rows, halos=plan.halos,
         )
 
     def _scatter_bwd_shards(
@@ -458,9 +899,29 @@ class HeteroCluster:
         return _Pending("bwd", self._seq_issued, x, w_shards[0], g_shards[0], now)
 
     def gather_bwd(self, p: _Pending) -> Tuple[np.ndarray, np.ndarray]:
-        """Master's shard VJP + gather: sum partial dX, concat dW shards."""
+        """Master's shard VJP + gather.  Kernel mode: sum partial dX,
+        concat dW shards.  Spatial mode: overlap-ADD each device's halo'd
+        dX rows into the full dX (the seam sums) and SUM the full-kernel
+        dW contributions."""
         self._check_order(p, "bwd")
         t0 = time.perf_counter()
+        if p.mode == "spatial":
+            lo, hi, pt, pb = p.halos[0]
+            dxh, dw = self._master_compute(
+                lambda: strip_conv_vjp(
+                    self._master_backend, p.x[:, lo:hi], p.my_w, p.my_g, pt, pb
+                )
+            )
+            dx = np.zeros(p.x.shape, np.float32)
+            dx[:, lo:hi] += dxh
+            t_wait = time.perf_counter()
+            for sock, (lo_i, hi_i, _pt, _pb) in zip(self.sockets, p.halos[1:]):
+                dxh_i, dw_i = self._check_result(sock.read_on_master())
+                dx[:, lo_i:hi_i] += dxh_i  # the halo seams overlap-sum here
+                dw = dw + dw_i
+            t1 = time.perf_counter()
+            self._account_gather(p, t0, t_wait, t1)
+            return dx, dw
         dx, dw0 = self._master_compute(
             lambda: _bwd_shard(self._master_backend, p.x, p.my_w, p.my_g)
         )
@@ -519,44 +980,51 @@ class HeteroCluster:
             return 1
         return max(1, min(self.microbatches, batch))
 
-    def conv_forward(self, x: np.ndarray, w: np.ndarray) -> np.ndarray:
-        """Distributed convolution: broadcast x, scatter kernel shards,
-        gather and concatenate feature maps.  Pipelined mode double-
-        buffers microbatches along the batch axis."""
+    def conv_forward(
+        self, x: np.ndarray, w: np.ndarray, *, partition: Optional[str] = None
+    ) -> np.ndarray:
+        """Distributed convolution over the planned partition axis.
+        Pipelined mode double-buffers microbatches along the batch axis
+        (orthogonal to either split axis); the plan — and so the kernel
+        shard each slave caches — is fixed across the microbatches."""
+        x = np.asarray(x, np.float32)
+        plan = self.plan_conv(x.shape, w, "conv", partition)
         n = self._n_micro(x.shape[0])
         if n == 1:
-            return self.gather_conv(self.scatter_conv(x, w))
+            return self.gather_conv(self._scatter_conv_planned(x, plan, True))
         parts = np.array_split(x, n, axis=0)
-        shards = self._split(w, self.shares_for(w.shape[-1]))
         outs = []
-        pending = self._scatter_conv_shards(parts[0], shards, True)
+        pending = self._scatter_conv_planned(parts[0], plan, True)
         for nxt in parts[1:]:
-            # next scatter in flight; slaves reuse the cached shard
-            nxt_pending = self._scatter_conv_shards(nxt, shards, False)
+            # next scatter in flight; slaves reuse the cached kernel
+            nxt_pending = self._scatter_conv_planned(nxt, plan, False)
             outs.append(self.gather_conv(pending))
             pending = nxt_pending
         outs.append(self.gather_conv(pending))
         return np.concatenate(outs, axis=0)
 
     def conv_backward(
-        self, x: np.ndarray, w: np.ndarray, g: np.ndarray
+        self, x: np.ndarray, w: np.ndarray, g: np.ndarray,
+        *, partition: Optional[str] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Distributed VJP: each node takes the output-gradient slice of
-        its own kernels, returns (partial dX, its dW shard); the master
-        sums dX and concatenates dW.  Pipelined mode double-buffers
-        microbatches; per-microbatch dW shards are summed."""
+        """Distributed VJP over the planned partition axis: kernel mode
+        returns (partial-dX sums, concatenated dW shards); spatial mode
+        seam-sums halo'd dX strips and sums full-kernel dW parts.
+        Pipelined mode double-buffers microbatches; per-microbatch dW
+        contributions are summed."""
+        x = np.asarray(x, np.float32)
+        g = np.asarray(g, np.float32)
+        plan = self.plan_conv(x.shape, w, "bwd", partition)
         n = self._n_micro(x.shape[0])
         if n == 1:
-            return self.gather_bwd(self.scatter_bwd(x, w, g))
+            return self.gather_bwd(self._scatter_bwd_planned(x, plan, g, True))
         xs = np.array_split(x, n, axis=0)
         gs = np.array_split(g, n, axis=0)
-        counts = self.shares_for(w.shape[-1])
-        w_shards = self._split(w, counts)
         dxs: List[np.ndarray] = []
         dw_total: Optional[np.ndarray] = None
-        pending = self._scatter_bwd_shards(xs[0], w_shards, gs[0], counts, True)
+        pending = self._scatter_bwd_planned(xs[0], plan, gs[0], True)
         for xi, gi in zip(xs[1:], gs[1:]):
-            nxt_pending = self._scatter_bwd_shards(xi, w_shards, gi, counts, False)
+            nxt_pending = self._scatter_bwd_planned(xi, plan, gi, False)
             dx_i, dw_i = self.gather_bwd(pending)
             dxs.append(dx_i)
             dw_total = dw_i if dw_total is None else dw_total + dw_i
@@ -584,18 +1052,22 @@ class HeteroCluster:
         if between is None:
             between = [None] * len(layer_weights)
         assert len(between) == len(layer_weights)
-        n = self._n_micro(x.shape[0])
+        x = np.asarray(x, np.float32)
+        batch = x.shape[0]
+        n = self._n_micro(batch)
         parts: List[np.ndarray] = np.array_split(x, n, axis=0) if n > 1 else [x]
         for w, f in zip(layer_weights, between):
+            # plan from the FULL batch shape: one split per layer, every
+            # microbatch rides it (and the slave's cached kernel)
+            plan = self.plan_conv((batch,) + parts[0].shape[1:], w, "conv")
             if len(parts) == 1:
-                y = self.gather_conv(self.scatter_conv(parts[0], w))
+                y = self.gather_conv(self._scatter_conv_planned(parts[0], plan, True))
                 parts = [self._master_comp(f, y) if f else y]
                 continue
-            shards = self._split(w, self.shares_for(w.shape[-1]))
             outs: List[np.ndarray] = []
-            pending = self._scatter_conv_shards(parts[0], shards, True)
+            pending = self._scatter_conv_planned(parts[0], plan, True)
             for nxt in parts[1:]:
-                nxt_pending = self._scatter_conv_shards(nxt, shards, False)
+                nxt_pending = self._scatter_conv_planned(nxt, plan, False)
                 y = self.gather_conv(pending)
                 outs.append(self._master_comp(f, y) if f else y)
                 pending = nxt_pending
@@ -662,14 +1134,26 @@ class HeteroCluster:
         assert len(between) == L
         # split along the SAME slices drivers use for labels/targets, by
         # construction (head(z, i) pairs activations with slice i)
+        x = np.asarray(x, np.float32)
         slices = self.microbatch_slices(x.shape[0])
         parts: List[np.ndarray] = [x[sl] for sl in slices]
         n = len(parts)
 
-        # shares fixed for the whole step: fwd and bwd must split every
-        # layer's kernels identically (comp_duty updates only at the end)
-        counts = [self.shares_for(w.shape[-1]) for w in layer_weights]
-        shards = [self._split(w, c) for w, c in zip(layer_weights, counts)]
+        # plans fixed for the whole step: fwd and bwd must split every
+        # layer identically (comp_duty updates only at the end).  Built
+        # lazily at each layer's first microbatch — spatial/auto plans
+        # need the layer's ACTUAL activation shape, unknown until the
+        # between stages have run.
+        plans: List[Optional[_LayerPlan]] = [None] * L
+
+        def plan_for(k: int, xi: np.ndarray) -> _LayerPlan:
+            if plans[k] is None:
+                # op="train": the plan governs BOTH sweeps, so the auto
+                # axis and the comm-aware counts weigh fwd + bwd wire
+                plans[k] = self.plan_conv(
+                    (x.shape[0],) + xi.shape[1:], layer_weights[k], "train"
+                )
+            return plans[k]
 
         stash_x: List[List[Optional[np.ndarray]]] = [[None] * n for _ in range(L)]
         stash_vjp: List[List[Optional[Callable]]] = [[None] * n for _ in range(L)]
@@ -705,9 +1189,12 @@ class HeteroCluster:
             cur: List[_Pending] = []
             for i in range(n):
                 xi = parts[i] if k == 0 else fwd_finish(k - 1, i, pend[i])
+                xi = np.asarray(xi, np.float32)
                 stash_x[k][i] = xi
                 cur.append(
-                    self._scatter_conv_shards(xi, shards[k], send_weights=(i == 0))
+                    self._scatter_conv_planned(
+                        xi, plan_for(k, xi), send_weights=(i == 0)
+                    )
                 )
             pend = cur
 
@@ -722,9 +1209,8 @@ class HeteroCluster:
             self.timing.comp_s += time.perf_counter() - t0
             gy = bwd_through(L - 1, i, np.asarray(gz, np.float32))
             cur.append(
-                self._scatter_bwd_shards(
-                    stash_x[L - 1][i], shards[L - 1], gy, counts[L - 1],
-                    send_weights=(i == 0),
+                self._scatter_bwd_planned(
+                    stash_x[L - 1][i], plans[L - 1], gy, send_weights=(i == 0)
                 )
             )
         pend = cur
@@ -743,9 +1229,8 @@ class HeteroCluster:
                 acc_dw(k + 1, dw_next)
                 gy = bwd_through(k, i, dx_next)
                 cur.append(
-                    self._scatter_bwd_shards(
-                        stash_x[k][i], shards[k], gy, counts[k],
-                        send_weights=(i == 0),
+                    self._scatter_bwd_planned(
+                        stash_x[k][i], plans[k], gy, send_weights=(i == 0)
                     )
                 )
             pend = cur
@@ -824,7 +1309,8 @@ def make_distributed_conv(cluster: HeteroCluster):
         )
     interp_pallas = [
         i for i, b in enumerate(cluster.backends)
-        if i > 0 and b == "pallas" and getattr(get_backend("pallas"), "interpret", False)
+        if i > 0 and b.partition(":")[0] == "pallas"
+        and getattr(get_backend(b), "interpret", False)
     ]
     if interp_pallas:
         raise RuntimeError(

@@ -13,7 +13,7 @@ every device at least ``min_per_device`` kernels (0 allowed).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -79,6 +79,48 @@ def comp_aware_times(
     if d > 0.0:
         t[device] = t[device] / (1.0 - d)
     return t
+
+
+def link_aware_times(
+    times: Sequence[float],
+    wire_bytes: Sequence[float],
+    bandwidths_mbps: Sequence[Optional[float]],
+) -> np.ndarray:
+    """Eq. 1 extension: add each device's COMM term to its probe time.
+
+    ``times[i]`` is device i's compute time for the whole workload;
+    ``wire_bytes[i]`` the bytes it would move over its link if it took
+    the whole workload (share-proportional traffic only — the fixed
+    broadcast cost does not change the optimal split); ``bandwidths[i]``
+    its measured link in Mbps (None/inf = no link, e.g. the master).
+    Since both terms scale linearly with the share, Eq. 1 over the sums
+    minimizes the predicted wall-clock, not just the compute makespan."""
+    t = np.asarray(times, dtype=np.float64).copy()
+    if not (len(wire_bytes) == len(bandwidths_mbps) == t.size):
+        raise ValueError("times, wire_bytes, bandwidths must align")
+    for i, (b, bw) in enumerate(zip(wire_bytes, bandwidths_mbps)):
+        if bw is not None and np.isfinite(bw):
+            if bw <= 0:
+                raise ValueError("bandwidths must be positive")
+            t[i] += float(b) * 8.0 / (bw * 1e6)
+    return t
+
+
+def comm_aware_allocate(
+    num_units: int,
+    times: Sequence[float],
+    wire_bytes: Sequence[float],
+    bandwidths_mbps: Sequence[Optional[float]],
+    *,
+    min_per_device: int = 0,
+) -> np.ndarray:
+    """Integer unit counts (kernels or rows) from the comm-extended
+    Eq. 1: shares inversely proportional to compute + wire time."""
+    return allocate_kernels(
+        num_units,
+        link_aware_times(times, wire_bytes, bandwidths_mbps),
+        min_per_device=min_per_device,
+    )
 
 
 def predicted_conv_time(
@@ -150,7 +192,18 @@ def probe_device(
     return DeviceProfile(name, t, bandwidth_mbps, backend)
 
 
-def profiles_to_shares(profiles: Sequence[DeviceProfile]) -> np.ndarray:
+def profiles_to_shares(
+    profiles: Sequence[DeviceProfile],
+    *,
+    wire_bytes: Optional[Sequence[float]] = None,
+) -> np.ndarray:
     """Eq. 1 over a probed device set, comp-aware: each profile's
-    non-conv duty discounts its share."""
-    return workload_shares([p.effective_conv_time for p in profiles])
+    non-conv duty discounts its share.  With ``wire_bytes`` (the bytes
+    device i would move if it took the whole layer) the shares also
+    weigh each profile's measured link — the comm-extended Eq. 1."""
+    times = [p.effective_conv_time for p in profiles]
+    if wire_bytes is not None:
+        times = link_aware_times(
+            times, wire_bytes, [p.bandwidth_mbps for p in profiles]
+        )
+    return workload_shares(times)

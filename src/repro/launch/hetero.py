@@ -21,6 +21,18 @@ master's measured non-conv duty automatically:
 
     PYTHONPATH=src python -m repro.launch.hetero \
         --slowdowns 1.0,1.5,3.0 --train-pipeline --microbatches 4 --steps 4
+
+``--partition`` picks the conv split axis — ``kernel`` (the paper),
+``spatial`` (height strips + halo exchange: each slave receives only its
+rows instead of the full activation), or ``auto`` (per layer, the axis
+with the smaller predicted wall-clock over the emulated links) — and
+``--wire-dtype fp16|bf16`` turns on the compact wire codec.  Both need
+``--bandwidth-mbps`` to matter (with infinitely fast links the wire is
+free and auto sticks to the paper's kernel axis):
+
+    PYTHONPATH=src python -m repro.launch.hetero \
+        --slowdowns 1.0,1.5,3.0 --train-pipeline --bandwidth-mbps 50 \
+        --partition auto --wire-dtype fp16 --steps 4
 """
 from __future__ import annotations
 
@@ -55,6 +67,9 @@ def run_hetero(
     batch: int = 8,
     steps: int = 2,
     lr: float = 0.05,
+    partition: str = "kernel",
+    wire_dtype=None,
+    bandwidth_mbps=None,
 ) -> dict:
     if not train_pipeline and backends is not None and backends[0] != "numpy":
         # the callback training loop re-enters jax on the blocked runtime
@@ -70,6 +85,8 @@ def run_hetero(
     cluster = HeteroCluster(
         slowdowns, backends,
         pipeline=pipeline or train_pipeline, microbatches=microbatches,
+        partition=partition, wire_dtype=wire_dtype,
+        bandwidth_mbps=bandwidth_mbps,
     )
     try:
         probe = cluster.probe(
@@ -120,6 +137,12 @@ def run_hetero(
                 else "pipelined" if pipeline else "barrier"
             ),
             "microbatches": microbatches if (pipeline or train_pipeline) else 1,
+            "partition": partition,
+            "partition_choices": {
+                str(k): v for k, v in cluster.partition_choices.items()
+            },
+            "wire_dtype": wire_dtype or "fp32",
+            "bandwidth_mbps": bandwidth_mbps,
             "comp_duty": cluster.comp_duty,
             "backends": list(cluster.backends),
             "probe_s": [float(x) for x in probe],
@@ -135,6 +158,8 @@ def run_hetero(
         if train_pipeline:
             print(f"comp-aware: master non-conv duty={cluster.comp_duty:.2f} -> "
                   f"c2 kernels now {cluster.shares_for(c2).tolist()}")
+        if partition == "auto" and cluster.partition_choices:
+            print(f"auto partition picks: {rec['partition_choices']}")
         return rec
     finally:
         cluster.shutdown()
@@ -156,6 +181,18 @@ def main():
                          "backward) with the activation-stashing "
                          "conv_train_step schedule; implies --pipeline and "
                          "allows any master backend (direct driver)")
+    ap.add_argument("--partition", default="kernel",
+                    choices=["kernel", "spatial", "auto"],
+                    help="conv split axis: output channels (kernel, the "
+                         "paper), height strips + halo exchange (spatial), "
+                         "or per-layer predicted-wall-clock pick (auto)")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=["fp32", "fp16", "bf16"],
+                    help="compact wire codec at the socket boundary; "
+                         "master-side accumulation stays float32")
+    ap.add_argument("--bandwidth-mbps", type=float, default=None,
+                    help="emulated master<->slave link speed (the paper's "
+                         "~5 Mbps Wi-Fi); default: infinitely fast links")
     ap.add_argument("--microbatches", type=int, default=4)
     ap.add_argument("--c1", type=int, default=8)
     ap.add_argument("--c2", type=int, default=16)
@@ -171,6 +208,8 @@ def main():
         train_pipeline=args.train_pipeline,
         microbatches=args.microbatches, c1=args.c1, c2=args.c2,
         batch=args.batch, steps=args.steps,
+        partition=args.partition, wire_dtype=args.wire_dtype,
+        bandwidth_mbps=args.bandwidth_mbps,
     )
     if args.out:
         with open(args.out, "a") as f:

@@ -6,7 +6,9 @@
 Four sizes are studied: (C1, C2) in {(50,500), (150,800), (300,1000),
 (500,1500)}.  The conv output-channel axis is the paper's distribution
 axis; ``core/conv_shard.py`` shards it over the mesh and
-``core/master_slave.py`` runs it over the emulated socket cluster.
+``core/master_slave.py`` runs it over the emulated socket cluster —
+which can alternatively split the HEIGHT axis (spatial strips + halo
+exchange) or pick the cheaper axis per layer (``partition="auto"``).
 """
 from __future__ import annotations
 
@@ -108,6 +110,13 @@ def make_cluster_train_step(cluster, cfg: CNNConfig, *, lr: float = 0.05):
     This is a DIRECT driver (no jax host callbacks), so unlike
     ``make_distributed_conv`` it is safe with any master backend, and the
     cluster's comp-aware partitioner sees the master's real non-conv duty.
+
+    The cluster's partition axis is transparent here: with
+    ``partition="spatial"`` (or ``"auto"``) the chain ships height strips
+    + halos instead of full activations and seam-sums the dX halos on the
+    master, and with ``wire_dtype="fp16"/"bf16"`` activations/gradients
+    cross the wire in 2 bytes — the step's numerics stay float32 on the
+    master either way (the codec narrows only the wire).
 
     Returns ``step(params, images, labels) -> (new_params, loss, acc)``
     applying plain SGD with ``lr`` to every parameter.

@@ -40,6 +40,39 @@ def test_registry_exposes_the_contract():
         get_backend("no-such-backend")
 
 
+def test_registry_parameterized_instances():
+    """"sim:5e9" is a 5 GFLOP/s sim device, cached per parameterized
+    name: a cluster can mix sim speeds without the slowdown workaround."""
+    fast = get_backend("sim:5e9")
+    slow = get_backend("sim:1e9")
+    assert fast is not slow
+    assert fast.flops_per_s == pytest.approx(5e9)
+    assert slow.flops_per_s == pytest.approx(1e9)
+    assert get_backend("sim:5e9") is fast  # each name caches its own
+    assert get_backend("sim") is not fast
+    with pytest.raises(ValueError, match="rejected parameter"):
+        get_backend("sim:not-a-number")
+    with pytest.raises(ValueError, match="rejected parameter"):
+        get_backend("sim:-1e9")
+    with pytest.raises(KeyError):
+        get_backend("no-such-backend:5e9")
+
+
+def test_parameterized_sim_cluster_shares():
+    """Two sim devices at different registry-parameter speeds probe at
+    ~the speed ratio, so Eq. 1 splits accordingly — no slowdown needed."""
+    c = HeteroCluster([1.0, 1.0], ["sim:4e9", "sim:1e9"])
+    try:
+        # sleeps of ~2.5/10 ms: far above the host's timer slack
+        t = c.probe(image_size=16, in_channels=3, kernel_size=5,
+                    num_kernels=32, batch=8, repeats=1)
+        assert t[1] > 2.0 * t[0]  # 4x nominal; sleep jitter-safe margin
+        counts = c.shares_for(20)
+        assert counts[0] > counts[1]
+    finally:
+        c.shutdown()
+
+
 @pytest.mark.parametrize("name", PARITY_BACKENDS)
 def test_conv_parity(name):
     x, w, _ = _data()
@@ -78,14 +111,32 @@ def test_probe_times_every_backend(name):
 
 
 def test_probe_slowdown_scales_measurement():
-    """The emulated slowdown multiplies the measured median.  A 200x
-    factor dwarfs scheduler noise on a loaded CI host, so the ordering
+    """The emulated slowdown multiplies the measured median — in BOTH
+    directions: a slowdown < 1 emulates a FASTER device and must shrink
+    the probe time too (it used to be silently dropped, handing emulated
+    fast devices an unscaled time and the wrong Eq. 1 share).  200x
+    factors dwarf scheduler noise on a loaded CI host, so the ordering
     is safe to assert (per-backend ordering at small factors is not)."""
     kw = dict(image_size=8, in_channels=3, kernel_size=3,
               num_kernels=4, batch=2, repeats=1)
     base = probe_conv_time("numpy", **kw)
     slowed = probe_conv_time("numpy", slowdown=200.0, **kw)
     assert slowed > base
+    sped = probe_conv_time("numpy", slowdown=1.0 / 200.0, **kw)
+    assert sped < base
+    with pytest.raises(ValueError, match="positive"):
+        probe_conv_time("numpy", slowdown=0.0, **kw)
+
+
+def test_sim_probe_slowdown_below_one_exact():
+    """On the deterministic sim backend the scaling is exact: the probe
+    at slowdown s is ~s x the unscaled probe (the Eq. 1 input an
+    emulated faster device must present)."""
+    kw = dict(image_size=16, in_channels=3, kernel_size=5,
+              num_kernels=16, batch=8, repeats=1)  # ~5 ms sleeps
+    base = probe_conv_time("sim", **kw)
+    fast = probe_conv_time("sim", slowdown=0.25, **kw)
+    assert fast == pytest.approx(0.25 * base, rel=0.2)
 
 
 def test_sim_backend_shapes_only():

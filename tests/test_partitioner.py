@@ -1,12 +1,17 @@
-"""Eq. 1 workload-share invariants (hypothesis property tests)."""
+"""Eq. 1 workload-share invariants (hypothesis property tests) and the
+comm-extended Eq. 1 (compute + wire time per device)."""
 import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.partitioner import (
+    DeviceProfile,
     allocate_kernels,
+    comm_aware_allocate,
+    link_aware_times,
     predicted_conv_time,
+    profiles_to_shares,
     speedup,
     workload_shares,
 )
@@ -89,3 +94,49 @@ def test_invalid_inputs():
         workload_shares([1.0, -2.0])
     with pytest.raises(ValueError):
         allocate_kernels(-1, [1.0])
+
+
+# ---------------------------------------------------------------------------
+# the comm-extended Eq. 1: compute + wire time per device
+# ---------------------------------------------------------------------------
+
+
+def test_link_aware_times_adds_wire_seconds():
+    """1 MB over an 8 Mbps link is exactly 1 second; None/inf links (the
+    master, or unemulated sockets) add nothing."""
+    t = link_aware_times([1.0, 1.0, 1.0], [1e6, 1e6, 1e6],
+                         [None, 8.0, np.inf])
+    assert t[0] == pytest.approx(1.0)
+    assert t[1] == pytest.approx(2.0)
+    assert t[2] == pytest.approx(1.0)
+    with pytest.raises(ValueError):
+        link_aware_times([1.0], [1e6], [-5.0])
+    with pytest.raises(ValueError):
+        link_aware_times([1.0, 1.0], [1e6], [None, 8.0])
+
+
+def test_comm_aware_allocate_penalizes_slow_links():
+    """Equal compute, one slow link: the comm-extended Eq. 1 hands the
+    slow-linked device fewer units than the plain compute split."""
+    plain = allocate_kernels(30, [1.0, 1.0, 1.0])
+    comm = comm_aware_allocate(30, [1.0, 1.0, 1.0], [0.0, 1e6, 1e6],
+                               [None, 100.0, 5.0])
+    assert plain.tolist() == [10, 10, 10]
+    assert comm.sum() == 30
+    assert comm[2] < comm[1] <= comm[0]
+
+
+def test_profiles_to_shares_weighs_measured_links():
+    """With wire_bytes the probed shares include each profile's link —
+    the device behind the paper's ~5 Mbps Wi-Fi loses share to the
+    wired one even at identical compute."""
+    profs = [
+        DeviceProfile("master", 1.0),
+        DeviceProfile("wired", 1.0, bandwidth_mbps=1000.0),
+        DeviceProfile("wifi", 1.0, bandwidth_mbps=5.0),
+    ]
+    plain = profiles_to_shares(profs)
+    comm = profiles_to_shares(profs, wire_bytes=[0.0, 1e6, 1e6])
+    assert np.allclose(plain, 1 / 3)
+    assert comm[2] < comm[1] <= comm[0]
+    assert np.isclose(comm.sum(), 1.0)

@@ -1,0 +1,358 @@
+"""Hybrid spatial x kernel partitioning + the compact wire codec.
+
+Spatial (height-strip) mode must be numerically identical to the
+single-device reference — forward and VJP, even/odd heights, kernel
+sizes 1/3/5, uneven Eq. 1 strips, zero-row devices — because the halo
+exchange and the master's dX seam overlap-add reconstruct exactly the
+SAME convolution.  The codec must halve the accounted wire bytes while
+master-side accumulation stays float32.  ``partition="auto"`` must pick
+the cheaper axis from the comm-extended Eq. 1 prediction.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backends import get_backend, strip_conv, strip_conv_vjp
+from repro.core.master_slave import (
+    HeteroCluster,
+    _strip_plan,
+    resolve_wire_dtype,
+)
+
+
+def _ref_conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _vjp_ref(x, w, g):
+    _, pullback = jax.vjp(_ref_conv, jnp.asarray(x), jnp.asarray(w))
+    dx, dw = pullback(jnp.asarray(g))
+    return np.asarray(dx), np.asarray(dw)
+
+
+def _data(b=2, h=8, wd=6, cin=3, cout=5, k=3, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, h, wd, cin)).astype(np.float32)
+    w = rng.normal(size=(k, k, cin, cout)).astype(np.float32)
+    g = rng.normal(size=(b, h, wd, cout)).astype(np.float32)
+    return x, w, g
+
+
+# ---------------------------------------------------------------------------
+# the strip helpers themselves (backends.py), outside the protocol
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h", [7, 8])
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_strip_conv_tiles_reconstruct_reference(h, k):
+    """Any strip tiling of H — including clipped halos at both borders —
+    concatenates back to the exact SAME conv, fwd and bwd."""
+    x, w, g = _data(h=h, k=k, seed=1)
+    want_y = np.asarray(_ref_conv(x, w))
+    dx_want, dw_want = _vjp_ref(x, w, g)
+    backend = get_backend("numpy")
+    counts = [h // 3, h - h // 3 - 1, 1]
+    rows, halos = _strip_plan(h, k, counts)
+    ys, dx, dw = [], np.zeros_like(x), np.zeros_like(w)
+    for (r0, r1), (lo, hi, pt, pb) in zip(rows, halos):
+        ys.append(strip_conv(backend, x[:, lo:hi], w, pt, pb))
+        dxh, dwp = strip_conv_vjp(backend, x[:, lo:hi], w, g[:, r0:r1], pt, pb)
+        dx[:, lo:hi] += dxh  # the halo seams overlap-add
+        dw += dwp
+    np.testing.assert_allclose(np.concatenate(ys, axis=1), want_y, atol=1e-4)
+    np.testing.assert_allclose(dx, dx_want, atol=1e-4)
+    np.testing.assert_allclose(dw, dw_want, atol=1e-4)
+
+
+def test_strip_plan_covers_height_with_clipped_halos():
+    rows, halos = _strip_plan(10, 5, [4, 0, 6])
+    assert rows == [(0, 4), (4, 4), (4, 10)]
+    # first strip: top halo clipped at the border -> 2 pad rows restore it
+    assert halos[0] == (0, 6, 2, 0)
+    assert halos[1] == (4, 4, 0, 0)  # empty strip, empty window
+    assert halos[2] == (2, 10, 0, 2)
+    with pytest.raises(AssertionError):
+        _strip_plan(10, 3, [4, 4])  # counts must sum to H
+
+
+# ---------------------------------------------------------------------------
+# the protocol in spatial mode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h", [7, 8])
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_spatial_cluster_matches_reference(h, k):
+    """Spatial-mode conv_forward/conv_backward over uneven Eq. 1 strips
+    == the single-device reference, for even/odd H and kh in {1,3,5}."""
+    x, w, g = _data(h=h, k=k, cout=5, seed=2)
+    c = HeteroCluster([1.0, 1.5, 2.0], partition="spatial")
+    try:
+        c.probe_times = [1.0, 1.5, 2.0]
+        np.testing.assert_allclose(
+            c.conv_forward(x, w), np.asarray(_ref_conv(x, w)), atol=1e-4
+        )
+        dx_want, dw_want = _vjp_ref(x, w, g)
+        dx, dw = c.conv_backward(x, w, g)
+        np.testing.assert_allclose(dx, dx_want, atol=1e-3)
+        np.testing.assert_allclose(dw, dw_want, atol=1e-3)
+    finally:
+        c.shutdown()
+
+
+def test_spatial_mode_with_zero_row_device():
+    """A device whose Eq. 1 share rounds to 0 rows must not break the
+    strip reassembly (it ships an empty window and returns empty rows)."""
+    x, w, g = _data(h=6, k=3, seed=3)
+    c = HeteroCluster([1.0, 1e6], partition="spatial")
+    try:
+        c.probe_times = [1.0, 1e6]
+        assert c.shares_for(6).tolist() == [6, 0]
+        np.testing.assert_allclose(
+            c.conv_forward(x, w), np.asarray(_ref_conv(x, w)), atol=1e-4
+        )
+        dx_want, dw_want = _vjp_ref(x, w, g)
+        dx, dw = c.conv_backward(x, w, g)
+        np.testing.assert_allclose(dx, dx_want, atol=1e-3)
+        np.testing.assert_allclose(dw, dw_want, atol=1e-3)
+    finally:
+        c.shutdown()
+
+
+def test_spatial_train_chain_matches_single_device_vjp():
+    """The pipelined fwd+bwd train chain in spatial mode == jax.grad on
+    one device (same tolerance as the kernel-mode test in
+    test_train_pipeline.py), microbatched and with a relu between."""
+    x, w1, _ = _data(b=5, h=8, wd=8, cout=6, k=5, seed=4)
+    rng = np.random.default_rng(5)
+    w2 = rng.normal(size=(5, 5, 6, 9)).astype(np.float32)
+    g = rng.normal(size=(5, 8, 8, 9)).astype(np.float32)
+
+    def f(x_, w1_, w2_):
+        y = jax.nn.relu(_ref_conv(x_, w1_))
+        return jnp.sum(_ref_conv(y, w2_) * g)
+
+    dx_want, dw1_want, dw2_want = (
+        np.asarray(a)
+        for a in jax.grad(f, argnums=(0, 1, 2))(
+            jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2)
+        )
+    )
+
+    c = HeteroCluster(
+        [1.0, 1.5, 2.0], partition="spatial", pipeline=True, microbatches=3
+    )
+    try:
+        c.probe_times = [1.0, 1.5, 2.0]
+
+        def between(y):
+            mask = (y > 0).astype(np.float32)
+            return np.maximum(y, 0.0), lambda gz: gz * mask
+
+        slices = c.microbatch_slices(x.shape[0])
+
+        def head(z, i):
+            return None, g[slices[i]]
+
+        res = c.conv_train_chain(x, [w1, w2], [between, None], head)
+        np.testing.assert_allclose(res.dx, dx_want, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(res.dw[0], dw1_want, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(res.dw[1], dw2_want, rtol=1e-4, atol=1e-3)
+    finally:
+        c.shutdown()
+
+
+def test_spatial_mode_cuts_scatter_gather_bytes():
+    """The point of the exercise: at 3 slaves, one fwd+bwd layer moves
+    >= 2x fewer bytes in spatial mode than in kernel mode (each slave
+    gets its rows + halo instead of the full activation, and returns a
+    halo'd dX strip instead of a full dX)."""
+    x, w, g = _data(b=4, h=16, wd=16, cin=8, cout=8, k=3, seed=6)
+    bytes_by_mode = {}
+    for mode in ("kernel", "spatial"):
+        c = HeteroCluster([1.0, 1.0, 1.0, 1.0], partition=mode)
+        try:
+            c.probe_times = [1.0, 1.0, 1.0, 1.0]
+            c.conv_forward(x, w)
+            c.conv_backward(x, w, g)
+            bytes_by_mode[mode] = c.comm_bytes
+        finally:
+            c.shutdown()
+    assert bytes_by_mode["kernel"] >= 2 * bytes_by_mode["spatial"], bytes_by_mode
+
+
+# ---------------------------------------------------------------------------
+# the compact wire codec
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_wire_dtype():
+    assert resolve_wire_dtype(None) is None
+    assert resolve_wire_dtype("fp32") is None
+    assert resolve_wire_dtype("fp16") == np.dtype(np.float16)
+    assert resolve_wire_dtype("bf16").itemsize == 2
+    with pytest.raises(ValueError):
+        resolve_wire_dtype("int8")
+
+
+@pytest.mark.parametrize("dtype", ["fp16", "bf16"])
+def test_codec_halves_accounted_bytes_and_roundtrips(dtype):
+    """The encoded wire: byte counters see the 2-byte arrays (≈2x fewer
+    bytes than fp32, exactly 2x on the float payload), results come back
+    float32, and the numerics stay within the codec's precision."""
+    x, w, g = _data(b=2, h=8, wd=8, cin=4, cout=6, k=3, seed=7)
+    got = {}
+    for wd_ in (None, dtype):
+        c = HeteroCluster([1.0, 1.0], wire_dtype=wd_)
+        try:
+            c.probe_times = [1.0, 1.0]
+            y = c.conv_forward(x, w)
+            dx, dw = c.conv_backward(x, w, g)
+            got[wd_ or "fp32"] = (y, dx, dw, c.comm_bytes)
+        finally:
+            c.shutdown()
+    y32, dx32, dw32, b32 = got["fp32"]
+    y16, dx16, dw16, b16 = got[dtype]
+    assert y16.dtype == np.float32 and dx16.dtype == np.float32
+    # flags/None markers keep the ratio just under 2
+    assert 1.8 < b32 / b16 <= 2.0, (b32, b16)
+    np.testing.assert_allclose(y16, y32, rtol=0.05, atol=0.15)
+    np.testing.assert_allclose(dx16, dx32, rtol=0.05, atol=0.2)
+    np.testing.assert_allclose(dw16, dw32, rtol=0.05, atol=0.6)
+
+
+def test_codec_socket_roundtrip_is_lossless_for_fp16_representable():
+    """fp16-representable payloads cross the codec bit-exactly, nested
+    structures included, and the counters see the ENCODED size."""
+    from repro.core.master_slave import _Socket
+
+    s = _Socket(wire_dtype=np.dtype(np.float16))
+    payload = {
+        "a": np.arange(8, dtype=np.float32),
+        "b": (np.ones((2, 2), np.float32), [np.zeros(3, np.float64)]),
+        "flag": "keep-me",
+        "i": np.arange(4, dtype=np.int32),  # non-float: untouched
+    }
+    s.write_to_slave(payload)
+    got = s.read_on_slave()
+    assert got["flag"] == "keep-me"
+    assert got["a"].dtype == np.float32
+    np.testing.assert_array_equal(got["a"], payload["a"])
+    np.testing.assert_array_equal(got["b"][0], payload["b"][0])
+    assert got["i"].dtype == np.int32
+    # 8 + 4 + 3 floats at 2B encoded + 4 int32 at 4B + 8B for the string
+    assert s.bytes_to_slave == (8 + 4 + 3) * 2 + 4 * 4 + 8
+
+
+# ---------------------------------------------------------------------------
+# partition="auto": the comm-extended Eq. 1 chooses the axis
+# ---------------------------------------------------------------------------
+
+
+def _auto_pick(bandwidth, x_shape, w_shape, probe_flops=None):
+    c = HeteroCluster(
+        [1.0, 1.0, 1.0], partition="auto", bandwidth_mbps=bandwidth
+    )
+    try:
+        c.probe_times = [1.0, 1.0, 1.0]
+        c.probe_flops = probe_flops
+        mode = c._resolve_mode(x_shape, w_shape, None)
+        pred = (
+            c.predict_partition_seconds(x_shape, w_shape)
+            if bandwidth is not None
+            else None
+        )
+        return mode, pred, dict(c.partition_choices)
+    finally:
+        c.shutdown()
+
+
+def test_auto_picks_spatial_on_slow_link_for_activation_heavy_layer():
+    """Activation-dominated layer (big H, cin == cout, small kernel) on a
+    slow link: spatial's row-strip scatter beats re-broadcasting the full
+    input, and auto must say so — and record its pick."""
+    x_shape, w_shape = (8, 32, 32, 16), (3, 3, 16, 16)
+    mode, pred, choices = _auto_pick(10.0, x_shape, w_shape)
+    assert mode == "spatial"
+    assert pred["spatial"] < pred["kernel"]
+    assert choices[(x_shape, w_shape)] == "spatial"
+
+
+def test_predictor_weighs_backward_wire():
+    """op="bwd"/"train" predictions include the backward's wire (kernel
+    mode re-broadcasts x and returns a full dX; spatial ships strips) —
+    strictly more traffic, so never a smaller predicted time."""
+    c = HeteroCluster([1.0, 1.0, 1.0], partition="auto", bandwidth_mbps=10.0)
+    try:
+        c.probe_times = [1.0, 1.0, 1.0]
+        shapes = ((8, 32, 32, 16), (3, 3, 16, 16))
+        pred = {
+            op: c.predict_partition_seconds(*shapes, op)
+            for op in ("conv", "bwd", "train")
+        }
+        for mode in ("kernel", "spatial"):
+            assert pred["bwd"][mode] > pred["conv"][mode]
+            assert pred["train"][mode] > pred["bwd"][mode]
+        # kernel mode's backward pays the full-x re-broadcast + full-dX
+        # return, so the backward penalizes it MORE than spatial
+        assert (pred["train"]["kernel"] / pred["conv"]["kernel"]
+                > pred["train"]["spatial"] / pred["conv"]["spatial"])
+    finally:
+        c.shutdown()
+
+
+def test_cluster_rejects_sub_one_slowdowns():
+    """The op-level emulation can only sleep, never speed up — a sub-1
+    slowdown would probe fast but compute at host speed, so the
+    constructor rejects it and points at parameterized sim backends."""
+    with pytest.raises(ValueError, match="sim:5e9"):
+        HeteroCluster([1.0, 0.5])
+
+
+def test_auto_picks_kernel_on_free_links():
+    """Infinitely fast links: the wire is free, the halo isn't — auto
+    keeps the paper's kernel axis."""
+    mode, _, _ = _auto_pick(None, (8, 32, 32, 16), (3, 3, 16, 16))
+    assert mode == "kernel"
+
+
+def test_auto_picks_kernel_when_gather_dominates():
+    """cout >> cin: the y gather dwarfs the x scatter, spatial saves
+    little and pays the halo + full-kernel broadcast — kernel wins."""
+    mode, pred, _ = _auto_pick(10.0, (4, 8, 8, 4), (5, 5, 4, 256))
+    assert mode == "kernel"
+    assert pred["kernel"] <= pred["spatial"]
+
+
+def test_auto_end_to_end_improves_wall_clock_under_slow_link():
+    """conv_forward with auto on a slow emulated link at an
+    activation-heavy shape is faster than forcing kernel mode (the
+    acceptance wall-clock check, deterministic sim compute)."""
+    import time
+
+    rng = np.random.default_rng(8)
+    x = rng.normal(size=(4, 32, 32, 16)).astype(np.float32)
+    w = rng.normal(size=(3, 3, 16, 16)).astype(np.float32)
+    probe_flops = 2.0 * 4 * 32 * 32 * 9 * 16 * 16
+    walls = {}
+    for mode in ("kernel", "auto"):
+        c = HeteroCluster(
+            [1.0, 1.0, 1.0], ["sim"] * 3, partition=mode,
+            bandwidth_mbps=25.0,
+        )
+        try:
+            c.probe_times = [probe_flops / 1e9] * 3
+            c.probe_flops = probe_flops
+            c.conv_forward(x, w)  # warm (plans, caches)
+            t0 = time.perf_counter()
+            c.conv_forward(x, w)
+            walls[mode] = time.perf_counter() - t0
+            if mode == "auto":
+                assert set(c.partition_choices.values()) == {"spatial"}
+        finally:
+            c.shutdown()
+    assert walls["auto"] < walls["kernel"], walls

@@ -207,6 +207,14 @@ def test_callback_deadlocks_fail_fast():
     finally:
         c.shutdown()
 
+    # the parameterized registry name must not slip past the check
+    c = HeteroCluster([1.0, 1.0], ["numpy", "pallas:interpret"])
+    try:
+        with pytest.raises(RuntimeError, match="interpret"):
+            make_distributed_conv(c)
+    finally:
+        c.shutdown()
+
 
 def test_comp_aware_shares_discount_master():
     """A busy master (non-conv duty) loses conv kernels to the slaves;
