@@ -19,13 +19,18 @@ devices.  Four comparisons:
      codec's byte reduction (``codec_gain``), and the train-step
      wall-clock of ``partition="auto"`` vs the paper's kernel axis under
      a 25 Mbps link (``auto_partition_trainstep_gain``) — all exact byte
-     counts or deterministic sim compute.
+     counts or deterministic sim compute,
+  6. the transport seam: the SAME deterministic sim cluster driven over
+     real localhost TCP subprocess slaves vs the in-process queue
+     emulation (``tcp_vs_inproc_overhead``) — what serialization +
+     kernel sockets + real process scheduling cost on top of the
+     emulated wire.
 
-Rows 1-3 and 5 run the ``sim`` backend (deterministic sleep-for-flops
-virtual devices) plus emulated link bandwidth, so the protocol effects
-are not drowned by host CPU contention; row 4 is genuinely noisy host
-compute.  ``TRAJECTORY_ROWS`` names the rows the CI bench-smoke lane
-extracts into ``BENCH_PR3.json``, the machine-readable perf trajectory.
+Rows 1-3 and 5-6 run the ``sim`` backend (deterministic sleep-for-flops
+virtual devices), so the protocol effects are not drowned by host CPU
+contention; row 4 is genuinely noisy host compute.  ``TRAJECTORY_ROWS``
+names the rows the CI bench-smoke lane extracts into ``BENCH_PR4.json``,
+the machine-readable perf trajectory.
 """
 from __future__ import annotations
 
@@ -38,13 +43,14 @@ from repro.core.master_slave import HeteroCluster
 SLOWDOWNS = [1.0, 1.5, 3.0]  # master + 1.5x slave + 3x-slow slave
 
 # The deterministic rows the CI bench-smoke lane extracts into
-# BENCH_PR3.json (benchmarks/run.py --trajectory): exact byte counts and
+# BENCH_PR4.json (benchmarks/run.py --trajectory): exact byte counts and
 # sim-backend ratios, comparable across commits.
 TRAJECTORY_ROWS = (
     "comm_bytes_kernel_vs_spatial",
     "codec_gain",
     "auto_partition_trainstep_gain",
     "trainstep_pipeline_gain",
+    "tcp_vs_inproc_overhead",
 )
 
 
@@ -319,6 +325,37 @@ def run(smoke: bool = False):
         ("auto_partition_trainstep_gain", gain,
          f"gain={gain:.2f}x (>1 means partition='auto' beats the paper's "
          f"kernel axis under a 25 Mbps link; ratio, not us)")
+    )
+
+    # -- 6. the transport seam: real TCP subprocess slaves vs the -------
+    # in-process queue emulation, SAME deterministic sim cluster and
+    # workload (pipelined 2-layer forward chain).  The ratio is what the
+    # real wire costs — pickle serialization, kernel socket hops, process
+    # scheduling — relative to the emulation the repo benched until now.
+    # Sim compute dominates by construction, so the ratio stays near 1
+    # unless the transport regresses.
+    results = {}
+    for kind in ("inproc", "tcp"):
+        cluster = HeteroCluster(
+            SLOWDOWNS, ["sim"] * len(SLOWDOWNS),
+            pipeline=True, microbatches=micro, transport=kind,
+        )
+        try:
+            cluster.probe_times = list(SLOWDOWNS)  # exact Eq. 1 for sim
+            results[kind] = _time_chain(
+                cluster, xs, [ws1, ws2], [_relu_pool, _relu_pool], reps
+            )
+        finally:
+            cluster.shutdown()
+        rows.append(
+            (f"chain2_sim_{kind}_transport", results[kind] * 1e6,
+             "pipelined 2-layer chain, deterministic sim compute")
+        )
+    ratio = results["tcp"] / results["inproc"]
+    rows.append(
+        ("tcp_vs_inproc_overhead", ratio,
+         f"tcp/inproc={ratio:.2f}x wall-clock on the same sim cluster "
+         f"(~1 means the real wire adds little; ratio, not us)")
     )
 
     # -- 4. real compute backends on this host (noisy, informational) ----

@@ -10,9 +10,10 @@ master/slave cluster and the data-parallel baseline on this host.
 tiny-shape pass — the CI benchmark-smoke lane.  ``--json`` additionally
 writes the rows as a JSON artifact (the ``BENCH_*.json`` perf
 trajectory).  ``--trajectory OUT`` extracts just the DETERMINISTIC
-trajectory rows (bench_master_slave.TRAJECTORY_ROWS: wire-byte ratios
-and sim-backend gains, comparable across commits) — the CI bench-smoke
-lane writes them to ``BENCH_PR3.json`` at the repo root.
+trajectory rows (bench_master_slave.TRAJECTORY_ROWS: wire-byte ratios,
+sim-backend gains and the tcp-transport overhead, comparable across
+commits) — the CI bench-smoke lane writes them to ``BENCH_PR4.json`` at
+the repo root.
 """
 from __future__ import annotations
 
@@ -60,7 +61,7 @@ def main() -> None:
     ap.add_argument("--trajectory", default=None, metavar="OUT",
                     help="also write the deterministic trajectory rows "
                          "(TRAJECTORY_ROWS) as a JSON artifact, e.g. "
-                         "BENCH_PR3.json")
+                         "BENCH_PR4.json")
     args = ap.parse_args()
     if args.only:
         names = args.only.split(",")

@@ -1,27 +1,44 @@
 """The paper's primary contribution: heterogeneity-aware kernel-sharded
 model parallelism for convolutional layers (Marques, Falcao, Alexandre,
-2017), plus its TPU-mesh generalisation."""
-from repro.core.costmodel import (  # noqa: F401
-    ConvLayerSpec,
-    comm_time_s,
-    paper_network,
-    predict_step_time,
-    upload_bytes,
-    upload_elements,
-    upload_elements_nodes,
-)
-from repro.core.backends import (  # noqa: F401
-    available_backends,
-    get_backend,
-    probe_conv_time,
-    register_backend,
-)
-from repro.core.master_slave import HeteroCluster, make_distributed_conv  # noqa: F401
-from repro.core.partitioner import (  # noqa: F401
-    allocate_kernels,
-    predicted_conv_time,
-    probe_device,
-    speedup,
-    workload_shares,
-)
-from repro.core.conv_shard import make_sharded_conv  # noqa: F401
+2017), plus its TPU-mesh generalisation.
+
+Attribute access is lazy (PEP 562): ``from repro.core import
+HeteroCluster`` works as before, but merely importing ``repro.core``
+no longer drags in jax — TCP slave subprocesses
+(``-m repro.core.cluster.protocol``) stay numpy-light at spawn.
+"""
+from __future__ import annotations
+
+from repro.lazy import lazy_exports
+
+_EXPORTS = {
+    # costmodel
+    "ConvLayerSpec": "repro.core.costmodel",
+    "comm_time_s": "repro.core.costmodel",
+    "paper_network": "repro.core.costmodel",
+    "predict_step_time": "repro.core.costmodel",
+    "upload_bytes": "repro.core.costmodel",
+    "upload_elements": "repro.core.costmodel",
+    "upload_elements_nodes": "repro.core.costmodel",
+    # backends
+    "available_backends": "repro.core.backends",
+    "get_backend": "repro.core.backends",
+    "probe_conv_time": "repro.core.backends",
+    "register_backend": "repro.core.backends",
+    # master/slave cluster (core/cluster/ package behind the shim)
+    "HeteroCluster": "repro.core.master_slave",
+    "make_distributed_conv": "repro.core.master_slave",
+    # partitioner
+    "allocate_kernels": "repro.core.partitioner",
+    "effective_times": "repro.core.partitioner",
+    "predicted_conv_time": "repro.core.partitioner",
+    "probe_device": "repro.core.partitioner",
+    "speedup": "repro.core.partitioner",
+    "workload_shares": "repro.core.partitioner",
+    # mesh sharding
+    "make_sharded_conv": "repro.core.conv_shard",
+}
+
+__all__ = sorted(_EXPORTS)
+
+__getattr__, __dir__ = lazy_exports(__name__, globals(), _EXPORTS)

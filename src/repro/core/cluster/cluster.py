@@ -1,0 +1,751 @@
+"""Algorithms 1 & 2 — the master node and its cluster of slaves.
+
+``HeteroCluster`` is the master (Algorithm 1): it probes every device,
+computes the Eq. 1(+comm, +comp-duty) shares, and drives the per-op
+scatter/gather halves the schedulers (core/cluster/scheduler.py)
+pipeline.  The protocol per convolutional layer (Algorithm 1 lines
+6-23): broadcast the inputs, scatter per-device kernel shards (or ship
+row strips + halos in spatial mode), every node convolves its shard —
+master included — then gather and reassemble on the master, which also
+computes every non-convolutional layer alone.
+
+``transport`` picks the wire:
+
+    "inproc" (default) — every slave is a daemon THREAD, every link an
+        ``InProcTransport`` queue pair with optional emulated
+        ``bandwidth_mbps`` (the seed behaviour: heterogeneity emulated
+        with per-slave slowdown sleeps, links with delivery threads).
+
+    "tcp" — every slave is a real OS PROCESS (spawned with
+        ``python -m repro.core.cluster.protocol``) connected back over a
+        localhost ``TCPTransport``: comm cost, serialization, and
+        slave-side compute are measured, not emulated.  ``probe()``
+        additionally measures each link's real bandwidth with an echo
+        probe and feeds it to the comm-aware partitioner
+        (``bandwidth_mbps`` then only serves as an explicit override for
+        the planning terms; nothing is delayed artificially).
+
+Heterogeneity is emulated with per-slave *slowdown factors*: after
+computing, a slave sleeps (slowdown-1) x the measured compute time,
+appearing exactly like a proportionally slower machine to both the
+probe and the training loop — in a thread or a subprocess alike.
+"""
+from __future__ import annotations
+
+import hmac
+import os
+import secrets
+import subprocess
+import sys
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.backends import (
+    get_backend,
+    probe_conv_time,
+    strip_conv,
+    strip_conv_vjp,
+)
+from repro.core.cluster import codec, plans, protocol, scheduler
+from repro.core.cluster.transport import (
+    TRANSPORT_KINDS,
+    InProcTransport,
+    TCPListener,
+    TCPTransport,
+    _recv_exact,
+)
+from repro.core.partitioner import allocate_kernels, effective_times
+
+
+def _np_probe(*, slowdown: float = 1.0, **probe_kwargs) -> float:
+    """The paper's §4.1.1 probe on the numpy backend (seed behaviour)."""
+    return probe_conv_time("numpy", slowdown=slowdown, **probe_kwargs)
+
+
+def _src_pythonpath() -> str:
+    """The import root of this package, prepended to a slave subprocess's
+    PYTHONPATH so ``-m repro.core.cluster.protocol`` resolves without an
+    installed wheel (the repo's src/ layout)."""
+    here = os.path.abspath(os.path.dirname(__file__))  # .../src/repro/core/cluster
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+class HeteroCluster:
+    """The master node (Algorithm 1) plus ``n_slaves`` slaves.
+
+    Device 0 is the master itself (it convolves its own shard while the
+    slaves work).  ``slowdowns[i]`` emulates device i's relative speed
+    (1.0 = this host's full speed); slowdowns[0] applies to the master.
+
+    ``backends[i]`` names device i's conv backend (core/backends.py);
+    defaults to ``numpy`` everywhere, the seed behaviour.
+
+    ``pipeline=True`` enables the double-buffered microbatch protocol:
+    ``conv_forward``/``conv_backward`` split the batch into up to
+    ``microbatches`` slices and keep one scatter in flight ahead of every
+    gather.  With ``pipeline=False`` (default) every call is a single
+    scatter -> compute -> gather barrier, the paper's Algorithm 1.
+
+    ``transport`` is the wire: ``"inproc"`` threads+queues (default) or
+    ``"tcp"`` subprocess slaves over real localhost sockets — see the
+    module docstring.  ``bandwidth_mbps`` (single float or one value PER
+    SLAVE) emulates finite links on inproc; on tcp it only overrides the
+    measured planning bandwidth.  Default ``None`` = infinitely fast
+    emulated links (inproc) / measure at ``probe()`` (tcp).
+
+    ``comp_aware=True`` (default) makes the Eq. 1 shares discount the
+    master's measured non-conv duty: once ``conv_forward_chain`` or
+    ``conv_train_chain`` has observed master-only between/head work
+    (``LayerTiming.comp_s`` vs ``master_conv_s``), ``shares_for`` inflates
+    the master's probe time by ``1/(1-duty)`` automatically.
+
+    ``partition`` picks the conv split axis: ``"kernel"`` (the paper,
+    default), ``"spatial"`` (height strips + halo exchange — each slave
+    gets only its rows instead of the full activation), or ``"auto"``
+    (per layer, the axis with the smaller predicted wall-clock over the
+    measured links).  ``wire_dtype`` ("fp16"/"bf16") turns on the
+    compact wire codec on either transport.
+    """
+
+    def __init__(
+        self,
+        slowdowns: Sequence[float],
+        backends: Optional[Sequence[str]] = None,
+        *,
+        pipeline: bool = False,
+        microbatches: int = 4,
+        bandwidth_mbps: Union[None, float, Sequence[Optional[float]]] = None,
+        comp_aware: bool = True,
+        partition: str = "kernel",
+        wire_dtype: Optional[str] = None,
+        transport: str = "inproc",
+    ):
+        assert len(slowdowns) >= 1
+        if any(sd < 1.0 for sd in slowdowns):
+            # the op-level emulation can only SLEEP (slowdown-1)x the
+            # measured compute — it cannot make the host faster — so a
+            # sub-1 slowdown would probe fast (probe_conv_time scales
+            # both directions) yet compute at 1.0x, and Eq. 1 would
+            # overfeed the device.  Emulate faster devices with a
+            # parameterized sim backend instead.
+            raise ValueError(
+                f"slowdowns must be >= 1.0 (got {list(slowdowns)}): the "
+                f"cluster emulates slower devices by sleeping; for a "
+                f"FASTER virtual device use a parameterized sim backend, "
+                f"e.g. backends=['sim:5e9', ...]"
+            )
+        self.slowdowns = list(slowdowns)
+        self.n_slaves = len(slowdowns) - 1
+        if backends is None:
+            backends = ["numpy"] * len(self.slowdowns)
+        assert len(backends) == len(self.slowdowns), "one backend per device"
+        self.backends = list(backends)
+        # resolve every name NOW: an unknown backend must raise here, not
+        # kill a slave later and leave the master blocked forever
+        for name in self.backends:
+            get_backend(name)
+        self._master_backend = get_backend(self.backends[0])
+        self.pipeline = bool(pipeline)
+        self.microbatches = int(microbatches)
+        if partition not in plans.PARTITION_MODES:
+            raise ValueError(
+                f"partition must be one of {plans.PARTITION_MODES}, "
+                f"got {partition!r}"
+            )
+        self.partition = partition
+        self.partition_choices: Dict[tuple, str] = {}  # auto's per-layer picks
+        self.wire_dtype = wire_dtype
+        self._wire_np_dtype = codec.resolve_wire_dtype(wire_dtype)
+        self._wire_itemsize = (
+            self._wire_np_dtype.itemsize if self._wire_np_dtype is not None else 4
+        )
+        if transport not in TRANSPORT_KINDS:
+            raise ValueError(
+                f"transport must be one of {TRANSPORT_KINDS}, got {transport!r}"
+            )
+        self.transport = transport
+        if bandwidth_mbps is None or isinstance(bandwidth_mbps, (int, float)):
+            self.bandwidths: List[Optional[float]] = (
+                [bandwidth_mbps] * self.n_slaves
+            )
+        else:
+            self.bandwidths = list(bandwidth_mbps)
+            assert len(self.bandwidths) == self.n_slaves, "one bandwidth per slave"
+        # what the USER pinned, frozen: re-probing on tcp must overwrite
+        # stale measurements, never a deliberate override (and never
+        # mistake an old measurement for one)
+        self._bandwidth_overrides = list(self.bandwidths)
+        self.threads: list = []
+        self.procs: List[subprocess.Popen] = []
+        self._listener: Optional[TCPListener] = None
+        if transport == "tcp":
+            self.sockets = self._spawn_tcp_slaves()
+        else:
+            self.sockets = [
+                InProcTransport(bw, self._wire_np_dtype) for bw in self.bandwidths
+            ]
+            import threading
+
+            self.threads = [
+                threading.Thread(
+                    target=protocol.slave_loop,
+                    args=(s.slave_endpoint(), sd, bk, i),
+                    daemon=True,
+                )
+                for i, (s, sd, bk) in enumerate(
+                    zip(self.sockets, self.slowdowns[1:], self.backends[1:]),
+                    start=1,
+                )
+            ]
+            for t in self.threads:
+                t.start()
+        self.probe_times: Optional[List[float]] = None
+        self.probe_flops: Optional[float] = None  # flops of the probe workload
+        self.measured_bandwidths: List[Optional[float]] = [None] * self.n_slaves
+        self.timing = scheduler.LayerTiming()
+        self.comp_aware = bool(comp_aware)
+        self.comp_duty = 0.0  # measured master non-conv duty (see shares_for)
+        self._duty_mark = (0.0, 0.0)  # (comp_s, master_conv_s) at last update
+        self._seq_issued = 0
+        self._seq_gathered = 0
+        self._shut = False
+
+    # -- tcp slave process management -------------------------------------
+    _AUTH_BYTES = 32
+
+    def _spawn_tcp_slaves(self) -> List[TCPTransport]:
+        """Spawn one OS process per slave, accept their connections on a
+        localhost listener, and hand back the per-device channels in
+        device order (accept order is whoever wins the connect race; the
+        ("hello", device) handshake re-sorts).
+
+        Connections are AUTHENTICATED before anything is unpickled: each
+        slave receives a fresh per-cluster random token via its
+        environment (REPRO_CLUSTER_AUTH — env, not argv, so it never
+        shows in ps) and must present it as its first raw bytes.  The
+        wire is pickle, so an unauthenticated listener would hand any
+        local process arbitrary code execution in the master."""
+        self._listener = TCPListener()
+        token = secrets.token_bytes(self._AUTH_BYTES)
+        env = os.environ.copy()
+        src = _src_pythonpath()
+        env["PYTHONPATH"] = src + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+        )
+        env["REPRO_CLUSTER_AUTH"] = token.hex()
+        for i, (sd, bk) in enumerate(
+            zip(self.slowdowns[1:], self.backends[1:]), start=1
+        ):
+            cmd = [
+                sys.executable, "-m", "repro.core.cluster.protocol",
+                "--host", self._listener.host,
+                "--port", str(self._listener.port),
+                "--device", str(i),
+                "--slowdown", str(sd),
+                "--backend", bk,
+            ]
+            if self.wire_dtype is not None:
+                cmd += ["--wire-dtype", self.wire_dtype]
+            self.procs.append(subprocess.Popen(cmd, env=env))
+        by_device: Dict[int, TCPTransport] = {}
+        try:
+            for _ in range(self.n_slaves):
+                conn = self._listener.accept(timeout_s=60.0)
+                conn.settimeout(10.0)  # a silent stranger must not hang us
+                presented = _recv_exact(conn, self._AUTH_BYTES)
+                if not hmac.compare_digest(presented, token):
+                    conn.close()
+                    raise RuntimeError(
+                        "TCP slave handshake failed: connection did not "
+                        "present the cluster auth token (stray local "
+                        "process on the listener port?)"
+                    )
+                conn.settimeout(None)
+                chan = TCPTransport(conn, self._wire_np_dtype)
+                hello = chan.read_on_master()
+                # RuntimeError, not assert: -O must not let a malformed
+                # handshake mispair device channels
+                if (
+                    not isinstance(hello, tuple) or len(hello) != 2
+                    or hello[0] != "hello"
+                ):
+                    raise RuntimeError(f"bad slave handshake frame {hello!r}")
+                by_device[hello[1]] = chan
+        except Exception:
+            for p in self.procs:
+                p.kill()
+            self._listener.close()
+            raise
+        for chan in by_device.values():
+            chan.reset_counters()  # the handshake is not protocol traffic
+        return [by_device[i] for i in range(1, self.n_slaves + 1)]
+
+    # -- §4.1.1 pre-processing -------------------------------------------
+    def probe(self, **probe_kwargs) -> List[float]:
+        """Every device runs the timed reference convolution on its OWN
+        backend — sequential so the 1-core host's timings do not
+        interfere.  Also records the probe workload's FLOPs (the scale
+        factor that lets the comm-aware partitioner and the auto axis
+        chooser turn probe times into absolute per-layer predictions)
+        and, on the tcp transport, each link's measured round-trip
+        bandwidth — the real wire feeds ``link_aware_times`` instead of
+        the ``bandwidth_mbps`` knob."""
+        master_t = probe_conv_time(
+            self._master_backend, slowdown=self.slowdowns[0], **probe_kwargs
+        )
+        slave_ts = []
+        for s in self.sockets:
+            s.write_to_slave(("probe", probe_kwargs))
+            slave_ts.append(self._check_result(s.read_on_master()))
+        self.probe_times = [master_t] + slave_ts
+        self.probe_flops = (
+            2.0
+            * probe_kwargs["batch"]
+            * probe_kwargs["image_size"] ** 2
+            * probe_kwargs["kernel_size"] ** 2
+            * probe_kwargs["in_channels"]
+            * probe_kwargs["num_kernels"]
+        )
+        if self.transport == "tcp":
+            self.measured_bandwidths = [
+                s.measure_bandwidth_mbps() for s in self.sockets
+            ]
+            # an explicit constructor bandwidth_mbps stays an override for
+            # planning; otherwise every probe() refreshes the measurement
+            self.bandwidths = [
+                ovr if ovr is not None else meas
+                for ovr, meas in zip(
+                    self._bandwidth_overrides, self.measured_bandwidths
+                )
+            ]
+        return self.probe_times
+
+    def _effective_times(self) -> List[float]:
+        """Probe times with the comp-aware master discount applied."""
+        assert self.probe_times is not None, "run probe() first"
+        times = self.probe_times
+        if self.comp_aware and self.comp_duty > 0.0:
+            times = effective_times(
+                times, comp_duties={0: self.comp_duty}
+            )
+        return list(times)
+
+    def shares_for(
+        self,
+        num_kernels: int,
+        *,
+        unit_bytes: float = 0.0,
+        layer_flops: Optional[float] = None,
+    ) -> np.ndarray:
+        """Eq. 1 unit counts (kernels or rows) from the probe times; with
+        ``comp_aware`` the master's measured non-conv duty discounts its
+        share.  When the layer's wire cost is known (``unit_bytes`` per
+        unit, ``layer_flops`` to scale probe times to this layer) and the
+        links are finite, each slave's comm term joins its compute term —
+        the comm-extended Eq. 1 (partitioner.effective_times)."""
+        times = self._effective_times()
+        if (
+            unit_bytes > 0.0
+            and layer_flops
+            and self.probe_flops
+            and any(bw is not None for bw in self.bandwidths)
+        ):
+            scale = layer_flops / self.probe_flops
+            wire = [0.0] + [
+                float(num_kernels) * unit_bytes if bw is not None else 0.0
+                for bw in self.bandwidths
+            ]
+            times = effective_times(
+                [t * scale for t in times],
+                wire_bytes=wire,
+                bandwidths_mbps=[None] + list(self.bandwidths),
+            )
+        return allocate_kernels(num_kernels, times)
+
+    def _update_comp_duty(self):
+        """Refresh the measured non-conv duty — the fraction of the
+        master's busy time spent OUTSIDE its conv shard — from the window
+        since the LAST update (deltas, not cumulative): a one-off cost in
+        an early step (jit compilation of the master-only stages, cold
+        caches) then mis-shapes at most the next step's shares before the
+        first clean window corrects it."""
+        t = self.timing
+        dc = t.comp_s - self._duty_mark[0]
+        dm = t.master_conv_s - self._duty_mark[1]
+        self._duty_mark = (t.comp_s, t.master_conv_s)
+        if dc + dm > 0.0:
+            self.comp_duty = dc / (dc + dm)
+
+    # -- partition planning (core/cluster/plans.py) -----------------------
+    def _unit_bytes(self, x_shape, w_shape, mode: str, op: str) -> float:
+        return plans.unit_bytes(x_shape, w_shape, mode, op, self._wire_itemsize)
+
+    def predict_partition_seconds(
+        self, x_shape, w_shape, op: str = "conv"
+    ) -> Dict[str, float]:
+        return plans.predict_partition_seconds(self, x_shape, w_shape, op)
+
+    def _resolve_mode(
+        self, x_shape, w_shape, override: Optional[str], op: str = "conv"
+    ) -> str:
+        return plans.resolve_mode(self, x_shape, w_shape, override, op)
+
+    def plan_conv(
+        self, x_shape, w: np.ndarray, op: str = "conv",
+        partition: Optional[str] = None,
+    ) -> plans.LayerPlan:
+        return plans.plan_conv(self, x_shape, w, op, partition)
+
+    # -- async scatter/gather halves -------------------------------------
+    def _split(self, w: np.ndarray, counts: np.ndarray) -> List[np.ndarray]:
+        return plans.split_kernels(w, counts)
+
+    def scatter_conv(
+        self, x: np.ndarray, w: np.ndarray, *, partition: Optional[str] = None
+    ) -> scheduler.Pending:
+        """Scatter one conv: broadcast x + kernel shards (kernel mode) or
+        height strips + the full kernel (spatial mode); returns a handle.
+        The master's own shard runs at gather time."""
+        x = np.asarray(x, np.float32)
+        plan = self.plan_conv(x.shape, w, "conv", partition)
+        return self._scatter_conv_planned(x, plan, send_weights=True)
+
+    def _scatter_conv_planned(
+        self, x: np.ndarray, plan: plans.LayerPlan, send_weights: bool
+    ) -> scheduler.Pending:
+        if plan.mode == "kernel":
+            return self._scatter_conv_shards(x, plan.shards, send_weights)
+        t0 = time.perf_counter()
+        for sock, (lo, hi, pt, pb) in zip(self.sockets, plan.halos[1:]):
+            sock.write_to_slave(
+                ("sconv", (x[:, lo:hi], plan.w if send_weights else None, pt, pb))
+            )
+        now = time.perf_counter()
+        self.timing.comm_s += now - t0
+        self._seq_issued += 1
+        return scheduler.Pending(
+            "conv", self._seq_issued, x, plan.w, None, now,
+            mode="spatial", rows=plan.rows, halos=plan.halos,
+        )
+
+    def _scatter_conv_shards(
+        self, x: np.ndarray, shards: List[np.ndarray], send_weights: bool
+    ) -> scheduler.Pending:
+        """send_weights=False sends w=None: the slave reuses its cached
+        shard, so pipelined microbatches pay the weight traffic once."""
+        t0 = time.perf_counter()
+        for sock, shard in zip(self.sockets, shards[1:]):
+            sock.write_to_slave(("conv", (x, shard if send_weights else None)))
+        now = time.perf_counter()
+        self.timing.comm_s += now - t0
+        self._seq_issued += 1
+        return scheduler.Pending("conv", self._seq_issued, x, shards[0], None, now)
+
+    def gather_conv(self, p: scheduler.Pending) -> np.ndarray:
+        """Compute the master's shard, collect the slaves' feature maps
+        (FIFO: gathers must be issued in scatter order), concatenate —
+        along channels (kernel mode) or height (spatial strips)."""
+        self._check_order(p, "conv")
+        t0 = time.perf_counter()
+        if p.mode == "spatial":
+            lo, hi, pt, pb = p.halos[0]
+            my_out = self._master_compute(
+                lambda: strip_conv(self._master_backend, p.x[:, lo:hi], p.my_w, pt, pb)
+            )
+            axis = 1
+        else:
+            my_out = self._master_compute(
+                lambda: protocol.conv_shard(self._master_backend, p.x, p.my_w)
+            )
+            axis = -1
+        outs = [my_out]
+        t_wait = time.perf_counter()
+        for sock in self.sockets:
+            outs.append(self._check_result(sock.read_on_master()))
+        t1 = time.perf_counter()
+        self._account_gather(p, t0, t_wait, t1)
+        return np.concatenate(outs, axis=axis)
+
+    def scatter_bwd(
+        self, x: np.ndarray, w: np.ndarray, g: np.ndarray,
+        *, partition: Optional[str] = None,
+    ) -> scheduler.Pending:
+        x = np.asarray(x, np.float32)
+        g = np.asarray(g, np.float32)
+        plan = self.plan_conv(x.shape, w, "bwd", partition)
+        return self._scatter_bwd_planned(x, plan, g, send_weights=True)
+
+    def _scatter_bwd_planned(
+        self, x: np.ndarray, plan: plans.LayerPlan, g: np.ndarray,
+        send_weights: bool,
+    ) -> scheduler.Pending:
+        if plan.mode == "kernel":
+            return self._scatter_bwd_shards(
+                x, plan.shards, g, plan.counts, send_weights
+            )
+        t0 = time.perf_counter()
+        for sock, (r0, r1), (lo, hi, pt, pb) in zip(
+            self.sockets, plan.rows[1:], plan.halos[1:]
+        ):
+            sock.write_to_slave(
+                ("sbwd", (
+                    x[:, lo:hi], plan.w if send_weights else None,
+                    g[:, r0:r1], pt, pb,
+                ))
+            )
+        now = time.perf_counter()
+        self.timing.comm_s += now - t0
+        self._seq_issued += 1
+        r0, r1 = plan.rows[0]
+        return scheduler.Pending(
+            "bwd", self._seq_issued, x, plan.w, g[:, r0:r1], now,
+            mode="spatial", rows=plan.rows, halos=plan.halos,
+        )
+
+    def _scatter_bwd_shards(
+        self,
+        x: np.ndarray,
+        w_shards: List[np.ndarray],
+        g: np.ndarray,
+        counts: np.ndarray,
+        send_weights: bool,
+    ) -> scheduler.Pending:
+        g_shards = self._split(g, counts)
+        t0 = time.perf_counter()
+        for sock, ws, gs in zip(self.sockets, w_shards[1:], g_shards[1:]):
+            sock.write_to_slave(("bwd", (x, ws if send_weights else None, gs)))
+        now = time.perf_counter()
+        self.timing.comm_s += now - t0
+        self._seq_issued += 1
+        return scheduler.Pending(
+            "bwd", self._seq_issued, x, w_shards[0], g_shards[0], now
+        )
+
+    def gather_bwd(self, p: scheduler.Pending) -> Tuple[np.ndarray, np.ndarray]:
+        """Master's shard VJP + gather.  Kernel mode: sum partial dX,
+        concat dW shards.  Spatial mode: overlap-ADD each device's halo'd
+        dX rows into the full dX (the seam sums) and SUM the full-kernel
+        dW contributions."""
+        self._check_order(p, "bwd")
+        t0 = time.perf_counter()
+        if p.mode == "spatial":
+            lo, hi, pt, pb = p.halos[0]
+            dxh, dw = self._master_compute(
+                lambda: strip_conv_vjp(
+                    self._master_backend, p.x[:, lo:hi], p.my_w, p.my_g, pt, pb
+                )
+            )
+            dx = np.zeros(p.x.shape, np.float32)
+            dx[:, lo:hi] += dxh
+            t_wait = time.perf_counter()
+            for sock, (lo_i, hi_i, _pt, _pb) in zip(self.sockets, p.halos[1:]):
+                dxh_i, dw_i = self._check_result(sock.read_on_master())
+                dx[:, lo_i:hi_i] += dxh_i  # the halo seams overlap-sum here
+                dw = dw + dw_i
+            t1 = time.perf_counter()
+            self._account_gather(p, t0, t_wait, t1)
+            return dx, dw
+        dx, dw0 = self._master_compute(
+            lambda: protocol.bwd_shard(self._master_backend, p.x, p.my_w, p.my_g)
+        )
+        dws = [dw0]
+        t_wait = time.perf_counter()
+        for sock in self.sockets:
+            dxi, dwi = self._check_result(sock.read_on_master())
+            dx = dx + dxi
+            dws.append(dwi)
+        t1 = time.perf_counter()
+        self._account_gather(p, t0, t_wait, t1)
+        return dx, np.concatenate(dws, axis=-1)
+
+    def _check_result(self, out):
+        """Re-raise a slave's shipped exception at the gather that would
+        otherwise consume its (missing) result."""
+        if isinstance(out, protocol.SlaveError):
+            raise RuntimeError(
+                f"slave device {out.device} failed while computing its "
+                f"shard:\n{out.tb}"
+            )
+        return out
+
+    def _check_order(self, p: scheduler.Pending, op: str):
+        # real exceptions, not asserts: an out-of-order gather would pair
+        # one scatter's master shard with another's slave outputs and
+        # return silently corrupted feature maps (and -O strips asserts)
+        if p.op != op:
+            raise RuntimeError(f"pending is a {p.op!r} op, gathered as {op!r}")
+        if p.seq != self._seq_gathered + 1:
+            raise RuntimeError(
+                "gathers must follow scatter order (FIFO links): "
+                f"expected seq {self._seq_gathered + 1}, got {p.seq}"
+            )
+        self._seq_gathered = p.seq
+
+    def _master_compute(self, fn):
+        t0 = time.perf_counter()
+        out = fn()
+        el = time.perf_counter() - t0
+        if self.slowdowns[0] > 1.0:
+            time.sleep(el * (self.slowdowns[0] - 1.0))
+        self.timing.master_conv_s += time.perf_counter() - t0
+        return out
+
+    def _account_gather(self, p: scheduler.Pending, t0, t_wait, t1):
+        self.timing.conv_s += t1 - t0
+        self.timing.gather_wait_s += t1 - t_wait
+        # in-flight window minus the time the master actually blocked:
+        # the comm/compute overlap the pipeline buys
+        self.timing.overlap_s += max(0.0, (t_wait - p.t_issued))
+
+    def _master_comp(self, f, y: np.ndarray) -> np.ndarray:
+        t0 = time.perf_counter()
+        out = f(y)
+        self.timing.comp_s += time.perf_counter() - t0
+        return out
+
+    # -- the schedules (core/cluster/scheduler.py) ------------------------
+    def _n_micro(self, batch: int) -> int:
+        if not self.pipeline:
+            return 1
+        return max(1, min(self.microbatches, batch))
+
+    def microbatch_slices(self, batch: int) -> List[slice]:
+        return scheduler.microbatch_slices(self, batch)
+
+    def conv_forward(self, x, w, *, partition: Optional[str] = None):
+        return scheduler.conv_forward(self, x, w, partition=partition)
+
+    def conv_backward(self, x, w, g, *, partition: Optional[str] = None):
+        return scheduler.conv_backward(self, x, w, g, partition=partition)
+
+    def conv_forward_chain(self, x, layer_weights, between=None):
+        return scheduler.conv_forward_chain(self, x, layer_weights, between)
+
+    def conv_train_chain(self, x, layer_weights, between=None, head=None):
+        return scheduler.conv_train_chain(self, x, layer_weights, between, head)
+
+    def conv_train_step(self, x, layer_weights, between=None, head=None, *,
+                        update=None):
+        return scheduler.conv_train_step(
+            self, x, layer_weights, between, head, update=update
+        )
+
+    # ---------------------------------------------------------------------
+    @property
+    def comm_bytes(self) -> int:
+        return sum(s.total_bytes for s in self.sockets)
+
+    def reset_stats(self):
+        self.timing = scheduler.LayerTiming()
+        self._duty_mark = (0.0, 0.0)
+        for s in self.sockets:
+            s.reset_counters()
+
+    def shutdown(self):
+        if self._shut:
+            return
+        self._shut = True
+        for s in self.sockets:
+            try:
+                s.write_to_slave(protocol.TRAIN_OVER)
+            except RuntimeError:  # link already down (dead slave)
+                pass
+        for t in self.threads:
+            t.join(timeout=10)
+        deadline = time.monotonic() + 10
+        for p in self.procs:
+            try:
+                p.wait(timeout=max(0.1, deadline - time.monotonic()))
+            except subprocess.TimeoutExpired:
+                p.kill()
+                p.wait(timeout=5)
+        for s in self.sockets:
+            s.close()
+        if self._listener is not None:
+            self._listener.close()
+
+
+def make_distributed_conv(cluster: HeteroCluster):
+    """A drop-in ``conv_fn`` for models/cnn.py: jax custom-VJP convolution
+    whose forward and backward run over the cluster via callbacks.  If the
+    cluster is pipelined, every conv call is internally microbatched and
+    double-buffered; keep the master's backend ``numpy`` here (re-entering
+    jit dispatch on the blocked runtime thread can deadlock)."""
+    import jax
+    import jax.numpy as jnp
+
+    # Fail fast on the documented deadlock instead of hanging at 0% CPU:
+    # the callbacks below block the jax runtime thread while the master
+    # computes its shard, so any master backend that re-enters jit
+    # dispatch — everything but numpy — deadlocks, as does a pallas slave
+    # in interpret mode (interpret re-enters jax from the slave thread
+    # against the blocked callback; subprocess TCP slaves dodge this by
+    # construction, but inproc slave threads share the runtime).
+    if cluster.backends[0] != "numpy":
+        raise RuntimeError(
+            f"make_distributed_conv drives the cluster through jax host "
+            f"callbacks; the master (device 0) backend must be 'numpy', got "
+            f"{cluster.backends[0]!r}: re-entering jax from inside "
+            f"pure_callback deadlocks the runtime thread.  Use the direct "
+            f"conv_train_step / conv_forward drivers (no callbacks) for a "
+            f"non-numpy master."
+        )
+    if cluster.transport != "tcp":
+        interp_pallas = [
+            i for i, b in enumerate(cluster.backends)
+            if i > 0 and b.partition(":")[0] == "pallas"
+            and getattr(get_backend(b), "interpret", False)
+        ]
+        if interp_pallas:
+            raise RuntimeError(
+                f"slave device(s) {interp_pallas} run the 'pallas' backend in "
+                f"interpret mode, which re-enters jax from the slave thread "
+                f"and can deadlock against a blocked make_distributed_conv "
+                f"callback.  Use compiled TPU pallas, 'xla', or 'numpy' "
+                f"slaves here, drive the cluster directly via "
+                f"conv_train_step, or use transport='tcp' (subprocess slaves "
+                f"own their runtime)."
+            )
+
+    @jax.custom_vjp
+    def dconv(x, w, b):
+        y = _call_fwd(x, w)
+        return y + b[None, None, None, :]
+
+    def fwd(x, w, b):
+        y = _call_fwd(x, w)
+        return y + b[None, None, None, :], (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        dx, dw = _call_bwd(x, w, g)
+        db = jnp.sum(g, axis=(0, 1, 2))
+        return dx, dw, db
+
+    def _call_fwd(x, w):
+        out_shape = jax.ShapeDtypeStruct(x.shape[:-1] + (w.shape[-1],), x.dtype)
+        return jax.pure_callback(
+            lambda xx, ww: cluster.conv_forward(np.asarray(xx), np.asarray(ww)),
+            out_shape, x, w,
+        )
+
+    def _call_bwd(x, w, g):
+        out_shape = (
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+        )
+        return jax.pure_callback(
+            lambda xx, ww, gg: cluster.conv_backward(
+                np.asarray(xx), np.asarray(ww), np.asarray(gg)
+            ),
+            out_shape, x, w, g,
+        )
+
+    dconv.defvjp(fwd, bwd)
+
+    def conv_fn(params, x, padding: str = "SAME"):
+        return dconv(x, params["kernel"], params["bias"])
+
+    return conv_fn

@@ -1,0 +1,88 @@
+"""The compact wire codec — a transport-independent encode/decode layer.
+
+Float32/64 numpy arrays are ENCODED to a 2-byte dtype (fp16 or bf16)
+before they reach any transport, and DECODED back to float32 on the read
+side, so every device computes and accumulates in float32 — only the
+wire narrows.  ``wire_nbytes`` defines the repo's canonical byte
+accounting for a message: arrays count their (encoded) buffer size,
+containers recurse, and every other token costs 8 bytes (one double, the
+paper's protocol scalar).  Both transports count with the SAME function,
+so ``comm_bytes`` is comparable between the in-process emulation and a
+real TCP wire.
+
+Import-light on purpose (numpy only): TCP slave subprocesses import this
+module before any heavy framework lands.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def resolve_wire_dtype(name: Optional[str]) -> Optional[np.dtype]:
+    """Map a wire-dtype name to the numpy dtype arrays are encoded to on
+    the wire; ``None``/``"fp32"`` means no codec (the seed wire)."""
+    if name is None or name in ("fp32", "float32"):
+        return None
+    if name in ("fp16", "float16"):
+        return np.dtype(np.float16)
+    if name in ("bf16", "bfloat16"):
+        try:
+            import ml_dtypes
+        except ImportError as e:  # pragma: no cover - ml_dtypes ships with jax
+            raise ValueError(
+                "wire_dtype='bf16' needs the ml_dtypes package"
+            ) from e
+        return np.dtype(ml_dtypes.bfloat16)
+    raise ValueError(
+        f"unknown wire_dtype {name!r}; use None/'fp32', 'fp16' or 'bf16'"
+    )
+
+
+def wire_dtype_name(dtype: Optional[np.dtype]) -> Optional[str]:
+    """Inverse of ``resolve_wire_dtype`` — for shipping the codec choice
+    to a slave subprocess on its command line."""
+    if dtype is None:
+        return None
+    if dtype == np.dtype(np.float16):
+        return "fp16"
+    return "bf16"
+
+
+def encode(obj, wire_dtype: np.dtype):
+    """Compact float arrays to the wire dtype (recursive)."""
+    if isinstance(obj, np.ndarray) and obj.dtype in (np.float32, np.float64):
+        return obj.astype(wire_dtype)
+    if isinstance(obj, tuple):
+        return tuple(encode(o, wire_dtype) for o in obj)
+    if isinstance(obj, list):
+        return [encode(o, wire_dtype) for o in obj]
+    if isinstance(obj, dict):
+        return {k: encode(v, wire_dtype) for k, v in obj.items()}
+    return obj
+
+
+def decode(obj, wire_dtype: np.dtype):
+    """Widen wire-dtype arrays back to float32 at the read side."""
+    if isinstance(obj, np.ndarray) and obj.dtype == wire_dtype:
+        return obj.astype(np.float32)
+    if isinstance(obj, tuple):
+        return tuple(decode(o, wire_dtype) for o in obj)
+    if isinstance(obj, list):
+        return [decode(o, wire_dtype) for o in obj]
+    if isinstance(obj, dict):
+        return {k: decode(v, wire_dtype) for k, v in obj.items()}
+    return obj
+
+
+def wire_nbytes(obj) -> int:
+    """Canonical bytes-on-the-wire of a message — called AFTER encoding,
+    so counters and bandwidth emulation see the codec's compacted size."""
+    if isinstance(obj, np.ndarray):
+        return obj.nbytes
+    if isinstance(obj, (tuple, list)):
+        return sum(wire_nbytes(o) for o in obj)
+    if isinstance(obj, dict):
+        return sum(wire_nbytes(v) for v in obj.values())
+    return 8  # flags / scalars, one double in the paper's protocol

@@ -1,0 +1,209 @@
+"""Per-layer partition plans: which axis a conv layer splits on, and how.
+
+The paper splits only the output-channel ("kernel") axis; the hybrid
+runtime can also split the HEIGHT axis ("spatial": row strips + a
+``kh//2`` halo) or pick the cheaper axis per layer ("auto") from the
+comm-extended Eq. 1 prediction.  This module holds the pure planning
+math — strip/halo geometry, per-unit wire bytes, the wall-clock
+predictor and the axis resolver — over a duck-typed ``cluster`` that
+supplies device state (``_effective_times``, ``shares_for``,
+``bandwidths``, ``probe_flops``, ``_wire_itemsize``, ``partition``,
+``partition_choices``).  No transport, no threads, numpy only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+PARTITION_MODES = ("kernel", "spatial", "auto")
+
+
+def strip_plan(
+    h: int, kh: int, counts: Sequence[int]
+) -> Tuple[List[Tuple[int, int]], List[Tuple[int, int, int, int]]]:
+    """Cut H output rows into per-device strips sized by ``counts`` and
+    derive each strip's halo'd input window: rows [lo, hi) of the input
+    plus (pad_top, pad_bot) zero rows that restore the clipped SAME
+    padding at the image border.  Empty strips get empty windows."""
+    ph, pb = kh // 2, kh - 1 - (kh // 2)
+    rows: List[Tuple[int, int]] = []
+    halos: List[Tuple[int, int, int, int]] = []
+    r0 = 0
+    for c in counts:
+        r1 = r0 + int(c)
+        if r1 == r0:
+            rows.append((r0, r0))
+            halos.append((r0, r0, 0, 0))
+            continue
+        lo, hi = max(0, r0 - ph), min(h, r1 + pb)
+        halos.append((lo, hi, ph - (r0 - lo), pb - (hi - r1)))
+        rows.append((r0, r1))
+        r0 = r1
+    assert r0 == h, "strip counts must sum to H"
+    return rows, halos
+
+
+@dataclasses.dataclass
+class LayerPlan:
+    """How ONE conv layer is split over the devices — fixed for every
+    microbatch of the layer (the slave caches one kernel shard per op,
+    so the split must not drift between microbatches)."""
+
+    mode: str                     # "kernel" | "spatial" (auto is resolved)
+    counts: np.ndarray            # kernels (kernel) or rows (spatial) per device
+    shards: Optional[List[np.ndarray]] = None  # kernel mode: w split per device
+    w: Optional[np.ndarray] = None             # spatial mode: the full kernel
+    rows: Optional[List[Tuple[int, int]]] = None
+    halos: Optional[List[Tuple[int, int, int, int]]] = None
+
+
+def split_kernels(w: np.ndarray, counts: np.ndarray) -> List[np.ndarray]:
+    """Split the kernel's output-channel axis into per-device shards."""
+    edges = np.cumsum(counts)[:-1]
+    return np.split(w, edges, axis=-1)
+
+
+def unit_bytes(x_shape, w_shape, mode: str, op: str, itemsize: int) -> float:
+    """Share-proportional wire bytes per allocation unit — one KERNEL
+    (w column out + feature-map column back, plus the gradient slice
+    and dW column for bwd) or one ROW (x row out + y row back, plus
+    the g row and dX row for bwd).  ``op="train"`` is one forward
+    plus one backward, what a train-chain plan governs.  Fixed
+    per-slave costs (the x broadcast, the halo, the full kernel, the
+    kernel-mode backward's full-dX return) do not move the optimal
+    split and are left to the mode predictor."""
+    b, h, wd, cin = x_shape
+    kh, kw, _, cout = w_shape
+    if mode == "kernel":
+        w_col = kh * kw * cin * itemsize
+        y_col = b * h * wd * itemsize
+        conv = w_col + y_col       # w col out + y col back
+        # bwd: w col + g col out, dW col back; the full-dX return is
+        # a FIXED per-slave cost, excluded by this contract
+        bwd = 2 * w_col + y_col
+    else:
+        x_row = b * wd * cin * itemsize
+        y_row = b * wd * cout * itemsize
+        conv = x_row + y_row       # x row out + y row back
+        bwd = 2 * x_row + y_row    # x + g rows out, dX row back
+    if op == "conv":
+        return conv
+    if op == "bwd":
+        return bwd
+    return conv + bwd              # "train"
+
+
+def predict_partition_seconds(
+    cluster, x_shape, w_shape, op: str = "conv"
+) -> Dict[str, float]:
+    """Predicted per-layer wall-clock of each partition axis: every
+    slave's wire bytes over its OWN link plus its balanced compute
+    share (absolute once a real ``probe()`` has calibrated
+    ``probe_flops``; otherwise the comm term alone decides — the
+    compute splits near-identically on both axes).  ``op`` is what
+    the plan will govern: ``"conv"`` (forward only), ``"bwd"``, or
+    ``"train"`` (one forward + one backward) — the backward's wire
+    differs by axis (kernel mode re-broadcasts x AND returns a
+    full-size dX per slave; spatial ships strips both ways), so a
+    train-step plan must weigh both directions."""
+    b, h, wd, cin = x_shape
+    kh, kw, _, cout = w_shape
+    item = cluster._wire_itemsize
+    x_b = float(b * h * wd * cin * item)
+    y_b = float(b * h * wd * cout * item)
+    w_b = float(kh * kw * cin * cout * item)
+    times = cluster._effective_times()
+    layer_flops = 2.0 * b * h * wd * kh * kw * cin * cout
+    # the backward (dX + dW) costs ~2x the forward's flops
+    flops_mult = {"conv": 1.0, "bwd": 2.0, "train": 3.0}[op]
+    scale = (layer_flops / cluster.probe_flops) if cluster.probe_flops else None
+    out: Dict[str, float] = {}
+    for mode in ("kernel", "spatial"):
+        n_units = cout if mode == "kernel" else h
+        counts = cluster.shares_for(
+            n_units,
+            unit_bytes=unit_bytes(x_shape, w_shape, mode, op, item),
+            layer_flops=flops_mult * layer_flops,
+        )
+        worst = 0.0
+        for i, c in enumerate(counts):
+            bw = None if i == 0 else cluster.bandwidths[i - 1]
+            frac = float(c) / n_units if n_units else 0.0
+            halo = min(kh - 1, h) if c > 0 else 0
+            if mode == "kernel":
+                fwd_wire = x_b + frac * (w_b + y_b)
+                # x re-broadcast + g slice out; full dX + dW cols back
+                bwd_wire = 2.0 * x_b + frac * (w_b + y_b)
+                comp_frac = frac
+                active = i > 0
+            else:
+                hfrac = (c + halo) / h
+                fwd_wire = hfrac * x_b + w_b + frac * y_b
+                # x strip + g strip out; dX halo strip + full dW back
+                bwd_wire = 2.0 * hfrac * x_b + 2.0 * w_b + frac * y_b
+                comp_frac = hfrac
+                active = i > 0 and c > 0
+            wire = {
+                "conv": fwd_wire,
+                "bwd": bwd_wire,
+                "train": fwd_wire + bwd_wire,
+            }[op] if active else 0.0
+            t_comm = wire * 8.0 / (bw * 1e6) if bw is not None else 0.0
+            t_comp = (
+                times[i] * scale * comp_frac * flops_mult if scale else 0.0
+            )
+            worst = max(worst, t_comm + t_comp)
+        out[mode] = worst
+    return out
+
+
+def resolve_mode(
+    cluster, x_shape, w_shape, override: Optional[str], op: str = "conv"
+) -> str:
+    """The partition axis for one layer; ``"auto"`` resolves against
+    the predicted wall-clock of ``op`` and records its pick."""
+    mode = override or cluster.partition
+    if mode not in PARTITION_MODES:
+        raise ValueError(
+            f"partition must be one of {PARTITION_MODES}, got {mode!r}"
+        )
+    if mode != "auto":
+        return mode
+    if all(bw is None for bw in cluster.bandwidths):
+        # free links: the paper's kernel axis, no halo overhead
+        choice = "kernel"
+    else:
+        pred = predict_partition_seconds(cluster, x_shape, w_shape, op)
+        choice = "spatial" if pred["spatial"] < pred["kernel"] else "kernel"
+    cluster.partition_choices[(tuple(x_shape), tuple(w_shape))] = choice
+    return choice
+
+
+def plan_conv(
+    cluster, x_shape, w: np.ndarray, op: str = "conv",
+    partition: Optional[str] = None,
+) -> LayerPlan:
+    """Freeze how one conv layer splits over the devices: the axis
+    (resolving ``"auto"`` against what the plan will govern — ``op``
+    is ``"conv"``, ``"bwd"`` or ``"train"``), the Eq. 1(+comm) unit
+    counts, and the per-device kernel shards or row strips.  One
+    plan serves every microbatch of the layer — the slave caches ONE
+    kernel shard per op, so the split must not drift within a
+    layer."""
+    mode = resolve_mode(cluster, tuple(x_shape), tuple(w.shape), partition, op)
+    b, h, wd, cin = x_shape
+    kh, kw, _, cout = w.shape
+    layer_flops = 2.0 * b * h * wd * kh * kw * cin * cout
+    ub = unit_bytes(x_shape, w.shape, mode, op, cluster._wire_itemsize)
+    if mode == "kernel":
+        counts = cluster.shares_for(
+            cout, unit_bytes=ub, layer_flops=layer_flops
+        )
+        return LayerPlan("kernel", counts, shards=split_kernels(w, counts))
+    counts = cluster.shares_for(h, unit_bytes=ub, layer_flops=layer_flops)
+    rows, halos = strip_plan(h, kh, counts)
+    return LayerPlan(
+        "spatial", counts, w=np.asarray(w, np.float32), rows=rows, halos=halos
+    )

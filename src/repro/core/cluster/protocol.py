@@ -1,0 +1,182 @@
+"""The master/slave message protocol and the slave loop (Algorithm 2).
+
+Transport-agnostic: a slave drives any endpoint exposing ``send``/
+``recv`` — the in-proc queue view of ``InProcTransport`` when the slave
+is a thread, or a ``TCPSlaveEndpoint`` when the slave is a real OS
+process.  Message grammar on the wire:
+
+    ("probe", {probe_kwargs})          -> float seconds
+    ("ping", payload)                  -> payload echoed (bandwidth probe)
+    ("conv", (x, w|None))              -> y
+    ("bwd",  (x, w|None, g))           -> (dx, dw)
+    ("sconv", (x_halo, w|None, pt, pb))-> y strip (spatial mode)
+    ("sbwd", (x_halo, w|None, g, pt, pb)) -> (dx_halo, dw) (spatial)
+    "trainOver"                        -> slave loop exits
+
+``w=None`` means "reuse the kernel shard you cached for this op" — the
+pipelined schedules pay the weight traffic once per layer.  A compute
+exception ships back as a ``SlaveError`` (the master re-raises it at the
+matching gather) so a broken backend fails loudly instead of hanging the
+protocol.
+
+Run as a module, this file IS the TCP slave process:
+
+    python -m repro.core.cluster.protocol --host H --port P --device I \
+        --slowdown 1.5 --backend numpy [--wire-dtype fp16]
+
+It connects back to the master's listener, identifies itself with a
+("hello", device) frame, serves ops until "trainOver" or EOF, and leaves
+via ``os._exit`` so native runtime threads (XLA) can never hang the
+interpreter at exit.  Imports stay numpy-light until the first op needs
+a compute backend, keeping subprocess spawn fast for numpy/sim slaves.
+"""
+from __future__ import annotations
+
+import time
+import traceback
+from typing import Tuple
+
+import numpy as np
+
+TRAIN_OVER = "trainOver"
+
+
+class SlaveError:
+    """A slave's exception, shipped to the master instead of silently
+    killing the slave (which would hang the master's gather)."""
+
+    def __init__(self, device: int, tb: str):
+        self.device = device
+        self.tb = tb
+
+
+def conv_shard(backend, x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Backend conv with the 0-kernel fast path: comp-aware shares (or a
+    very slow device) may legally allocate 0 kernels, which not every
+    backend kernel tolerates (pallas grid math divides by cout)."""
+    if w.shape[-1] == 0:
+        return np.zeros(x.shape[:-1] + (0,), np.float32)
+    return backend.conv(x, w)
+
+
+def bwd_shard(backend, x, w, g) -> Tuple[np.ndarray, np.ndarray]:
+    """Backend conv_vjp with the 0-kernel fast path (see conv_shard)."""
+    if w.shape[-1] == 0:
+        return np.zeros(x.shape, np.float32), np.zeros(w.shape, np.float32)
+    return backend.conv_vjp(x, w, g)
+
+
+def slave_loop(endpoint, slowdown: float, backend_name: str, device: int):
+    """Algorithm 2, asynchronous: drain ops in FIFO order — read
+    inputs/kernels, convolve with this device's backend, write outputs.
+    No per-op ack: the master may queue several ops ahead (the pipeline);
+    results stream back in issue order.  Returns on "trainOver" or when
+    the master's side of the link goes away (EOF)."""
+    backend = None
+    cached_w = {}  # last kernel shard per op: pipelined microbatches after
+    #                the first send w=None instead of retransmitting it
+    while True:
+        try:
+            msg = endpoint.recv()
+        except (EOFError, OSError):
+            return  # master gone: nothing left to serve
+        if isinstance(msg, str) and msg == TRAIN_OVER:
+            return
+        op, payload = msg
+        if op == "ping":  # bandwidth probe: echo, no compute, no slowdown
+            endpoint.send(payload)
+            continue
+        try:
+            if backend is None:
+                from repro.core.backends import get_backend
+
+                backend = get_backend(backend_name)
+            if op == "probe":
+                from repro.core.backends import probe_conv_time
+
+                endpoint.send(
+                    probe_conv_time(backend, slowdown=slowdown, **payload)
+                )
+                continue
+            t0 = time.perf_counter()
+            if op == "conv":
+                x, w = payload
+                w = cached_w[op] if w is None else w
+                cached_w[op] = w
+                out = conv_shard(backend, x, w)
+            elif op == "bwd":
+                x, w, g = payload
+                w = cached_w[op] if w is None else w
+                cached_w[op] = w
+                out = bwd_shard(backend, x, w, g)
+            elif op == "sconv":  # spatial: a height strip + halo, full kernel
+                from repro.core.backends import strip_conv
+
+                xh, w, pt, pb = payload
+                w = cached_w[op] if w is None else w
+                cached_w[op] = w
+                out = strip_conv(backend, xh, w, pt, pb)
+            elif op == "sbwd":  # spatial backward: halo dX + full-kernel dW
+                from repro.core.backends import strip_conv_vjp
+
+                xh, w, g, pt, pb = payload
+                w = cached_w[op] if w is None else w
+                cached_w[op] = w
+                out = strip_conv_vjp(backend, xh, w, g, pt, pb)
+            else:  # pragma: no cover
+                raise ValueError(f"unknown op {op}")
+            elapsed = time.perf_counter() - t0
+            if slowdown > 1.0:
+                time.sleep(elapsed * (slowdown - 1.0))
+        except Exception:
+            endpoint.send(SlaveError(device, traceback.format_exc()))
+            continue
+        endpoint.send(out)
+
+
+def main(argv=None):
+    """TCP slave process entry — see module docstring."""
+    import argparse
+    import os
+
+    from repro.core.cluster.codec import resolve_wire_dtype
+    from repro.core.cluster.transport import TCPSlaveEndpoint
+
+    ap = argparse.ArgumentParser(description="master/slave TCP slave process")
+    ap.add_argument("--host", required=True)
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--device", type=int, required=True)
+    ap.add_argument("--slowdown", type=float, default=1.0)
+    ap.add_argument("--backend", default="numpy")
+    ap.add_argument("--wire-dtype", default=None)
+    args = ap.parse_args(argv)
+
+    # the per-cluster secret rides an env var (not argv: visible in ps)
+    token_hex = os.environ.get("REPRO_CLUSTER_AUTH")
+    endpoint = TCPSlaveEndpoint(
+        args.host, args.port, wire_dtype=resolve_wire_dtype(args.wire_dtype),
+        auth_token=bytes.fromhex(token_hex) if token_hex else None,
+    )
+    code = 0
+    try:
+        endpoint.send(("hello", args.device))
+        slave_loop(endpoint, args.slowdown, args.backend, args.device)
+    except Exception:  # pragma: no cover - surfaced via the exit code
+        traceback.print_exc()
+        code = 1
+    finally:
+        endpoint.close()
+        # _exit, not exit: an xla/pallas backend leaves native runtime
+        # threads behind that can deadlock CPython finalization (the
+        # ROADMAP hang); a slave has nothing to finalize.
+        os._exit(code)
+
+
+if __name__ == "__main__":
+    # Re-enter through the properly-imported module: under ``-m`` this
+    # file IS ``__main__``, and a SlaveError pickled from here would
+    # unpickle as ``__main__.SlaveError`` on the master (whose __main__
+    # is pytest / the CLI) and fail to resolve.
+    from repro.core.cluster import protocol as _protocol
+
+    _protocol.main()

@@ -1,0 +1,423 @@
+"""Pluggable wire transports for the master/slave cluster.
+
+A ``Transport`` is the MASTER-side handle of one master<->slave link.
+The contract the whole runtime (scatter/gather, scheduler, benches,
+tests) is written against:
+
+    write_to_slave(obj)   — enqueue a message to the slave; returns
+                            immediately (the NIC DMAs asynchronously)
+    read_on_master()      — block for the slave's next message (FIFO)
+    bytes_to_slave /      — canonical wire-byte counters per direction
+    bytes_to_master         (codec.wire_nbytes of the ENCODED message,
+                            identical accounting on every transport)
+    close()               — release link resources
+
+The slave side only ever needs ``send``/``recv`` — a ``slave endpoint``
+— so the same protocol loop runs in a thread (in-proc) or in a spawned
+OS process (TCP).
+
+Two implementations:
+
+``InProcTransport`` — the seed behaviour: a queue pair standing in for
+the paper's socket, with optional finite-``bandwidth_mbps`` emulation
+(per-direction delivery threads sleep bytes/bandwidth before handing a
+message over) and the optional wire codec.  Both endpoints live in this
+process; ``slave_endpoint()`` returns the view a slave thread drives.
+
+``TCPTransport`` — a real localhost/network socket: length-prefixed
+pickle frames, codec applied before pickling, TCP_NODELAY, and an async
+writer thread so ``write_to_slave`` returns immediately (matching the
+in-proc semantics and making the deep pipelined schedules immune to
+send/recv buffer deadlock).  ``frame_bytes_*`` additionally record the
+ACTUAL framed sizes (pickle + header overhead) next to the canonical
+counters, and ``measure_bandwidth_mbps`` times a real echo round-trip
+through the slave — the measured link the comm-aware partitioner
+consumes instead of the ``bandwidth_mbps`` knob.
+
+Import-light on purpose (numpy + stdlib): TCP slave subprocesses import
+this module before any heavy framework lands.
+"""
+from __future__ import annotations
+
+import abc
+import pickle
+import queue
+import socket
+import struct
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.cluster import codec
+
+TRANSPORT_KINDS = ("inproc", "tcp")
+
+
+class Transport(abc.ABC):
+    """Master-side contract of one master<->slave link (see module doc)."""
+
+    wire_dtype: Optional[np.dtype] = None
+    bytes_to_slave: int = 0
+    bytes_to_master: int = 0
+
+    @abc.abstractmethod
+    def write_to_slave(self, obj) -> None:
+        ...
+
+    @abc.abstractmethod
+    def read_on_master(self):
+        ...
+
+    @property
+    def total_bytes(self) -> int:
+        return self.bytes_to_slave + self.bytes_to_master
+
+    def reset_counters(self) -> None:
+        self.bytes_to_slave = 0
+        self.bytes_to_master = 0
+
+    def close(self) -> None:
+        ...
+
+    def measure_bandwidth_mbps(self, **_kw) -> Optional[float]:
+        """Measured link speed in Mbps, or None when the link has no
+        meaningful finite speed to report (in-proc unlimited queues)."""
+        return None
+
+
+class _InProcSlaveEndpoint:
+    """The slave-thread view of an in-proc link: bare send/recv."""
+
+    def __init__(self, link: "InProcTransport"):
+        self._link = link
+
+    def send(self, obj) -> None:
+        self._link.write_to_master(obj)
+
+    def recv(self):
+        return self._link.read_on_slave()
+
+    def close(self) -> None:  # the master side owns the queues
+        ...
+
+
+class InProcTransport(Transport):
+    """Queue pair standing in for the paper's TCP socket; counts traffic.
+
+    With ``bandwidth_mbps`` set, each direction gets a delivery thread
+    that sleeps ``bytes * 8 / bandwidth`` before handing a message over —
+    a full-duplex link of finite speed (the paper's ~5 Mbps Wi-Fi).
+    Writers return immediately (the NIC DMAs asynchronously), so comm
+    can genuinely overlap compute when the protocol allows it; messages
+    on one direction serialize, exactly like a real link.
+
+    With ``wire_dtype`` set (a 2-byte float numpy dtype), float32/64
+    arrays are ENCODED to it on write and decoded back to float32 on
+    read — the compact wire codec.  Byte counters and the bandwidth
+    emulation see the encoded size, exactly like a real narrow wire."""
+
+    def __init__(
+        self,
+        bandwidth_mbps: Optional[float] = None,
+        wire_dtype: Optional[np.dtype] = None,
+    ):
+        self.to_slave: "queue.Queue" = queue.Queue()
+        self.to_master: "queue.Queue" = queue.Queue()
+        self.bytes_to_slave = 0
+        self.bytes_to_master = 0
+        self._lock = threading.Lock()
+        self.bandwidth_mbps = bandwidth_mbps
+        self.wire_dtype = wire_dtype
+        if bandwidth_mbps is not None:
+            assert bandwidth_mbps > 0
+            self._stage_to_slave: "queue.Queue" = queue.Queue()
+            self._stage_to_master: "queue.Queue" = queue.Queue()
+            for stage, dest in (
+                (self._stage_to_slave, self.to_slave),
+                (self._stage_to_master, self.to_master),
+            ):
+                threading.Thread(
+                    target=self._deliver, args=(stage, dest), daemon=True
+                ).start()
+
+    _LINK_DOWN = object()  # sentinel: stops a delivery thread
+
+    def _deliver(self, stage: "queue.Queue", dest: "queue.Queue"):
+        while True:
+            item = stage.get()
+            if item is InProcTransport._LINK_DOWN:
+                return
+            obj, nbytes = item
+            time.sleep(nbytes * 8.0 / (self.bandwidth_mbps * 1e6))
+            dest.put(obj)
+
+    def close(self):
+        """Stop the delivery threads (queued messages drain first)."""
+        if self.bandwidth_mbps is not None:
+            self._stage_to_slave.put(InProcTransport._LINK_DOWN)
+            self._stage_to_master.put(InProcTransport._LINK_DOWN)
+
+    # -- legacy single-object API: both link directions -------------------
+    def _nbytes(self, obj) -> int:
+        return codec.wire_nbytes(obj)
+
+    def _encode(self, obj):
+        return codec.encode(obj, self.wire_dtype)
+
+    def _decode(self, obj):
+        return codec.decode(obj, self.wire_dtype)
+
+    def write_to_slave(self, obj):
+        if self.wire_dtype is not None:
+            obj = self._encode(obj)
+        n = self._nbytes(obj)
+        with self._lock:
+            self.bytes_to_slave += n
+        if self.bandwidth_mbps is not None:
+            self._stage_to_slave.put((obj, n))
+        else:
+            self.to_slave.put(obj)
+
+    def write_to_master(self, obj):
+        if self.wire_dtype is not None:
+            obj = self._encode(obj)
+        n = self._nbytes(obj)
+        with self._lock:
+            self.bytes_to_master += n
+        if self.bandwidth_mbps is not None:
+            self._stage_to_master.put((obj, n))
+        else:
+            self.to_master.put(obj)
+
+    def read_on_slave(self):
+        obj = self.to_slave.get()
+        return self._decode(obj) if self.wire_dtype is not None else obj
+
+    def read_on_master(self):
+        obj = self.to_master.get()
+        return self._decode(obj) if self.wire_dtype is not None else obj
+
+    def slave_endpoint(self) -> _InProcSlaveEndpoint:
+        return _InProcSlaveEndpoint(self)
+
+    def measure_bandwidth_mbps(self, **_kw) -> Optional[float]:
+        # the emulated knob IS the link speed; None = infinitely fast
+        return self.bandwidth_mbps
+
+
+# ---------------------------------------------------------------------------
+# TCP: length-prefixed pickle frames over a real socket.
+# ---------------------------------------------------------------------------
+
+_HDR = struct.Struct(">Q")
+
+
+def _send_frame(sock: socket.socket, payload: bytes) -> None:
+    sock.sendall(_HDR.pack(len(payload)) + payload)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise EOFError("transport connection closed")
+        buf += chunk
+    return bytes(buf)
+
+
+def _recv_frame(sock: socket.socket) -> bytes:
+    (n,) = _HDR.unpack(_recv_exact(sock, _HDR.size))
+    return _recv_exact(sock, n)
+
+
+def _dumps(obj) -> bytes:
+    return pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+class TCPListener:
+    """The master's accept socket; slaves connect to (host, port)."""
+
+    def __init__(self, host: str = "127.0.0.1"):
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, 0))
+        self._sock.listen(64)
+        self.host, self.port = self._sock.getsockname()
+
+    def accept(self, timeout_s: float = 60.0) -> socket.socket:
+        self._sock.settimeout(timeout_s)
+        conn, _addr = self._sock.accept()
+        return conn
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:  # pragma: no cover - already closed
+            pass
+
+
+class TCPTransport(Transport):
+    """Master-side endpoint of a real master<->slave TCP link.
+
+    Frames are 8-byte big-endian length + pickle payload; the codec
+    encodes BEFORE pickling so the real wire carries 2-byte floats.
+    Writes are queued to a writer thread — ``write_to_slave`` returns
+    immediately, preserving the async-NIC semantics the pipelined
+    schedules assume and decoupling deep in-flight windows from the
+    kernel's socket buffer sizes.  ``bytes_to_*`` count the canonical
+    codec bytes (comparable with InProcTransport); ``frame_bytes_to_*``
+    count what actually crossed the socket, framing included."""
+
+    _WRITER_DOWN = object()
+
+    def __init__(self, conn: socket.socket, wire_dtype: Optional[np.dtype] = None):
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._conn = conn
+        self.wire_dtype = wire_dtype
+        self.bytes_to_slave = 0
+        self.bytes_to_master = 0
+        self.frame_bytes_to_slave = 0
+        self.frame_bytes_to_master = 0
+        self._closed = False
+        self._werr: Optional[BaseException] = None
+        self._wq: "queue.Queue" = queue.Queue()
+        self._writer = threading.Thread(target=self._write_loop, daemon=True)
+        self._writer.start()
+
+    def _write_loop(self):
+        while True:
+            payload = self._wq.get()
+            if payload is TCPTransport._WRITER_DOWN:
+                return
+            try:
+                _send_frame(self._conn, payload)
+            except BaseException as e:  # surface on the next master call
+                self._werr = e
+                return
+
+    def _check_writer(self):
+        if self._werr is not None:
+            raise RuntimeError(
+                f"TCP link writer failed (slave died or connection dropped): "
+                f"{self._werr!r}"
+            )
+
+    def write_to_slave(self, obj):
+        self._check_writer()
+        if self.wire_dtype is not None:
+            obj = codec.encode(obj, self.wire_dtype)
+        self.bytes_to_slave += codec.wire_nbytes(obj)
+        payload = _dumps(obj)
+        self.frame_bytes_to_slave += len(payload) + _HDR.size
+        self._wq.put(payload)
+
+    def read_on_master(self):
+        self._check_writer()
+        try:
+            payload = _recv_frame(self._conn)
+        except (EOFError, OSError) as e:
+            raise RuntimeError(
+                f"TCP link to slave closed mid-protocol: {e!r}"
+            ) from e
+        obj = pickle.loads(payload)
+        self.bytes_to_master += codec.wire_nbytes(obj)
+        self.frame_bytes_to_master += len(payload) + _HDR.size
+        return codec.decode(obj, self.wire_dtype) if self.wire_dtype is not None else obj
+
+    def reset_counters(self) -> None:
+        super().reset_counters()
+        self.frame_bytes_to_slave = 0
+        self.frame_bytes_to_master = 0
+
+    def measure_bandwidth_mbps(
+        self, payload_bytes: int = 1 << 20, repeats: int = 3, **_kw
+    ) -> Optional[float]:
+        """Round-trip a ``payload_bytes`` echo through the slave's
+        protocol loop and return the best observed Mbps (payload bytes
+        moved in BOTH directions over the round-trip wall-clock) — the
+        measured link the comm-aware Eq. 1 consumes.  Uses a uint8
+        payload so the codec (which narrows only float arrays) does not
+        skew the measurement."""
+        arr = np.zeros(payload_bytes, np.uint8)
+        # probes are not protocol traffic: restore EVERY counter family
+        # (canonical and frame) once the measurement is done
+        saved = (
+            self.bytes_to_slave, self.bytes_to_master,
+            self.frame_bytes_to_slave, self.frame_bytes_to_master,
+        )
+        best = 0.0
+        try:
+            for _ in range(repeats + 1):  # first round warms buffers; dropped
+                t0 = time.perf_counter()
+                self.write_to_slave(("ping", arr))
+                echo = self.read_on_master()
+                dt = time.perf_counter() - t0
+                if not isinstance(echo, np.ndarray) or echo.nbytes != arr.nbytes:
+                    # RuntimeError, not assert: -O must not turn a garbled
+                    # echo into a nonsense Eq. 1 planning bandwidth
+                    raise RuntimeError(
+                        f"bandwidth probe echo mismatch: sent {arr.nbytes}B, "
+                        f"got {type(echo).__name__}"
+                    )
+                best = max(best, 2.0 * arr.nbytes * 8.0 / (dt * 1e6))
+        finally:
+            (self.bytes_to_slave, self.bytes_to_master,
+             self.frame_bytes_to_slave, self.frame_bytes_to_master) = saved
+        return best
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._wq.put(TCPTransport._WRITER_DOWN)
+        self._writer.join(timeout=5)
+        try:
+            self._conn.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._conn.close()
+        except OSError:  # pragma: no cover - already closed
+            pass
+
+
+class TCPSlaveEndpoint:
+    """Slave-side endpoint: connects to the master's listener and speaks
+    the same framed-pickle wire (codec included).  Drives ``slave_loop``
+    inside a spawned subprocess — or a thread, for conformance tests."""
+
+    def __init__(
+        self,
+        host: str,
+        port: int,
+        wire_dtype: Optional[np.dtype] = None,
+        connect_timeout_s: float = 30.0,
+        auth_token: Optional[bytes] = None,
+    ):
+        self._conn = socket.create_connection((host, port), timeout=connect_timeout_s)
+        self._conn.settimeout(None)  # ops block indefinitely, like the queues
+        self._conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.wire_dtype = wire_dtype
+        if auth_token is not None:
+            # RAW token bytes before any frame: the master refuses to
+            # unpickle anything from a connection that cannot present
+            # the per-cluster secret (see HeteroCluster._spawn_tcp_slaves)
+            self._conn.sendall(auth_token)
+
+    def send(self, obj) -> None:
+        if self.wire_dtype is not None:
+            obj = codec.encode(obj, self.wire_dtype)
+        _send_frame(self._conn, _dumps(obj))
+
+    def recv(self):
+        obj = pickle.loads(_recv_frame(self._conn))
+        return codec.decode(obj, self.wire_dtype) if self.wire_dtype is not None else obj
+
+    def close(self) -> None:
+        try:
+            self._conn.close()
+        except OSError:  # pragma: no cover - already closed
+            pass

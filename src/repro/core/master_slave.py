@@ -1,1363 +1,71 @@
-"""Algorithms 1 & 2 — the master/slave distributed convolution protocol.
+"""Compat shim — the master/slave runtime now lives in ``core/cluster/``.
 
-Faithful in-process emulation of the paper's socket cluster: every slave
-is a thread, every socket a pair of queues, every ``writeSocket`` /
-``readSocket`` moves serialized numpy buffers and counts the bytes (so
-Eq. 2 can be validated against the actual traffic, see
-tests/test_costmodel.py).  Heterogeneity is emulated with per-slave
-*slowdown factors*: after computing, a slave sleeps (slowdown-1) x the
-measured compute time, appearing exactly like a proportionally slower
-machine to both the probe and the training loop.
+PR 4 decomposed the former 1363-line monolith into a layered package
+(transport -> codec -> protocol -> plans -> scheduler -> cluster); see
+``repro/core/cluster/__init__.py`` for the map.  Everything the repo —
+tests, benches, examples, the ``launch/hetero.py`` CLI — ever imported
+from this module keeps working through the re-exports below, including
+the seed-era private names.  New code should import from
+``repro.core.cluster`` directly.
 
-The protocol per convolutional layer (Algorithm 1 lines 6-23):
-  * master broadcasts the SAME inputs to every slave,
-  * master scatters a DIFFERENT kernel shard to each slave, sized by the
-    Eq. 1 partitioner from probe times,
-  * every node (master included) convolves its shard,
-  * master gathers the output feature maps and concatenates them,
-  * master computes every non-convolutional layer alone.
-
-Beyond the seed implementation, two orthogonal upgrades:
-
-**Per-device compute backends** (core/backends.py): each device — the
-master and every slave — picks a conv backend by name (``numpy`` im2col,
-``xla`` jitted lax conv, ``pallas`` MXU kernels), so a cluster can mix
-numpy-CPU and pallas-TPU nodes, the paper's actual heterogeneous
-scenario.  The probe times the backend a device really runs, keeping the
-Eq. 1 shares exact.  NOTE: when the cluster is driven through
-``make_distributed_conv`` (jax host callbacks), the *master's* backend
-should stay ``numpy`` — re-entering jit dispatch on the runtime thread
-can deadlock — and slaves should avoid ``pallas`` in INTERPRET mode
-(interpret re-enters jax from the slave thread and can deadlock against
-the blocked callback; compiled TPU pallas and ``xla`` slaves are fine,
-as is any backend under direct ``conv_forward``/``conv_backward`` calls).
-
-**Asynchronous, pipelined scatter/gather**: the per-op barrier (scatter
--> compute -> gather -> ack) is replaced by split ``scatter_*`` /
-``gather_*`` halves with FIFO ordering per socket.  With
-``pipeline=True`` the batch is cut into microbatches and double-buffered:
-the master issues the next microbatch's scatter while the slaves' results
-for the current one are still in flight, and ``conv_forward_chain`` keeps
-slave queues non-empty across consecutive conv layers so the master's
-non-conv work overlaps slave compute.  ``LayerTiming`` accounts the
-overlap window.
-
-Backward propagation is distributed the same way ("forward and backward
-propagation included", §1): each slave computes the VJP of its own kernel
-shard — dW for its shard and its partial dX — and the master sums the
-partial dX contributions (the gather of the backward pass).
-
-``conv_train_chain`` / ``conv_train_step`` extend the pipeline to the
-WHOLE training step: the forward chain stashes each conv layer's input
-and the VJP of every master-only between stage, the master computes the
-loss head, and the backward chain reuses the same ``_Pending`` FIFO and
-microbatch machinery for the ``bwd`` op — the backward scatter of layer
-k is issued while layer k+1's backward gathers (and the master's
-between-VJP / head gradients) are still in flight, so a real training
-step hides the per-layer barrier cost, not just the forward.  Unlike
-the depth-2 ``conv_forward_chain``, the train chain keeps up to
-``microbatches`` ops in flight per phase boundary (the total queued
-bytes still equal ONE barrier-mode scatter of the full batch); a real
-flow-controlled transport behind ``_Socket`` would need a window of
-that many messages.
-
-The cluster is also *comp-aware* (``comp_aware=True``): the master's
-measured non-conv duty (``LayerTiming.comp_s`` vs its own conv time)
-automatically discounts its Eq. 1 share, since a master busy with
-ReLU/LRN/pool/fc work has proportionally less throughput left for its
-conv shard.
-
-**Hybrid spatial x kernel partitioning** (``partition=``): the paper
-splits only the output-channel ("kernel") axis, which forces the master
-to broadcast the FULL input activation to every slave — scatter bytes
-grow with ``n_slaves x activation_bytes`` and throttle speedup on slow
-links.  ``partition="spatial"`` splits the HEIGHT axis instead: each
-device receives only its Eq. 1 share of input rows plus a ``kh//2``
-halo (and the full kernel, once per layer), convolves its strip
-(backends.strip_conv), and returns its output rows; the backward
-overlap-ADDS the dX halo seams on the master (backends.strip_conv_vjp).
-``partition="auto"`` picks the cheaper axis PER LAYER from the
-predicted wall-clock — the comm-extended Eq. 1
-(partitioner.link_aware_times): compute share + wire bytes over each
-device's measured link.  Shares themselves are comm-aware too once a
-real ``probe()`` has run (probe_flops known) and links are finite.
-
-**Compact wire codec** (``wire_dtype="fp16"|"bf16"``): float arrays are
-encoded to the 2-byte dtype at the ``_Socket`` boundary and decoded back
-to float32 on read, halving wire bytes in either partition mode;
-``_nbytes``/``LayerTiming``/``comm_bytes`` account the ENCODED size.
-Master-side arithmetic (shard compute, dX seam sums, dW sums) stays in
-float32 — only the wire narrows.
+Two transports ride behind the same ``HeteroCluster`` API:
+``transport="inproc"`` (the seed behaviour: slave threads, queue pairs,
+emulated bandwidth) and ``transport="tcp"`` (real OS subprocess slaves
+over framed localhost sockets with measured link bandwidth).
 """
 from __future__ import annotations
 
-import dataclasses
-import queue
-import threading
-import time
-import traceback
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.backends import (
-    get_backend,
-    numpy_conv,
-    numpy_conv_vjp,
-    probe_conv_time,
-    strip_conv,
-    strip_conv_vjp,
+from repro.core.backends import (  # noqa: F401  (seed-compatible aliases)
+    numpy_conv as _conv,
+    numpy_conv_vjp as _conv_vjp,
 )
-from repro.core.partitioner import (
-    allocate_kernels,
-    comp_aware_times,
-    link_aware_times,
+from repro.core.cluster.cluster import (  # noqa: F401
+    HeteroCluster,
+    _np_probe,
+    make_distributed_conv,
+)
+from repro.core.cluster.codec import resolve_wire_dtype  # noqa: F401
+from repro.core.cluster.plans import (  # noqa: F401
+    PARTITION_MODES,
+    LayerPlan as _LayerPlan,
+    strip_plan as _strip_plan,
+)
+from repro.core.cluster.protocol import (  # noqa: F401
+    TRAIN_OVER as _TRAIN_OVER,
+    SlaveError as _SlaveError,
+    bwd_shard as _bwd_shard,
+    conv_shard as _conv_shard,
+    slave_loop,
+)
+from repro.core.cluster.scheduler import (  # noqa: F401
+    LayerTiming,
+    Pending as _Pending,
+    TrainStepResult,
+)
+from repro.core.cluster.transport import (  # noqa: F401
+    InProcTransport as _Socket,
+    TCPListener,
+    TCPSlaveEndpoint,
+    TCPTransport,
+    Transport,
 )
 
-_TRAIN_OVER = "trainOver"
 
-PARTITION_MODES = ("kernel", "spatial", "auto")
-
-
-def resolve_wire_dtype(name: Optional[str]) -> Optional[np.dtype]:
-    """Map a wire-dtype name to the numpy dtype arrays are encoded to on
-    the sockets; ``None``/``"fp32"`` means no codec (the seed wire)."""
-    if name is None or name in ("fp32", "float32"):
-        return None
-    if name in ("fp16", "float16"):
-        return np.dtype(np.float16)
-    if name in ("bf16", "bfloat16"):
-        try:
-            import ml_dtypes
-        except ImportError as e:  # pragma: no cover - ml_dtypes ships with jax
-            raise ValueError(
-                "wire_dtype='bf16' needs the ml_dtypes package"
-            ) from e
-        return np.dtype(ml_dtypes.bfloat16)
-    raise ValueError(
-        f"unknown wire_dtype {name!r}; use None/'fp32', 'fp16' or 'bf16'"
-    )
-
-
-class _Socket:
-    """Queue pair standing in for the paper's TCP socket; counts traffic.
-
-    With ``bandwidth_mbps`` set, each direction gets a delivery thread
-    that sleeps ``bytes * 8 / bandwidth`` before handing a message over —
-    a full-duplex link of finite speed (the paper's ~5 Mbps Wi-Fi).
-    Writers return immediately (the NIC DMAs asynchronously), so comm
-    can genuinely overlap compute when the protocol allows it; messages
-    on one direction serialize, exactly like a real link.
-
-    With ``wire_dtype`` set (a 2-byte float numpy dtype), float32/64
-    arrays are ENCODED to it on write and decoded back to float32 on
-    read — the compact wire codec.  Byte counters and the bandwidth
-    emulation see the encoded size, exactly like a real narrow wire."""
-
-    def __init__(
-        self,
-        bandwidth_mbps: Optional[float] = None,
-        wire_dtype: Optional[np.dtype] = None,
-    ):
-        self.to_slave: "queue.Queue" = queue.Queue()
-        self.to_master: "queue.Queue" = queue.Queue()
-        self.bytes_to_slave = 0
-        self.bytes_to_master = 0
-        self._lock = threading.Lock()
-        self.bandwidth_mbps = bandwidth_mbps
-        self.wire_dtype = wire_dtype
-        if bandwidth_mbps is not None:
-            assert bandwidth_mbps > 0
-            self._stage_to_slave: "queue.Queue" = queue.Queue()
-            self._stage_to_master: "queue.Queue" = queue.Queue()
-            for stage, dest in (
-                (self._stage_to_slave, self.to_slave),
-                (self._stage_to_master, self.to_master),
-            ):
-                threading.Thread(
-                    target=self._deliver, args=(stage, dest), daemon=True
-                ).start()
-
-    _LINK_DOWN = object()  # sentinel: stops a delivery thread
-
-    def _deliver(self, stage: "queue.Queue", dest: "queue.Queue"):
-        while True:
-            item = stage.get()
-            if item is _Socket._LINK_DOWN:
-                return
-            obj, nbytes = item
-            time.sleep(nbytes * 8.0 / (self.bandwidth_mbps * 1e6))
-            dest.put(obj)
-
-    def close(self):
-        """Stop the delivery threads (queued messages drain first)."""
-        if self.bandwidth_mbps is not None:
-            self._stage_to_slave.put(_Socket._LINK_DOWN)
-            self._stage_to_master.put(_Socket._LINK_DOWN)
-
-    def _nbytes(self, obj) -> int:
-        """Bytes on the wire — called AFTER encoding, so the counters and
-        the bandwidth emulation see the codec's compacted size."""
-        if isinstance(obj, np.ndarray):
-            return obj.nbytes
-        if isinstance(obj, (tuple, list)):
-            return sum(self._nbytes(o) for o in obj)
-        if isinstance(obj, dict):
-            return sum(self._nbytes(v) for v in obj.values())
-        return 8  # flags / scalars, one double in the paper's protocol
-
-    def _encode(self, obj):
-        """Compact float arrays to the wire dtype (recursive)."""
-        if isinstance(obj, np.ndarray) and obj.dtype in (np.float32, np.float64):
-            return obj.astype(self.wire_dtype)
-        if isinstance(obj, tuple):
-            return tuple(self._encode(o) for o in obj)
-        if isinstance(obj, list):
-            return [self._encode(o) for o in obj]
-        if isinstance(obj, dict):
-            return {k: self._encode(v) for k, v in obj.items()}
-        return obj
-
-    def _decode(self, obj):
-        """Widen wire-dtype arrays back to float32 at the read side, so
-        every device COMPUTES and ACCUMULATES in float32."""
-        if isinstance(obj, np.ndarray) and obj.dtype == self.wire_dtype:
-            return obj.astype(np.float32)
-        if isinstance(obj, tuple):
-            return tuple(self._decode(o) for o in obj)
-        if isinstance(obj, list):
-            return [self._decode(o) for o in obj]
-        if isinstance(obj, dict):
-            return {k: self._decode(v) for k, v in obj.items()}
-        return obj
-
-    def write_to_slave(self, obj):
-        if self.wire_dtype is not None:
-            obj = self._encode(obj)
-        n = self._nbytes(obj)
-        with self._lock:
-            self.bytes_to_slave += n
-        if self.bandwidth_mbps is not None:
-            self._stage_to_slave.put((obj, n))
-        else:
-            self.to_slave.put(obj)
-
-    def write_to_master(self, obj):
-        if self.wire_dtype is not None:
-            obj = self._encode(obj)
-        n = self._nbytes(obj)
-        with self._lock:
-            self.bytes_to_master += n
-        if self.bandwidth_mbps is not None:
-            self._stage_to_master.put((obj, n))
-        else:
-            self.to_master.put(obj)
-
-    def read_on_slave(self):
-        obj = self.to_slave.get()
-        return self._decode(obj) if self.wire_dtype is not None else obj
-
-    def read_on_master(self):
-        obj = self.to_master.get()
-        return self._decode(obj) if self.wire_dtype is not None else obj
-
-    @property
-    def total_bytes(self) -> int:
-        return self.bytes_to_slave + self.bytes_to_master
-
-
-# Seed-compatible aliases: the numpy im2col conv now lives in
-# core/backends.py as the `numpy` backend (callback- and thread-safe).
-_conv = numpy_conv
-_conv_vjp = numpy_conv_vjp
-
-
-def _np_probe(*, slowdown: float = 1.0, **probe_kwargs) -> float:
-    """The paper's §4.1.1 probe on the numpy backend (seed behaviour)."""
-    return probe_conv_time("numpy", slowdown=slowdown, **probe_kwargs)
-
-
-class _SlaveError:
-    """A slave's exception, shipped to the master instead of silently
-    killing the slave thread (which would hang the master's gather)."""
-
-    def __init__(self, device: int, tb: str):
-        self.device = device
-        self.tb = tb
-
-
-def _conv_shard(backend, x: np.ndarray, w: np.ndarray) -> np.ndarray:
-    """Backend conv with the 0-kernel fast path: comp-aware shares (or a
-    very slow device) may legally allocate 0 kernels, which not every
-    backend kernel tolerates (pallas grid math divides by cout)."""
-    if w.shape[-1] == 0:
-        return np.zeros(x.shape[:-1] + (0,), np.float32)
-    return backend.conv(x, w)
-
-
-def _bwd_shard(backend, x, w, g) -> Tuple[np.ndarray, np.ndarray]:
-    """Backend conv_vjp with the 0-kernel fast path (see _conv_shard)."""
-    if w.shape[-1] == 0:
-        return np.zeros(x.shape, np.float32), np.zeros(w.shape, np.float32)
-    return backend.conv_vjp(x, w, g)
-
-
-def _slave_loop(sock: _Socket, slowdown: float, backend_name: str, device: int):
-    """Algorithm 2, asynchronous: drain ops in FIFO order — read
-    inputs/kernels, convolve with this device's backend, write outputs.
-    No per-op ack: the master may queue several ops ahead (the pipeline);
-    results stream back in issue order.  A compute exception is shipped
-    back as a _SlaveError (the master raises it at the matching gather)
-    so a broken backend fails loudly instead of hanging the protocol."""
-    backend = None
-    cached_w = {}  # last kernel shard per op: pipelined microbatches after
-    #                the first send w=None instead of retransmitting it
-    while True:
-        msg = sock.read_on_slave()
-        if msg == _TRAIN_OVER:
-            return
-        op, payload = msg
-        try:
-            if backend is None:
-                backend = get_backend(backend_name)
-            if op == "probe":
-                sock.write_to_master(
-                    probe_conv_time(backend, slowdown=slowdown, **payload)
-                )
-                continue
-            t0 = time.perf_counter()
-            if op == "conv":
-                x, w = payload
-                w = cached_w[op] if w is None else w
-                cached_w[op] = w
-                out = _conv_shard(backend, x, w)
-            elif op == "bwd":
-                x, w, g = payload
-                w = cached_w[op] if w is None else w
-                cached_w[op] = w
-                out = _bwd_shard(backend, x, w, g)
-            elif op == "sconv":  # spatial: a height strip + halo, full kernel
-                xh, w, pt, pb = payload
-                w = cached_w[op] if w is None else w
-                cached_w[op] = w
-                out = strip_conv(backend, xh, w, pt, pb)
-            elif op == "sbwd":  # spatial backward: halo dX + full-kernel dW
-                xh, w, g, pt, pb = payload
-                w = cached_w[op] if w is None else w
-                cached_w[op] = w
-                out = strip_conv_vjp(backend, xh, w, g, pt, pb)
-            else:  # pragma: no cover
-                raise ValueError(f"unknown op {op}")
-            elapsed = time.perf_counter() - t0
-            if slowdown > 1.0:
-                time.sleep(elapsed * (slowdown - 1.0))
-        except Exception:
-            sock.write_to_master(_SlaveError(device, traceback.format_exc()))
-            continue
-        sock.write_to_master(out)
-
-
-@dataclasses.dataclass
-class LayerTiming:
-    comm_s: float = 0.0         # scatter writes (master -> slave sockets)
-    conv_s: float = 0.0         # conv phase: master's shard + gather
-    comp_s: float = 0.0         # non-conv layers (master only)
-    gather_wait_s: float = 0.0  # time the master blocked on slave results
-    overlap_s: float = 0.0      # scatter->gather window minus the blocked
-    #                             wait: comm/compute genuinely overlapped
-    master_conv_s: float = 0.0  # master's own conv/bwd shard compute — the
-    #                             denominator of its non-conv duty
-
-
-@dataclasses.dataclass
-class TrainStepResult:
-    """What one distributed training step hands back to the driver."""
-
-    head_aux: list                 # per-microbatch head outputs (loss, ...)
-    dw: List[np.ndarray]           # kernel gradient per conv layer
-    dx: np.ndarray                 # gradient wrt the chain input
-
-
-@dataclasses.dataclass
-class _Pending:
-    """An in-flight scatter: the master's own shard is deferred to the
-    gather so issuing the NEXT scatter never waits on local compute."""
-
-    op: str                       # "conv" | "bwd"
-    seq: int                      # FIFO position; gathers must match
-    x: np.ndarray                 # kernel mode: the broadcast input;
-    #                               spatial mode: the FULL input (the
-    #                               master slices its own strip at gather)
-    my_w: np.ndarray              # master's kernel shard (spatial: full w)
-    my_g: Optional[np.ndarray]    # bwd only: master's grad slice/strip
-    t_issued: float
-    mode: str = "kernel"          # partition axis this op was split on
-    rows: Optional[List[Tuple[int, int]]] = None      # spatial: [r0, r1) per device
-    halos: Optional[List[Tuple[int, int, int, int]]] = None
-    #                               spatial: (lo, hi, pad_top, pad_bot) per device
-
-
-def _strip_plan(
-    h: int, kh: int, counts: Sequence[int]
-) -> Tuple[List[Tuple[int, int]], List[Tuple[int, int, int, int]]]:
-    """Cut H output rows into per-device strips sized by ``counts`` and
-    derive each strip's halo'd input window: rows [lo, hi) of the input
-    plus (pad_top, pad_bot) zero rows that restore the clipped SAME
-    padding at the image border.  Empty strips get empty windows."""
-    ph, pb = kh // 2, kh - 1 - (kh // 2)
-    rows: List[Tuple[int, int]] = []
-    halos: List[Tuple[int, int, int, int]] = []
-    r0 = 0
-    for c in counts:
-        r1 = r0 + int(c)
-        if r1 == r0:
-            rows.append((r0, r0))
-            halos.append((r0, r0, 0, 0))
-            continue
-        lo, hi = max(0, r0 - ph), min(h, r1 + pb)
-        halos.append((lo, hi, ph - (r0 - lo), pb - (hi - r1)))
-        rows.append((r0, r1))
-        r0 = r1
-    assert r0 == h, "strip counts must sum to H"
-    return rows, halos
-
-
-@dataclasses.dataclass
-class _LayerPlan:
-    """How ONE conv layer is split over the devices — fixed for every
-    microbatch of the layer (the slave caches one kernel shard per op,
-    so the split must not drift between microbatches)."""
-
-    mode: str                     # "kernel" | "spatial" (auto is resolved)
-    counts: np.ndarray            # kernels (kernel) or rows (spatial) per device
-    shards: Optional[List[np.ndarray]] = None  # kernel mode: w split per device
-    w: Optional[np.ndarray] = None             # spatial mode: the full kernel
-    rows: Optional[List[Tuple[int, int]]] = None
-    halos: Optional[List[Tuple[int, int, int, int]]] = None
-
-
-class HeteroCluster:
-    """The master node (Algorithm 1) plus ``n_slaves`` slave threads.
-
-    Device 0 is the master itself (it convolves its own shard while the
-    slaves work).  ``slowdowns[i]`` emulates device i's relative speed
-    (1.0 = this host's full speed); slowdowns[0] applies to the master.
-
-    ``backends[i]`` names device i's conv backend (core/backends.py);
-    defaults to ``numpy`` everywhere, the seed behaviour.
-
-    ``pipeline=True`` enables the double-buffered microbatch protocol:
-    ``conv_forward``/``conv_backward`` split the batch into up to
-    ``microbatches`` slices and keep one scatter in flight ahead of every
-    gather.  With ``pipeline=False`` (default) every call is a single
-    scatter -> compute -> gather barrier, the paper's Algorithm 1.
-
-    ``bandwidth_mbps`` emulates finite master<->slave links (the paper's
-    ~5 Mbps Wi-Fi): message delivery is delayed by bytes/bandwidth on an
-    async delivery thread, so the pipelined protocol can hide transfer
-    time behind compute while the barrier protocol pays it serially.
-    Default ``None`` = infinitely fast links (the seed behaviour).
-
-    ``comp_aware=True`` (default) makes the Eq. 1 shares discount the
-    master's measured non-conv duty: once ``conv_forward_chain`` or
-    ``conv_train_chain`` has observed master-only between/head work
-    (``LayerTiming.comp_s`` vs ``master_conv_s``), ``shares_for`` inflates
-    the master's probe time by ``1/(1-duty)`` automatically — the share
-    bench_master_slave used to pin by hand.
-
-    ``partition`` picks the conv split axis: ``"kernel"`` (the paper,
-    default), ``"spatial"`` (height strips + halo exchange — each slave
-    gets only its rows instead of the full activation), or ``"auto"``
-    (per layer, the axis with the smaller predicted wall-clock over the
-    measured links).  ``bandwidth_mbps`` may be a single float or one
-    value PER SLAVE (heterogeneous links); with a real ``probe()`` the
-    Eq. 1 shares then include each device's comm term.  ``wire_dtype``
-    ("fp16"/"bf16") turns on the compact wire codec.
-    """
-
-    def __init__(
-        self,
-        slowdowns: Sequence[float],
-        backends: Optional[Sequence[str]] = None,
-        *,
-        pipeline: bool = False,
-        microbatches: int = 4,
-        bandwidth_mbps: Union[None, float, Sequence[Optional[float]]] = None,
-        comp_aware: bool = True,
-        partition: str = "kernel",
-        wire_dtype: Optional[str] = None,
-    ):
-        assert len(slowdowns) >= 1
-        if any(sd < 1.0 for sd in slowdowns):
-            # the op-level emulation can only SLEEP (slowdown-1)x the
-            # measured compute — it cannot make the host faster — so a
-            # sub-1 slowdown would probe fast (probe_conv_time scales
-            # both directions) yet compute at 1.0x, and Eq. 1 would
-            # overfeed the device.  Emulate faster devices with a
-            # parameterized sim backend instead.
-            raise ValueError(
-                f"slowdowns must be >= 1.0 (got {list(slowdowns)}): the "
-                f"cluster emulates slower devices by sleeping; for a "
-                f"FASTER virtual device use a parameterized sim backend, "
-                f"e.g. backends=['sim:5e9', ...]"
-            )
-        self.slowdowns = list(slowdowns)
-        self.n_slaves = len(slowdowns) - 1
-        if backends is None:
-            backends = ["numpy"] * len(self.slowdowns)
-        assert len(backends) == len(self.slowdowns), "one backend per device"
-        self.backends = list(backends)
-        # resolve every name NOW: an unknown backend must raise here, not
-        # kill a slave thread later and leave the master blocked forever
-        for name in self.backends:
-            get_backend(name)
-        self._master_backend = get_backend(self.backends[0])
-        self.pipeline = bool(pipeline)
-        self.microbatches = int(microbatches)
-        if partition not in PARTITION_MODES:
-            raise ValueError(
-                f"partition must be one of {PARTITION_MODES}, got {partition!r}"
-            )
-        self.partition = partition
-        self.partition_choices: Dict[tuple, str] = {}  # auto's per-layer picks
-        self.wire_dtype = wire_dtype
-        self._wire_np_dtype = resolve_wire_dtype(wire_dtype)
-        self._wire_itemsize = (
-            self._wire_np_dtype.itemsize if self._wire_np_dtype is not None else 4
-        )
-        if bandwidth_mbps is None or isinstance(bandwidth_mbps, (int, float)):
-            self.bandwidths: List[Optional[float]] = (
-                [bandwidth_mbps] * self.n_slaves
-            )
-        else:
-            self.bandwidths = list(bandwidth_mbps)
-            assert len(self.bandwidths) == self.n_slaves, "one bandwidth per slave"
-        self.sockets = [
-            _Socket(bw, self._wire_np_dtype) for bw in self.bandwidths
-        ]
-        self.threads = [
-            threading.Thread(
-                target=_slave_loop, args=(s, sd, bk, i), daemon=True
-            )
-            for i, (s, sd, bk) in enumerate(
-                zip(self.sockets, self.slowdowns[1:], self.backends[1:]), start=1
-            )
-        ]
-        for t in self.threads:
-            t.start()
-        self.probe_times: Optional[List[float]] = None
-        self.probe_flops: Optional[float] = None  # flops of the probe workload
-        self.timing = LayerTiming()
-        self.comp_aware = bool(comp_aware)
-        self.comp_duty = 0.0  # measured master non-conv duty (see shares_for)
-        self._duty_mark = (0.0, 0.0)  # (comp_s, master_conv_s) at last update
-        self._seq_issued = 0
-        self._seq_gathered = 0
-
-    # -- §4.1.1 pre-processing -------------------------------------------
-    def probe(self, **probe_kwargs) -> List[float]:
-        """Every device runs the timed reference convolution on its OWN
-        backend — sequential so the 1-core host's timings do not
-        interfere.  Also records the probe workload's FLOPs, the scale
-        factor that lets the comm-aware partitioner and the auto axis
-        chooser turn probe times into absolute per-layer predictions."""
-        master_t = probe_conv_time(
-            self._master_backend, slowdown=self.slowdowns[0], **probe_kwargs
-        )
-        slave_ts = []
-        for s in self.sockets:
-            s.write_to_slave(("probe", probe_kwargs))
-            slave_ts.append(self._check_result(s.read_on_master()))
-        self.probe_times = [master_t] + slave_ts
-        self.probe_flops = (
-            2.0
-            * probe_kwargs["batch"]
-            * probe_kwargs["image_size"] ** 2
-            * probe_kwargs["kernel_size"] ** 2
-            * probe_kwargs["in_channels"]
-            * probe_kwargs["num_kernels"]
-        )
-        return self.probe_times
-
-    def _effective_times(self) -> List[float]:
-        """Probe times with the comp-aware master discount applied."""
-        assert self.probe_times is not None, "run probe() first"
-        times = self.probe_times
-        if self.comp_aware and self.comp_duty > 0.0:
-            times = comp_aware_times(times, self.comp_duty)
-        return list(times)
-
-    def shares_for(
-        self,
-        num_kernels: int,
-        *,
-        unit_bytes: float = 0.0,
-        layer_flops: Optional[float] = None,
-    ) -> np.ndarray:
-        """Eq. 1 unit counts (kernels or rows) from the probe times; with
-        ``comp_aware`` the master's measured non-conv duty discounts its
-        share.  When the layer's wire cost is known (``unit_bytes`` per
-        unit, ``layer_flops`` to scale probe times to this layer) and the
-        links are finite, each slave's comm term joins its compute term —
-        the comm-extended Eq. 1 (partitioner.link_aware_times)."""
-        times = self._effective_times()
-        if (
-            unit_bytes > 0.0
-            and layer_flops
-            and self.probe_flops
-            and any(bw is not None for bw in self.bandwidths)
-        ):
-            scale = layer_flops / self.probe_flops
-            wire = [0.0] + [
-                float(num_kernels) * unit_bytes if bw is not None else 0.0
-                for bw in self.bandwidths
-            ]
-            times = link_aware_times(
-                [t * scale for t in times], wire, [None] + list(self.bandwidths)
-            )
-        return allocate_kernels(num_kernels, times)
-
-    def _update_comp_duty(self):
-        """Refresh the measured non-conv duty — the fraction of the
-        master's busy time spent OUTSIDE its conv shard — from the window
-        since the LAST update (deltas, not cumulative): a one-off cost in
-        an early step (jit compilation of the master-only stages, cold
-        caches) then mis-shapes at most the next step's shares before the
-        first clean window corrects it."""
-        t = self.timing
-        dc = t.comp_s - self._duty_mark[0]
-        dm = t.master_conv_s - self._duty_mark[1]
-        self._duty_mark = (t.comp_s, t.master_conv_s)
-        if dc + dm > 0.0:
-            self.comp_duty = dc / (dc + dm)
-
-    # -- hybrid spatial x kernel partitioning: per-layer plans ------------
-    def _unit_bytes(self, x_shape, w_shape, mode: str, op: str) -> float:
-        """Share-proportional wire bytes per allocation unit — one KERNEL
-        (w column out + feature-map column back, plus the gradient slice
-        and dW column for bwd) or one ROW (x row out + y row back, plus
-        the g row and dX row for bwd).  ``op="train"`` is one forward
-        plus one backward, what a train-chain plan governs.  Fixed
-        per-slave costs (the x broadcast, the halo, the full kernel, the
-        kernel-mode backward's full-dX return) do not move the optimal
-        split and are left to the mode predictor."""
-        b, h, wd, cin = x_shape
-        kh, kw, _, cout = w_shape
-        item = self._wire_itemsize
-        if mode == "kernel":
-            w_col = kh * kw * cin * item
-            y_col = b * h * wd * item
-            conv = w_col + y_col       # w col out + y col back
-            # bwd: w col + g col out, dW col back; the full-dX return is
-            # a FIXED per-slave cost, excluded by this contract
-            bwd = 2 * w_col + y_col
-        else:
-            x_row = b * wd * cin * item
-            y_row = b * wd * cout * item
-            conv = x_row + y_row       # x row out + y row back
-            bwd = 2 * x_row + y_row    # x + g rows out, dX row back
-        if op == "conv":
-            return conv
-        if op == "bwd":
-            return bwd
-        return conv + bwd              # "train"
-
-    def predict_partition_seconds(
-        self, x_shape, w_shape, op: str = "conv"
-    ) -> Dict[str, float]:
-        """Predicted per-layer wall-clock of each partition axis: every
-        slave's wire bytes over its OWN link plus its balanced compute
-        share (absolute once a real ``probe()`` has calibrated
-        ``probe_flops``; otherwise the comm term alone decides — the
-        compute splits near-identically on both axes).  ``op`` is what
-        the plan will govern: ``"conv"`` (forward only), ``"bwd"``, or
-        ``"train"`` (one forward + one backward) — the backward's wire
-        differs by axis (kernel mode re-broadcasts x AND returns a
-        full-size dX per slave; spatial ships strips both ways), so a
-        train-step plan must weigh both directions."""
-        b, h, wd, cin = x_shape
-        kh, kw, _, cout = w_shape
-        item = self._wire_itemsize
-        x_b = float(b * h * wd * cin * item)
-        y_b = float(b * h * wd * cout * item)
-        w_b = float(kh * kw * cin * cout * item)
-        times = self._effective_times()
-        layer_flops = 2.0 * b * h * wd * kh * kw * cin * cout
-        # the backward (dX + dW) costs ~2x the forward's flops
-        flops_mult = {"conv": 1.0, "bwd": 2.0, "train": 3.0}[op]
-        scale = (layer_flops / self.probe_flops) if self.probe_flops else None
-        out: Dict[str, float] = {}
-        for mode in ("kernel", "spatial"):
-            n_units = cout if mode == "kernel" else h
-            counts = self.shares_for(
-                n_units,
-                unit_bytes=self._unit_bytes(x_shape, w_shape, mode, op),
-                layer_flops=flops_mult * layer_flops,
-            )
-            worst = 0.0
-            for i, c in enumerate(counts):
-                bw = None if i == 0 else self.bandwidths[i - 1]
-                frac = float(c) / n_units if n_units else 0.0
-                halo = min(kh - 1, h) if c > 0 else 0
-                if mode == "kernel":
-                    fwd_wire = x_b + frac * (w_b + y_b)
-                    # x re-broadcast + g slice out; full dX + dW cols back
-                    bwd_wire = 2.0 * x_b + frac * (w_b + y_b)
-                    comp_frac = frac
-                    active = i > 0
-                else:
-                    hfrac = (c + halo) / h
-                    fwd_wire = hfrac * x_b + w_b + frac * y_b
-                    # x strip + g strip out; dX halo strip + full dW back
-                    bwd_wire = 2.0 * hfrac * x_b + 2.0 * w_b + frac * y_b
-                    comp_frac = hfrac
-                    active = i > 0 and c > 0
-                wire = {
-                    "conv": fwd_wire,
-                    "bwd": bwd_wire,
-                    "train": fwd_wire + bwd_wire,
-                }[op] if active else 0.0
-                t_comm = wire * 8.0 / (bw * 1e6) if bw is not None else 0.0
-                t_comp = (
-                    times[i] * scale * comp_frac * flops_mult if scale else 0.0
-                )
-                worst = max(worst, t_comm + t_comp)
-            out[mode] = worst
-        return out
-
-    def _resolve_mode(
-        self, x_shape, w_shape, override: Optional[str], op: str = "conv"
-    ) -> str:
-        """The partition axis for one layer; ``"auto"`` resolves against
-        the predicted wall-clock of ``op`` and records its pick."""
-        mode = override or self.partition
-        if mode not in PARTITION_MODES:
-            raise ValueError(
-                f"partition must be one of {PARTITION_MODES}, got {mode!r}"
-            )
-        if mode != "auto":
-            return mode
-        if all(bw is None for bw in self.bandwidths):
-            # free links: the paper's kernel axis, no halo overhead
-            choice = "kernel"
-        else:
-            pred = self.predict_partition_seconds(x_shape, w_shape, op)
-            choice = "spatial" if pred["spatial"] < pred["kernel"] else "kernel"
-        self.partition_choices[(tuple(x_shape), tuple(w_shape))] = choice
-        return choice
-
-    def plan_conv(
-        self, x_shape, w: np.ndarray, op: str = "conv",
-        partition: Optional[str] = None,
-    ) -> _LayerPlan:
-        """Freeze how one conv layer splits over the devices: the axis
-        (resolving ``"auto"`` against what the plan will govern — ``op``
-        is ``"conv"``, ``"bwd"`` or ``"train"``), the Eq. 1(+comm) unit
-        counts, and the per-device kernel shards or row strips.  One
-        plan serves every microbatch of the layer — the slave caches ONE
-        kernel shard per op, so the split must not drift within a
-        layer."""
-        mode = self._resolve_mode(tuple(x_shape), tuple(w.shape), partition, op)
-        b, h, wd, cin = x_shape
-        kh, kw, _, cout = w.shape
-        layer_flops = 2.0 * b * h * wd * kh * kw * cin * cout
-        unit_bytes = self._unit_bytes(x_shape, w.shape, mode, op)
-        if mode == "kernel":
-            counts = self.shares_for(
-                cout, unit_bytes=unit_bytes, layer_flops=layer_flops
-            )
-            return _LayerPlan("kernel", counts, shards=self._split(w, counts))
-        counts = self.shares_for(h, unit_bytes=unit_bytes, layer_flops=layer_flops)
-        rows, halos = _strip_plan(h, kh, counts)
-        return _LayerPlan(
-            "spatial", counts, w=np.asarray(w, np.float32), rows=rows, halos=halos
-        )
-
-    # -- async scatter/gather halves -------------------------------------
-    def _split(self, w: np.ndarray, counts: np.ndarray) -> List[np.ndarray]:
-        edges = np.cumsum(counts)[:-1]
-        return np.split(w, edges, axis=-1)
-
-    def scatter_conv(
-        self, x: np.ndarray, w: np.ndarray, *, partition: Optional[str] = None
-    ) -> _Pending:
-        """Scatter one conv: broadcast x + kernel shards (kernel mode) or
-        height strips + the full kernel (spatial mode); returns a handle.
-        The master's own shard runs at gather time."""
-        x = np.asarray(x, np.float32)
-        plan = self.plan_conv(x.shape, w, "conv", partition)
-        return self._scatter_conv_planned(x, plan, send_weights=True)
-
-    def _scatter_conv_planned(
-        self, x: np.ndarray, plan: _LayerPlan, send_weights: bool
-    ) -> _Pending:
-        if plan.mode == "kernel":
-            return self._scatter_conv_shards(x, plan.shards, send_weights)
-        t0 = time.perf_counter()
-        for sock, (lo, hi, pt, pb) in zip(self.sockets, plan.halos[1:]):
-            sock.write_to_slave(
-                ("sconv", (x[:, lo:hi], plan.w if send_weights else None, pt, pb))
-            )
-        now = time.perf_counter()
-        self.timing.comm_s += now - t0
-        self._seq_issued += 1
-        return _Pending(
-            "conv", self._seq_issued, x, plan.w, None, now,
-            mode="spatial", rows=plan.rows, halos=plan.halos,
-        )
-
-    def _scatter_conv_shards(
-        self, x: np.ndarray, shards: List[np.ndarray], send_weights: bool
-    ) -> _Pending:
-        """send_weights=False sends w=None: the slave reuses its cached
-        shard, so pipelined microbatches pay the weight traffic once."""
-        t0 = time.perf_counter()
-        for sock, shard in zip(self.sockets, shards[1:]):
-            sock.write_to_slave(("conv", (x, shard if send_weights else None)))
-        now = time.perf_counter()
-        self.timing.comm_s += now - t0
-        self._seq_issued += 1
-        return _Pending("conv", self._seq_issued, x, shards[0], None, now)
-
-    def gather_conv(self, p: _Pending) -> np.ndarray:
-        """Compute the master's shard, collect the slaves' feature maps
-        (FIFO: gathers must be issued in scatter order), concatenate —
-        along channels (kernel mode) or height (spatial strips)."""
-        self._check_order(p, "conv")
-        t0 = time.perf_counter()
-        if p.mode == "spatial":
-            lo, hi, pt, pb = p.halos[0]
-            my_out = self._master_compute(
-                lambda: strip_conv(self._master_backend, p.x[:, lo:hi], p.my_w, pt, pb)
-            )
-            axis = 1
-        else:
-            my_out = self._master_compute(
-                lambda: _conv_shard(self._master_backend, p.x, p.my_w)
-            )
-            axis = -1
-        outs = [my_out]
-        t_wait = time.perf_counter()
-        for sock in self.sockets:
-            outs.append(self._check_result(sock.read_on_master()))
-        t1 = time.perf_counter()
-        self._account_gather(p, t0, t_wait, t1)
-        return np.concatenate(outs, axis=axis)
-
-    def scatter_bwd(
-        self, x: np.ndarray, w: np.ndarray, g: np.ndarray,
-        *, partition: Optional[str] = None,
-    ) -> _Pending:
-        x = np.asarray(x, np.float32)
-        g = np.asarray(g, np.float32)
-        plan = self.plan_conv(x.shape, w, "bwd", partition)
-        return self._scatter_bwd_planned(x, plan, g, send_weights=True)
-
-    def _scatter_bwd_planned(
-        self, x: np.ndarray, plan: _LayerPlan, g: np.ndarray, send_weights: bool
-    ) -> _Pending:
-        if plan.mode == "kernel":
-            return self._scatter_bwd_shards(
-                x, plan.shards, g, plan.counts, send_weights
-            )
-        t0 = time.perf_counter()
-        for sock, (r0, r1), (lo, hi, pt, pb) in zip(
-            self.sockets, plan.rows[1:], plan.halos[1:]
-        ):
-            sock.write_to_slave(
-                ("sbwd", (
-                    x[:, lo:hi], plan.w if send_weights else None,
-                    g[:, r0:r1], pt, pb,
-                ))
-            )
-        now = time.perf_counter()
-        self.timing.comm_s += now - t0
-        self._seq_issued += 1
-        r0, r1 = plan.rows[0]
-        return _Pending(
-            "bwd", self._seq_issued, x, plan.w, g[:, r0:r1], now,
-            mode="spatial", rows=plan.rows, halos=plan.halos,
-        )
-
-    def _scatter_bwd_shards(
-        self,
-        x: np.ndarray,
-        w_shards: List[np.ndarray],
-        g: np.ndarray,
-        counts: np.ndarray,
-        send_weights: bool,
-    ) -> _Pending:
-        g_shards = self._split(g, counts)
-        t0 = time.perf_counter()
-        for sock, ws, gs in zip(self.sockets, w_shards[1:], g_shards[1:]):
-            sock.write_to_slave(("bwd", (x, ws if send_weights else None, gs)))
-        now = time.perf_counter()
-        self.timing.comm_s += now - t0
-        self._seq_issued += 1
-        return _Pending("bwd", self._seq_issued, x, w_shards[0], g_shards[0], now)
-
-    def gather_bwd(self, p: _Pending) -> Tuple[np.ndarray, np.ndarray]:
-        """Master's shard VJP + gather.  Kernel mode: sum partial dX,
-        concat dW shards.  Spatial mode: overlap-ADD each device's halo'd
-        dX rows into the full dX (the seam sums) and SUM the full-kernel
-        dW contributions."""
-        self._check_order(p, "bwd")
-        t0 = time.perf_counter()
-        if p.mode == "spatial":
-            lo, hi, pt, pb = p.halos[0]
-            dxh, dw = self._master_compute(
-                lambda: strip_conv_vjp(
-                    self._master_backend, p.x[:, lo:hi], p.my_w, p.my_g, pt, pb
-                )
-            )
-            dx = np.zeros(p.x.shape, np.float32)
-            dx[:, lo:hi] += dxh
-            t_wait = time.perf_counter()
-            for sock, (lo_i, hi_i, _pt, _pb) in zip(self.sockets, p.halos[1:]):
-                dxh_i, dw_i = self._check_result(sock.read_on_master())
-                dx[:, lo_i:hi_i] += dxh_i  # the halo seams overlap-sum here
-                dw = dw + dw_i
-            t1 = time.perf_counter()
-            self._account_gather(p, t0, t_wait, t1)
-            return dx, dw
-        dx, dw0 = self._master_compute(
-            lambda: _bwd_shard(self._master_backend, p.x, p.my_w, p.my_g)
-        )
-        dws = [dw0]
-        t_wait = time.perf_counter()
-        for sock in self.sockets:
-            dxi, dwi = self._check_result(sock.read_on_master())
-            dx = dx + dxi
-            dws.append(dwi)
-        t1 = time.perf_counter()
-        self._account_gather(p, t0, t_wait, t1)
-        return dx, np.concatenate(dws, axis=-1)
-
-    def _check_result(self, out):
-        """Re-raise a slave's shipped exception at the gather that would
-        otherwise consume its (missing) result."""
-        if isinstance(out, _SlaveError):
-            raise RuntimeError(
-                f"slave device {out.device} failed while computing its "
-                f"shard:\n{out.tb}"
-            )
-        return out
-
-    def _check_order(self, p: _Pending, op: str):
-        # real exceptions, not asserts: an out-of-order gather would pair
-        # one scatter's master shard with another's slave outputs and
-        # return silently corrupted feature maps (and -O strips asserts)
-        if p.op != op:
-            raise RuntimeError(f"pending is a {p.op!r} op, gathered as {op!r}")
-        if p.seq != self._seq_gathered + 1:
-            raise RuntimeError(
-                "gathers must follow scatter order (FIFO sockets): "
-                f"expected seq {self._seq_gathered + 1}, got {p.seq}"
-            )
-        self._seq_gathered = p.seq
-
-    def _master_compute(self, fn: Callable):
-        t0 = time.perf_counter()
-        out = fn()
-        el = time.perf_counter() - t0
-        if self.slowdowns[0] > 1.0:
-            time.sleep(el * (self.slowdowns[0] - 1.0))
-        self.timing.master_conv_s += time.perf_counter() - t0
-        return out
-
-    def _account_gather(self, p: _Pending, t0: float, t_wait: float, t1: float):
-        self.timing.conv_s += t1 - t0
-        self.timing.gather_wait_s += t1 - t_wait
-        # in-flight window minus the time the master actually blocked:
-        # the comm/compute overlap the pipeline buys
-        self.timing.overlap_s += max(0.0, (t_wait - p.t_issued))
-
-    # -- Algorithm 1, the conv layer loop --------------------------------
-    def _n_micro(self, batch: int) -> int:
-        if not self.pipeline:
-            return 1
-        return max(1, min(self.microbatches, batch))
-
-    def conv_forward(
-        self, x: np.ndarray, w: np.ndarray, *, partition: Optional[str] = None
-    ) -> np.ndarray:
-        """Distributed convolution over the planned partition axis.
-        Pipelined mode double-buffers microbatches along the batch axis
-        (orthogonal to either split axis); the plan — and so the kernel
-        shard each slave caches — is fixed across the microbatches."""
-        x = np.asarray(x, np.float32)
-        plan = self.plan_conv(x.shape, w, "conv", partition)
-        n = self._n_micro(x.shape[0])
-        if n == 1:
-            return self.gather_conv(self._scatter_conv_planned(x, plan, True))
-        parts = np.array_split(x, n, axis=0)
-        outs = []
-        pending = self._scatter_conv_planned(parts[0], plan, True)
-        for nxt in parts[1:]:
-            # next scatter in flight; slaves reuse the cached kernel
-            nxt_pending = self._scatter_conv_planned(nxt, plan, False)
-            outs.append(self.gather_conv(pending))
-            pending = nxt_pending
-        outs.append(self.gather_conv(pending))
-        return np.concatenate(outs, axis=0)
-
-    def conv_backward(
-        self, x: np.ndarray, w: np.ndarray, g: np.ndarray,
-        *, partition: Optional[str] = None,
-    ) -> Tuple[np.ndarray, np.ndarray]:
-        """Distributed VJP over the planned partition axis: kernel mode
-        returns (partial-dX sums, concatenated dW shards); spatial mode
-        seam-sums halo'd dX strips and sums full-kernel dW parts.
-        Pipelined mode double-buffers microbatches; per-microbatch dW
-        contributions are summed."""
-        x = np.asarray(x, np.float32)
-        g = np.asarray(g, np.float32)
-        plan = self.plan_conv(x.shape, w, "bwd", partition)
-        n = self._n_micro(x.shape[0])
-        if n == 1:
-            return self.gather_bwd(self._scatter_bwd_planned(x, plan, g, True))
-        xs = np.array_split(x, n, axis=0)
-        gs = np.array_split(g, n, axis=0)
-        dxs: List[np.ndarray] = []
-        dw_total: Optional[np.ndarray] = None
-        pending = self._scatter_bwd_planned(xs[0], plan, gs[0], True)
-        for xi, gi in zip(xs[1:], gs[1:]):
-            nxt_pending = self._scatter_bwd_planned(xi, plan, gi, False)
-            dx_i, dw_i = self.gather_bwd(pending)
-            dxs.append(dx_i)
-            dw_total = dw_i if dw_total is None else dw_total + dw_i
-            pending = nxt_pending
-        dx_i, dw_i = self.gather_bwd(pending)
-        dxs.append(dx_i)
-        dw_total = dw_i if dw_total is None else dw_total + dw_i
-        return np.concatenate(dxs, axis=0), dw_total
-
-    def conv_forward_chain(
-        self,
-        x: np.ndarray,
-        layer_weights: Sequence[np.ndarray],
-        between: Optional[Sequence[Optional[Callable[[np.ndarray], np.ndarray]]]] = None,
-    ) -> np.ndarray:
-        """Run consecutive conv layers over the cluster; ``between[k]``
-        is the master-only non-conv stage after layer k (ReLU/LRN/pool).
-
-        In pipelined mode the microbatches are double-buffered through
-        each layer, so the master's between-layer work for microbatch i
-        overlaps the slaves' convolutions for microbatch i+1 — the
-        slave queues stay non-empty across the whole chain.  In barrier
-        mode every layer is scatter -> compute -> gather -> between on
-        the full batch, the paper's schedule."""
-        if between is None:
-            between = [None] * len(layer_weights)
-        assert len(between) == len(layer_weights)
-        x = np.asarray(x, np.float32)
-        batch = x.shape[0]
-        n = self._n_micro(batch)
-        parts: List[np.ndarray] = np.array_split(x, n, axis=0) if n > 1 else [x]
-        for w, f in zip(layer_weights, between):
-            # plan from the FULL batch shape: one split per layer, every
-            # microbatch rides it (and the slave's cached kernel)
-            plan = self.plan_conv((batch,) + parts[0].shape[1:], w, "conv")
-            if len(parts) == 1:
-                y = self.gather_conv(self._scatter_conv_planned(parts[0], plan, True))
-                parts = [self._master_comp(f, y) if f else y]
-                continue
-            outs: List[np.ndarray] = []
-            pending = self._scatter_conv_planned(parts[0], plan, True)
-            for nxt in parts[1:]:
-                nxt_pending = self._scatter_conv_planned(nxt, plan, False)
-                y = self.gather_conv(pending)
-                outs.append(self._master_comp(f, y) if f else y)
-                pending = nxt_pending
-            y = self.gather_conv(pending)
-            outs.append(self._master_comp(f, y) if f else y)
-            parts = outs
-        self._update_comp_duty()
-        return np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
-
-    def _master_comp(self, f: Callable, y: np.ndarray) -> np.ndarray:
-        t0 = time.perf_counter()
-        out = f(y)
-        self.timing.comp_s += time.perf_counter() - t0
-        return out
-
-    # -- the full training step, pipelined (fwd + bwd, Algorithm 1 whole) --
-    def microbatch_slices(self, batch: int) -> List[slice]:
-        """The batch-axis slices the pipelined schedules will use for a
-        given batch size — drivers split labels/targets identically."""
-        n = self._n_micro(batch)
-        sizes = [a.size for a in np.array_split(np.arange(batch), n)]
-        out, start = [], 0
-        for s in sizes:
-            out.append(slice(start, start + s))
-            start += s
-        return out
-
-    def conv_train_chain(
-        self,
-        x: np.ndarray,
-        layer_weights: Sequence[np.ndarray],
-        between: Optional[Sequence[Optional[Callable]]] = None,
-        head: Optional[Callable] = None,
-    ) -> TrainStepResult:
-        """One distributed training step over consecutive conv layers —
-        forward AND backward pipelined across the cluster.
-
-        ``between[k]`` is the master-only stage after conv layer k:
-        ``f(y) -> (z, vjp)`` with ``vjp(gz) -> gy`` (None = identity).
-        ``head(z, i) -> (aux, gz)`` is the master-only loss head on the
-        final stage output of microbatch i (indices follow
-        ``microbatch_slices``); its gradient seeds the backward chain.
-
-        The schedule is ONE software pipeline over the phases
-        ``[fwd L0 .. fwd Lk, bwd Lk .. bwd L0]``: each phase's scatters
-        are issued as the previous phase's gathers complete, so the
-        backward scatter of layer k goes out while layer k+1's backward
-        gathers — and the master-only between-VJPs / head gradients — are
-        still in flight, and the slave queues stay non-empty across the
-        forward->backward turnaround.  Pipeline depth is the microbatch
-        count (the first phase fills the pipe; total queued bytes match
-        one barrier-mode full-batch scatter), deeper than the depth-2
-        ``conv_forward_chain``.  The forward stashes each conv
-        layer's input and each between stage's VJP; every phase re-sends
-        its kernel shard once and microbatches after the first ride the
-        slave's cached copy.  Gathers follow global scatter order, so the
-        FIFO-socket contract holds even though ``conv`` and ``bwd`` ops
-        interleave on the wire.
-        """
-        L = len(layer_weights)
-        assert L >= 1 and head is not None, "need >= 1 conv layer and a head"
-        if between is None:
-            between = [None] * L
-        assert len(between) == L
-        # split along the SAME slices drivers use for labels/targets, by
-        # construction (head(z, i) pairs activations with slice i)
-        x = np.asarray(x, np.float32)
-        slices = self.microbatch_slices(x.shape[0])
-        parts: List[np.ndarray] = [x[sl] for sl in slices]
-        n = len(parts)
-
-        # plans fixed for the whole step: fwd and bwd must split every
-        # layer identically (comp_duty updates only at the end).  Built
-        # lazily at each layer's first microbatch — spatial/auto plans
-        # need the layer's ACTUAL activation shape, unknown until the
-        # between stages have run.
-        plans: List[Optional[_LayerPlan]] = [None] * L
-
-        def plan_for(k: int, xi: np.ndarray) -> _LayerPlan:
-            if plans[k] is None:
-                # op="train": the plan governs BOTH sweeps, so the auto
-                # axis and the comm-aware counts weigh fwd + bwd wire
-                plans[k] = self.plan_conv(
-                    (x.shape[0],) + xi.shape[1:], layer_weights[k], "train"
-                )
-            return plans[k]
-
-        stash_x: List[List[Optional[np.ndarray]]] = [[None] * n for _ in range(L)]
-        stash_vjp: List[List[Optional[Callable]]] = [[None] * n for _ in range(L)]
-        head_aux: list = [None] * n
-
-        def fwd_finish(k: int, i: int, p: _Pending) -> np.ndarray:
-            """Gather conv layer k / microbatch i and run the master-only
-            between stage, stashing its VJP for the backward sweep."""
-            y = self.gather_conv(p)
-            f = between[k]
-            if f is None:
-                return y
-            t0 = time.perf_counter()
-            z, vjp = f(y)
-            self.timing.comp_s += time.perf_counter() - t0
-            stash_vjp[k][i] = vjp
-            return z
-
-        def bwd_through(k: int, i: int, g: np.ndarray) -> np.ndarray:
-            """Pull g back through layer k's between stage (master-only)."""
-            vjp = stash_vjp[k][i]
-            if vjp is None:
-                return g
-            t0 = time.perf_counter()
-            gy = vjp(g)
-            self.timing.comp_s += time.perf_counter() - t0
-            return gy
-
-        # ---- forward phases: layer k's scatters interleave with k-1's
-        # gathers (and the between stages between them)
-        pend: List[_Pending] = []
-        for k in range(L):
-            cur: List[_Pending] = []
-            for i in range(n):
-                xi = parts[i] if k == 0 else fwd_finish(k - 1, i, pend[i])
-                xi = np.asarray(xi, np.float32)
-                stash_x[k][i] = xi
-                cur.append(
-                    self._scatter_conv_planned(
-                        xi, plan_for(k, xi), send_weights=(i == 0)
-                    )
-                )
-            pend = cur
-
-        # ---- turnaround: finish the last fwd layer, compute the head
-        # grads, and seed the backward — the bwd scatter of the last layer
-        # goes out while its later fwd microbatches are still in flight
-        cur = []
-        for i in range(n):
-            z = fwd_finish(L - 1, i, pend[i])
-            t0 = time.perf_counter()
-            head_aux[i], gz = head(z, i)
-            self.timing.comp_s += time.perf_counter() - t0
-            gy = bwd_through(L - 1, i, np.asarray(gz, np.float32))
-            cur.append(
-                self._scatter_bwd_planned(
-                    stash_x[L - 1][i], plans[L - 1], gy, send_weights=(i == 0)
-                )
-            )
-        pend = cur
-
-        # ---- backward phases: layer k's scatters interleave with layer
-        # k+1's gathers and the between-VJPs; dW shards sum per microbatch
-        dw: List[Optional[np.ndarray]] = [None] * L
-
-        def acc_dw(k: int, dwi: np.ndarray):
-            dw[k] = dwi if dw[k] is None else dw[k] + dwi
-
-        for k in range(L - 2, -1, -1):
-            cur = []
-            for i in range(n):
-                dx_next, dw_next = self.gather_bwd(pend[i])
-                acc_dw(k + 1, dw_next)
-                gy = bwd_through(k, i, dx_next)
-                cur.append(
-                    self._scatter_bwd_planned(
-                        stash_x[k][i], plans[k], gy, send_weights=(i == 0)
-                    )
-                )
-            pend = cur
-
-        # ---- drain the first layer's backward
-        dxs: List[np.ndarray] = []
-        for i in range(n):
-            dx_i, dw_i = self.gather_bwd(pend[i])
-            acc_dw(0, dw_i)
-            dxs.append(dx_i)
-        self._update_comp_duty()
-        return TrainStepResult(
-            head_aux=head_aux,
-            dw=[d for d in dw],
-            dx=np.concatenate(dxs, axis=0) if n > 1 else dxs[0],
-        )
-
-    def conv_train_step(
-        self,
-        x: np.ndarray,
-        layer_weights: Sequence[np.ndarray],
-        between: Optional[Sequence[Optional[Callable]]] = None,
-        head: Optional[Callable] = None,
-        *,
-        update: Optional[Callable[[np.ndarray, np.ndarray], np.ndarray]] = None,
-    ) -> Tuple[List[np.ndarray], TrainStepResult]:
-        """One full forward+backward ``conv_train_chain`` plus the
-        optimizer step on the conv kernels: ``update(w, dw) -> new_w``
-        (None leaves the weights untouched and just returns the grads)."""
-        res = self.conv_train_chain(x, layer_weights, between=between, head=head)
-        if update is None:
-            return list(layer_weights), res
-        return [update(w, d) for w, d in zip(layer_weights, res.dw)], res
-
-    # ---------------------------------------------------------------------
-    @property
-    def comm_bytes(self) -> int:
-        return sum(s.total_bytes for s in self.sockets)
-
-    def reset_stats(self):
-        self.timing = LayerTiming()
-        self._duty_mark = (0.0, 0.0)
-        for s in self.sockets:
-            s.bytes_to_slave = 0
-            s.bytes_to_master = 0
-
-    def shutdown(self):
-        for s in self.sockets:
-            s.write_to_slave(_TRAIN_OVER)
-        for t in self.threads:
-            t.join(timeout=10)
-        for s in self.sockets:
-            s.close()
-
-
-def make_distributed_conv(cluster: HeteroCluster):
-    """A drop-in ``conv_fn`` for models/cnn.py: jax custom-VJP convolution
-    whose forward and backward run over the cluster via callbacks.  If the
-    cluster is pipelined, every conv call is internally microbatched and
-    double-buffered; keep the master's backend ``numpy`` here (see module
-    docstring)."""
-    # Fail fast on the documented deadlock instead of hanging at 0% CPU:
-    # the callbacks below block the jax runtime thread while the master
-    # computes its shard, so any master backend that re-enters jit
-    # dispatch — everything but numpy — deadlocks, as does a pallas slave
-    # in interpret mode (interpret re-enters jax from the slave thread
-    # against the blocked callback).
-    if cluster.backends[0] != "numpy":
-        raise RuntimeError(
-            f"make_distributed_conv drives the cluster through jax host "
-            f"callbacks; the master (device 0) backend must be 'numpy', got "
-            f"{cluster.backends[0]!r}: re-entering jax from inside "
-            f"pure_callback deadlocks the runtime thread.  Use the direct "
-            f"conv_train_step / conv_forward drivers (no callbacks) for a "
-            f"non-numpy master."
-        )
-    interp_pallas = [
-        i for i, b in enumerate(cluster.backends)
-        if i > 0 and b.partition(":")[0] == "pallas"
-        and getattr(get_backend(b), "interpret", False)
-    ]
-    if interp_pallas:
-        raise RuntimeError(
-            f"slave device(s) {interp_pallas} run the 'pallas' backend in "
-            f"interpret mode, which re-enters jax from the slave thread and "
-            f"can deadlock against a blocked make_distributed_conv callback. "
-            f"Use compiled TPU pallas, 'xla', or 'numpy' slaves here, or "
-            f"drive the cluster directly via conv_train_step."
-        )
-
-    @jax.custom_vjp
-    def dconv(x, w, b):
-        y = _call_fwd(x, w)
-        return y + b[None, None, None, :]
-
-    def fwd(x, w, b):
-        y = _call_fwd(x, w)
-        return y + b[None, None, None, :], (x, w)
-
-    def bwd(res, g):
-        x, w = res
-        dx, dw = _call_bwd(x, w, g)
-        db = jnp.sum(g, axis=(0, 1, 2))
-        return dx, dw, db
-
-    def _call_fwd(x, w):
-        out_shape = jax.ShapeDtypeStruct(x.shape[:-1] + (w.shape[-1],), x.dtype)
-        return jax.pure_callback(
-            lambda xx, ww: cluster.conv_forward(np.asarray(xx), np.asarray(ww)),
-            out_shape, x, w,
-        )
-
-    def _call_bwd(x, w, g):
-        out_shape = (
-            jax.ShapeDtypeStruct(x.shape, x.dtype),
-            jax.ShapeDtypeStruct(w.shape, w.dtype),
-        )
-        return jax.pure_callback(
-            lambda xx, ww, gg: cluster.conv_backward(
-                np.asarray(xx), np.asarray(ww), np.asarray(gg)
-            ),
-            out_shape, x, w, g,
-        )
-
-    dconv.defvjp(fwd, bwd)
-
-    def conv_fn(params, x, padding: str = "SAME"):
-        return dconv(x, params["kernel"], params["bias"])
-
-    return conv_fn
+def _slave_loop(sock, slowdown: float, backend_name: str, device: int):
+    """Seed-signature wrapper: drive the protocol loop from a legacy
+    ``_Socket`` (an ``InProcTransport``) instead of a bare endpoint."""
+    return slave_loop(sock.slave_endpoint(), slowdown, backend_name, device)
+
+
+__all__ = [
+    "HeteroCluster",
+    "make_distributed_conv",
+    "LayerTiming",
+    "TrainStepResult",
+    "PARTITION_MODES",
+    "resolve_wire_dtype",
+    "Transport",
+    "TCPTransport",
+    "TCPSlaveEndpoint",
+    "TCPListener",
+]

@@ -63,22 +63,65 @@ def allocate_kernels(
 _MAX_COMP_DUTY = 0.95  # clamp: a duty of 1.0 would zero the device out
 
 
+def effective_times(
+    times: Sequence[float],
+    *,
+    comp_duties=None,
+    wire_bytes: Optional[Sequence[float]] = None,
+    bandwidths_mbps: Optional[Sequence[Optional[float]]] = None,
+) -> np.ndarray:
+    """THE parameterized Eq. 1 input: probe times adjusted for every
+    modelled effect, in one place.
+
+    Two orthogonal adjustments (either may be omitted):
+
+    * **non-conv duty** (multiplicative): a device that spends fraction
+      ``d`` of its busy time on master-only non-conv layers has only
+      ``1 - d`` of its throughput left for its conv shard, so its probe
+      time inflates to ``t / (1 - d)`` (clamped at ``_MAX_COMP_DUTY``).
+      ``comp_duties`` is a mapping ``{device: duty}`` or a per-device
+      sequence.
+    * **link comm** (additive): ``wire_bytes[i]`` is the bytes device i
+      would move over its link if it took the WHOLE workload
+      (share-proportional traffic only — fixed broadcast costs do not
+      move the optimal split); ``bandwidths_mbps[i]`` its measured link
+      (None/inf = no link, e.g. the master).  Both terms scale linearly
+      with the share, so Eq. 1 over the sums minimizes the predicted
+      wall-clock, not just the compute makespan.
+
+    ``comp_aware_times`` / ``link_aware_times`` / ``profiles_to_shares``
+    and ``HeteroCluster.shares_for`` are all thin parameterizations of
+    this one path."""
+    t = np.asarray(times, dtype=np.float64).copy()
+    if comp_duties is not None:
+        items = (
+            comp_duties.items()
+            if hasattr(comp_duties, "items")
+            else enumerate(comp_duties)
+        )
+        for i, duty in items:
+            d = min(float(duty), _MAX_COMP_DUTY)
+            if d > 0.0:
+                t[i] = t[i] / (1.0 - d)
+    if wire_bytes is not None:
+        if bandwidths_mbps is None or not (
+            len(wire_bytes) == len(bandwidths_mbps) == t.size
+        ):
+            raise ValueError("times, wire_bytes, bandwidths must align")
+        for i, (b, bw) in enumerate(zip(wire_bytes, bandwidths_mbps)):
+            if bw is not None and np.isfinite(bw):
+                if bw <= 0:
+                    raise ValueError("bandwidths must be positive")
+                t[i] += float(b) * 8.0 / (bw * 1e6)
+    return t
+
+
 def comp_aware_times(
     times: Sequence[float], comp_duty: float, *, device: int = 0
 ) -> np.ndarray:
-    """Discount one device's Eq. 1 share by its non-conv duty.
-
-    A master that spends fraction ``comp_duty`` of its busy time on the
-    master-only non-conv layers (ReLU/LRN/pool/fc) has only
-    ``1 - comp_duty`` of its throughput left for its conv shard, so its
-    probe time is inflated to ``t / (1 - comp_duty)`` before Eq. 1.
-    ``times`` is returned unchanged (copied) when ``comp_duty <= 0``.
-    """
-    t = np.asarray(times, dtype=np.float64).copy()
-    d = min(float(comp_duty), _MAX_COMP_DUTY)
-    if d > 0.0:
-        t[device] = t[device] / (1.0 - d)
-    return t
+    """One device's Eq. 1 share discounted by its non-conv duty — the
+    single-device parameterization of ``effective_times``."""
+    return effective_times(times, comp_duties={device: comp_duty})
 
 
 def link_aware_times(
@@ -86,24 +129,11 @@ def link_aware_times(
     wire_bytes: Sequence[float],
     bandwidths_mbps: Sequence[Optional[float]],
 ) -> np.ndarray:
-    """Eq. 1 extension: add each device's COMM term to its probe time.
-
-    ``times[i]`` is device i's compute time for the whole workload;
-    ``wire_bytes[i]`` the bytes it would move over its link if it took
-    the whole workload (share-proportional traffic only — the fixed
-    broadcast cost does not change the optimal split); ``bandwidths[i]``
-    its measured link in Mbps (None/inf = no link, e.g. the master).
-    Since both terms scale linearly with the share, Eq. 1 over the sums
-    minimizes the predicted wall-clock, not just the compute makespan."""
-    t = np.asarray(times, dtype=np.float64).copy()
-    if not (len(wire_bytes) == len(bandwidths_mbps) == t.size):
-        raise ValueError("times, wire_bytes, bandwidths must align")
-    for i, (b, bw) in enumerate(zip(wire_bytes, bandwidths_mbps)):
-        if bw is not None and np.isfinite(bw):
-            if bw <= 0:
-                raise ValueError("bandwidths must be positive")
-            t[i] += float(b) * 8.0 / (bw * 1e6)
-    return t
+    """Eq. 1 extension: each device's COMM term added to its probe time
+    — the links-only parameterization of ``effective_times``."""
+    return effective_times(
+        times, wire_bytes=wire_bytes, bandwidths_mbps=bandwidths_mbps
+    )
 
 
 def comm_aware_allocate(
@@ -164,7 +194,7 @@ class DeviceProfile:
         """Probe time inflated by the non-conv duty — the Eq. 1 input for
         a device that cannot devote its whole throughput to conv."""
         return float(
-            comp_aware_times([self.conv_time], self.comp_duty, device=0)[0]
+            effective_times([self.conv_time], comp_duties=[self.comp_duty])[0]
         )
 
     def with_comp_duty(self, comp_duty: float) -> "DeviceProfile":
@@ -200,10 +230,17 @@ def profiles_to_shares(
     """Eq. 1 over a probed device set, comp-aware: each profile's
     non-conv duty discounts its share.  With ``wire_bytes`` (the bytes
     device i would move if it took the whole layer) the shares also
-    weigh each profile's measured link — the comm-extended Eq. 1."""
-    times = [p.effective_conv_time for p in profiles]
-    if wire_bytes is not None:
-        times = link_aware_times(
-            times, wire_bytes, [p.bandwidth_mbps for p in profiles]
+    weigh each profile's measured link — the comm-extended Eq. 1.  One
+    ``effective_times`` call applies both adjustments."""
+    return workload_shares(
+        effective_times(
+            [p.conv_time for p in profiles],
+            comp_duties=[p.comp_duty for p in profiles],
+            wire_bytes=wire_bytes,
+            bandwidths_mbps=(
+                [p.bandwidth_mbps for p in profiles]
+                if wire_bytes is not None
+                else None
+            ),
         )
-    return workload_shares(times)
+    )

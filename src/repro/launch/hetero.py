@@ -33,13 +33,29 @@ free and auto sticks to the paper's kernel axis):
     PYTHONPATH=src python -m repro.launch.hetero \
         --slowdowns 1.0,1.5,3.0 --train-pipeline --bandwidth-mbps 50 \
         --partition auto --wire-dtype fp16 --steps 4
+
+``--transport tcp`` runs every slave as a REAL OS process connected over
+localhost sockets (core/cluster/transport.py): comm, serialization and
+slave compute are measured, not emulated, and the probe feeds each
+link's measured bandwidth to the comm-aware partitioner:
+
+    PYTHONPATH=src python -m repro.launch.hetero \
+        --transport tcp --train-pipeline --slowdowns 1.0,1.5 --steps 2
+
+The CLI always leaves through ``os._exit`` after flushing its output:
+an ``xla`` slave (or any backend with native runtime threads) used to
+complete its steps and then hang the interpreter at exit (XLA runtime
+thread vs CPython finalization, the ROADMAP pre-existing bug).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import os
+import sys
 import time
+import traceback
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +86,7 @@ def run_hetero(
     partition: str = "kernel",
     wire_dtype=None,
     bandwidth_mbps=None,
+    transport: str = "inproc",
 ) -> dict:
     if not train_pipeline and backends is not None and backends[0] != "numpy":
         # the callback training loop re-enters jax on the blocked runtime
@@ -86,7 +103,7 @@ def run_hetero(
         slowdowns, backends,
         pipeline=pipeline or train_pipeline, microbatches=microbatches,
         partition=partition, wire_dtype=wire_dtype,
-        bandwidth_mbps=bandwidth_mbps,
+        bandwidth_mbps=bandwidth_mbps, transport=transport,
     )
     try:
         probe = cluster.probe(
@@ -95,8 +112,11 @@ def run_hetero(
         )
         shares = workload_shares(probe)
         print(f"devices: slowdowns={list(cluster.slowdowns)} "
-              f"backends={cluster.backends}")
+              f"backends={cluster.backends} transport={transport}")
         print(f"probe times: {np.round(probe, 4).tolist()}")
+        if transport == "tcp":
+            print(f"measured link bandwidth (Mbps): "
+                  f"{[None if b is None else round(b, 1) for b in cluster.measured_bandwidths]}")
         print(f"Eq.1 shares: {np.round(shares, 3).tolist()} -> "
               f"c2 kernels {cluster.shares_for(c2).tolist()}")
 
@@ -136,6 +156,8 @@ def run_hetero(
                 "trainstep-pipelined" if train_pipeline
                 else "pipelined" if pipeline else "barrier"
             ),
+            "transport": transport,
+            "measured_bandwidth_mbps": list(cluster.measured_bandwidths),
             "microbatches": microbatches if (pipeline or train_pipeline) else 1,
             "partition": partition,
             "partition_choices": {
@@ -165,6 +187,18 @@ def run_hetero(
         cluster.shutdown()
 
 
+def _clean_exit(code: int) -> None:
+    """Flush and leave through ``os._exit``: the ROADMAP pre-existing
+    hang — an ``xla`` slave completes its steps, prints results, then
+    the interpreter never exits (XLA runtime threads vs CPython
+    finalization) — cannot bite a process that skips finalization.
+    Everything user-visible (stdout/stderr, --out JSONL) is already
+    written and flushed by the time this runs, so nothing is lost."""
+    sys.stdout.flush()
+    sys.stderr.flush()
+    os._exit(code)
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--slowdowns", default="1.0,1.5,3.0",
@@ -192,7 +226,14 @@ def main():
                          "master-side accumulation stays float32")
     ap.add_argument("--bandwidth-mbps", type=float, default=None,
                     help="emulated master<->slave link speed (the paper's "
-                         "~5 Mbps Wi-Fi); default: infinitely fast links")
+                         "~5 Mbps Wi-Fi); default: infinitely fast links. "
+                         "With --transport tcp this only overrides the "
+                         "measured planning bandwidth")
+    ap.add_argument("--transport", default="inproc",
+                    choices=["inproc", "tcp"],
+                    help="the wire: in-process queue emulation (threads, "
+                         "seed behaviour) or real localhost TCP sockets "
+                         "with one OS subprocess per slave")
     ap.add_argument("--microbatches", type=int, default=4)
     ap.add_argument("--c1", type=int, default=8)
     ap.add_argument("--c2", type=int, default=16)
@@ -203,17 +244,24 @@ def main():
 
     slowdowns = [float(s) for s in args.slowdowns.split(",")]
     backends = args.backends.split(",") if args.backends else None
-    rec = run_hetero(
-        slowdowns, backends, pipeline=args.pipeline,
-        train_pipeline=args.train_pipeline,
-        microbatches=args.microbatches, c1=args.c1, c2=args.c2,
-        batch=args.batch, steps=args.steps,
-        partition=args.partition, wire_dtype=args.wire_dtype,
-        bandwidth_mbps=args.bandwidth_mbps,
-    )
-    if args.out:
-        with open(args.out, "a") as f:
-            f.write(json.dumps(rec) + "\n")
+    try:
+        rec = run_hetero(
+            slowdowns, backends, pipeline=args.pipeline,
+            train_pipeline=args.train_pipeline,
+            microbatches=args.microbatches, c1=args.c1, c2=args.c2,
+            batch=args.batch, steps=args.steps,
+            partition=args.partition, wire_dtype=args.wire_dtype,
+            bandwidth_mbps=args.bandwidth_mbps, transport=args.transport,
+        )
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    except SystemExit:
+        raise  # config validation: no cluster (and no xla threads) yet
+    except BaseException:
+        traceback.print_exc()
+        _clean_exit(1)
+    _clean_exit(0)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,63 @@
+"""The launch.hetero CLI must EXIT in every configuration.
+
+The ROADMAP pre-existing bug: with an ``xla`` slave the CLI completed
+its steps and printed results but then hung at interpreter exit (XLA
+runtime threads vs CPython finalization).  The CLI now always leaves
+through a flushed ``os._exit`` (``_clean_exit``), so a subprocess run
+with a timeout is the regression test: if the hang comes back, the
+timeout fires.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run_hetero(tmp_path, *args, timeout=600):
+    out = tmp_path / "rec.jsonl"
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.hetero",
+         "--steps", "1", "--batch", "2", "--c1", "4", "--c2", "4",
+         "--out", str(out), *args],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=timeout,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(out.read_text().splitlines()[0])
+    assert len(rec["losses"]) == 1
+    return rec, r.stdout
+
+
+@pytest.mark.slow
+def test_cli_exits_cleanly_with_xla_slave(tmp_path):
+    """The exact ROADMAP hang configuration: callback-driven training
+    with an xla SLAVE.  Completing within the timeout IS the test."""
+    rec, stdout = _run_hetero(
+        tmp_path, "--slowdowns", "1.0,1.0", "--backends", "numpy,xla",
+    )
+    assert rec["backends"] == ["numpy", "xla"]
+    assert "steps in" in stdout
+
+
+@pytest.mark.slow
+def test_cli_exits_cleanly_with_tcp_transport(tmp_path):
+    """The full-lane e2e shape: one real train step over subprocess TCP
+    slaves, train-pipeline schedule."""
+    rec, _ = _run_hetero(
+        tmp_path, "--slowdowns", "1.0,1.5", "--transport", "tcp",
+        "--train-pipeline",
+    )
+    assert rec["transport"] == "tcp"
+    assert all(b and b > 0 for b in rec["measured_bandwidth_mbps"])
+
+
+def test_cli_exits_cleanly_all_numpy_fast(tmp_path):
+    """Fast-lane guard on the exit path itself (no xla slave, tiny)."""
+    rec, _ = _run_hetero(
+        tmp_path, "--slowdowns", "1.0,1.0", "--train-pipeline", timeout=300,
+    )
+    assert rec["protocol"] == "trainstep-pipelined"

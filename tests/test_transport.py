@@ -1,0 +1,305 @@
+"""Transport conformance: the in-proc queue emulation and the real TCP
+wire must be interchangeable behind the same contract.
+
+One suite runs against BOTH transports: payload roundtrip fidelity and
+FIFO order, canonical nbytes accounting (identical numbers on either
+wire, with and without the fp16 codec), slave-error propagation, and —
+TCP only — measured link bandwidth feeding the comm-aware partitioner,
+subprocess slave numerics vs the single-device VJP on every partition
+axis, and orderly subprocess shutdown on cluster close and after a
+master-side protocol exception.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.cluster.codec import resolve_wire_dtype
+from repro.core.cluster.transport import (
+    InProcTransport,
+    TCPListener,
+    TCPSlaveEndpoint,
+    TCPTransport,
+)
+from repro.core.master_slave import HeteroCluster
+
+TRANSPORTS = ("inproc", "tcp")
+
+
+def _make_link(kind: str, wire_dtype=None):
+    """(master_channel, slave_endpoint, close) for either transport; the
+    TCP pair crosses a REAL localhost socket."""
+    dtype = resolve_wire_dtype(wire_dtype)
+    if kind == "inproc":
+        link = InProcTransport(None, dtype)
+        return link, link.slave_endpoint(), link.close
+    listener = TCPListener()
+    slave_box = {}
+
+    def _connect():
+        slave_box["ep"] = TCPSlaveEndpoint(listener.host, listener.port, dtype)
+
+    t = threading.Thread(target=_connect)
+    t.start()
+    chan = TCPTransport(listener.accept(timeout_s=10), dtype)
+    t.join(timeout=10)
+    slave = slave_box["ep"]
+
+    def _close():
+        chan.close()
+        slave.close()
+        listener.close()
+
+    return chan, slave, _close
+
+
+def _payload(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "x": rng.normal(size=(2, 4, 4, 3)).astype(np.float32),
+        "nested": (np.arange(5, dtype=np.float64), [np.ones(3, np.float32)]),
+        "ints": np.arange(4, dtype=np.int32),
+        "flag": "keep-me",
+    }
+
+
+@pytest.mark.parametrize("kind", TRANSPORTS)
+def test_roundtrip_fifo_both_directions(kind):
+    """Messages cross intact (nested containers, dtypes, strings) and in
+    FIFO order, in both directions."""
+    chan, slave, close = _make_link(kind)
+    try:
+        msgs = [_payload(s) for s in range(3)]
+        for m in msgs:
+            chan.write_to_slave(m)
+        for m in msgs:
+            got = slave.recv()
+            assert got["flag"] == "keep-me"
+            np.testing.assert_array_equal(got["x"], m["x"])
+            np.testing.assert_array_equal(got["nested"][0], m["nested"][0])
+            assert got["ints"].dtype == np.int32
+            slave.send(("echo", got["ints"]))
+        for m in msgs:
+            tag, ints = chan.read_on_master()
+            assert tag == "echo"
+            np.testing.assert_array_equal(ints, m["ints"])
+    finally:
+        close()
+
+
+@pytest.mark.parametrize("wire_dtype", [None, "fp16", "bf16"])
+def test_nbytes_accounting_identical_across_transports(wire_dtype):
+    """The canonical byte counters report the SAME number on the queue
+    emulation and on the real TCP wire — comm_bytes is transport-
+    independent — and the 2-byte codec halves the float payload."""
+    counted = {}
+    for kind in TRANSPORTS:
+        chan, slave, close = _make_link(kind, wire_dtype)
+        try:
+            chan.write_to_slave(_payload())
+            slave.recv()
+            counted[kind] = chan.bytes_to_slave
+        finally:
+            close()
+    assert counted["inproc"] == counted["tcp"]
+    item = 2 if wire_dtype else 4
+    want = (
+        (2 * 4 * 4 * 3) * item      # x, float32 -> codec dtype
+        + 5 * (2 if wire_dtype else 8)  # float64 arange
+        + 3 * item                  # ones
+        + 4 * 4                     # int32: never encoded
+        + 8                         # the string flag
+    )
+    assert counted["inproc"] == want
+
+
+@pytest.mark.parametrize("kind", TRANSPORTS)
+def test_codec_decodes_to_float32_on_read(kind):
+    chan, slave, close = _make_link(kind, "fp16")
+    try:
+        chan.write_to_slave(np.arange(8, dtype=np.float32))
+        got = slave.recv()
+        assert got.dtype == np.float32
+        np.testing.assert_array_equal(got, np.arange(8, dtype=np.float32))
+        slave.send(got)
+        back = chan.read_on_master()
+        assert back.dtype == np.float32
+    finally:
+        close()
+
+
+def test_tcp_frame_bytes_track_real_wire():
+    """TCP additionally accounts what ACTUALLY crossed the socket —
+    framing + pickle overhead on top of the canonical payload bytes."""
+    chan, slave, close = _make_link("tcp")
+    try:
+        chan.write_to_slave(_payload())
+        slave.recv()
+        assert chan.frame_bytes_to_slave > chan.bytes_to_slave > 0
+    finally:
+        close()
+
+
+# ---------------------------------------------------------------------------
+# cluster-level conformance: the same protocol over either wire
+# ---------------------------------------------------------------------------
+
+
+def _ref_conv(x, w):
+    import jax
+
+    return np.asarray(jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    ))
+
+
+@pytest.mark.parametrize("kind", TRANSPORTS)
+def test_cluster_forward_matches_reference(kind):
+    x = np.random.default_rng(0).normal(size=(2, 8, 8, 3)).astype(np.float32)
+    w = np.random.default_rng(1).normal(size=(3, 3, 3, 9)).astype(np.float32)
+    c = HeteroCluster([1.0, 1.0], transport=kind)
+    try:
+        c.probe_times = [1.0, 1.0]
+        np.testing.assert_allclose(c.conv_forward(x, w), _ref_conv(x, w), atol=1e-4)
+    finally:
+        c.shutdown()
+
+
+@pytest.mark.parametrize("kind", TRANSPORTS)
+def test_slave_error_propagates_not_hangs(kind):
+    """A slave-side exception ships back as a SlaveError and re-raises
+    on the master instead of hanging the gather — on either wire.
+    (w=None with no cached shard is a guaranteed slave-side KeyError.)"""
+    c = HeteroCluster([1.0, 1.0], transport=kind)
+    try:
+        x = np.zeros((1, 4, 4, 2), np.float32)
+        c.sockets[0].write_to_slave(("conv", (x, None)))
+        out = c.sockets[0].read_on_master()
+        with pytest.raises(RuntimeError, match="slave device 1 failed"):
+            c._check_result(out)
+        # the link survives the error: the next op still works
+        w = np.ones((1, 1, 2, 3), np.float32)
+        c.sockets[0].write_to_slave(("conv", (x, w)))
+        assert c._check_result(c.sockets[0].read_on_master()).shape == (1, 4, 4, 3)
+    finally:
+        c.shutdown()
+
+
+def test_tcp_probe_measures_link_bandwidth():
+    """probe() on the tcp transport fills the planning bandwidths from a
+    real echo round-trip — the measured link replaces the knob."""
+    c = HeteroCluster([1.0, 1.0], transport="tcp")
+    try:
+        c.probe(image_size=8, in_channels=3, kernel_size=3, num_kernels=4,
+                batch=2, repeats=1)
+        assert all(b is not None and b > 0 for b in c.measured_bandwidths)
+        assert c.bandwidths == c.measured_bandwidths
+        # the echo probes are not protocol traffic: neither counter family
+        # may retain their megabytes
+        assert all(s.total_bytes < 1 << 20 for s in c.sockets)
+        assert all(
+            s.frame_bytes_to_slave + s.frame_bytes_to_master < 1 << 20
+            for s in c.sockets
+        )
+        # RE-probing refreshes the measurement instead of mistaking the
+        # first one for a user override
+        c.probe(image_size=8, in_channels=3, kernel_size=3, num_kernels=4,
+                batch=2, repeats=1)
+        assert c.bandwidths == c.measured_bandwidths
+        # the comm-aware Eq. 1 consumes it without blowing up
+        counts = c.shares_for(16, unit_bytes=1024.0, layer_flops=1e6)
+        assert counts.sum() == 16
+    finally:
+        c.shutdown()
+
+
+def test_tcp_explicit_bandwidth_overrides_measurement():
+    c = HeteroCluster([1.0, 1.0], transport="tcp", bandwidth_mbps=25.0)
+    try:
+        c.probe(image_size=8, in_channels=3, kernel_size=3, num_kernels=4,
+                batch=2, repeats=1)
+        assert c.bandwidths == [25.0]
+    finally:
+        c.shutdown()
+
+
+@pytest.mark.parametrize("partition", ["kernel", "spatial", "auto"])
+def test_tcp_train_chain_matches_single_device_vjp(partition):
+    """The acceptance bar: the pipelined fwd+bwd train chain over REAL
+    subprocess slaves == jax.grad on one device, on every axis."""
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(5, 8, 8, 3)).astype(np.float32)
+    w1 = rng.normal(size=(3, 3, 3, 6)).astype(np.float32)
+    w2 = rng.normal(size=(3, 3, 6, 9)).astype(np.float32)
+    g = rng.normal(size=(5, 8, 8, 9)).astype(np.float32)
+
+    def f(x_, w1_, w2_):
+        y = jax.nn.relu(jax.lax.conv_general_dilated(
+            x_, w1_, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ))
+        y2 = jax.lax.conv_general_dilated(
+            y, w2_, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        return jnp.sum(y2 * g)
+
+    dx_want, dw1_want, dw2_want = (
+        np.asarray(a)
+        for a in jax.grad(f, argnums=(0, 1, 2))(
+            jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2)
+        )
+    )
+
+    c = HeteroCluster(
+        [1.0, 1.0, 1.0], transport="tcp", partition=partition,
+        pipeline=True, microbatches=3,
+        # finite links exercise auto's comm-extended prediction; tcp
+        # never delays anything, this only feeds the planner
+        bandwidth_mbps=50.0,
+    )
+    try:
+        c.probe_times = [1.0, 1.0, 1.0]
+
+        def between(y):
+            mask = (y > 0).astype(np.float32)
+            return np.maximum(y, 0.0), lambda gz: gz * mask
+
+        slices = c.microbatch_slices(x.shape[0])
+
+        def head(z, i):
+            return None, g[slices[i]]
+
+        res = c.conv_train_chain(x, [w1, w2], [between, None], head)
+        np.testing.assert_allclose(res.dx, dx_want, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(res.dw[0], dw1_want, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(res.dw[1], dw2_want, rtol=1e-4, atol=1e-3)
+    finally:
+        c.shutdown()
+
+
+def test_tcp_orderly_shutdown_reaps_subprocesses():
+    c = HeteroCluster([1.0, 1.0, 1.0], transport="tcp")
+    c.probe_times = [1.0, 1.0, 1.0]
+    x = np.zeros((2, 6, 6, 2), np.float32)
+    w = np.ones((3, 3, 2, 4), np.float32)
+    c.conv_forward(x, w)
+    c.shutdown()
+    assert [p.returncode for p in c.procs] == [0, 0]
+    c.shutdown()  # idempotent
+
+
+def test_tcp_shutdown_after_master_exception_reaps_subprocesses():
+    """A protocol error on the master must not leak slave processes:
+    shutdown() after the exception still ends them cleanly."""
+    c = HeteroCluster([1.0, 1.0], transport="tcp")
+    try:
+        x = np.zeros((1, 4, 4, 2), np.float32)
+        c.sockets[0].write_to_slave(("conv", (x, None)))  # slave KeyError
+        with pytest.raises(RuntimeError, match="failed"):
+            c._check_result(c.sockets[0].read_on_master())
+    finally:
+        c.shutdown()
+    assert [p.returncode for p in c.procs] == [0]
