@@ -43,7 +43,7 @@ from repro.core.master_slave import HeteroCluster
 SLOWDOWNS = [1.0, 1.5, 3.0]  # master + 1.5x slave + 3x-slow slave
 
 # The deterministic rows the CI bench-smoke lane extracts into
-# BENCH_PR4.json (benchmarks/run.py --trajectory): exact byte counts and
+# BENCH_PR*.json (benchmarks/run.py --trajectory): exact byte counts and
 # sim-backend ratios, comparable across commits.
 TRAJECTORY_ROWS = (
     "comm_bytes_kernel_vs_spatial",
@@ -51,6 +51,19 @@ TRAJECTORY_ROWS = (
     "auto_partition_trainstep_gain",
     "trainstep_pipeline_gain",
     "tcp_vs_inproc_overhead",
+    "repartition_overhead",
+)
+
+# The higher-is-better subset the CI bench-regression gate
+# (benchmarks/run.py --check-against) guards: a fresh run may not fall
+# more than the gate's tolerance below the committed baseline on ANY of
+# these.  Overhead rows (tcp_vs_inproc, repartition) trend the other way
+# and are tracked, not gated.
+GAIN_ROWS = (
+    "comm_bytes_kernel_vs_spatial",
+    "codec_gain",
+    "auto_partition_trainstep_gain",
+    "trainstep_pipeline_gain",
 )
 
 
@@ -356,6 +369,32 @@ def run(smoke: bool = False):
         ("tcp_vs_inproc_overhead", ratio,
          f"tcp/inproc={ratio:.2f}x wall-clock on the same sim cluster "
          f"(~1 means the real wire adds little; ratio, not us)")
+    )
+
+    # -- 7. elasticity: one evict + admit + re-plan cycle ----------------
+    # The control plane of the elastic runtime: retire a live slave,
+    # admit a replacement (pinned probe time — no real probe runs), and
+    # rebuild a train-step plan via the comm-aware Eq. 1 over the new
+    # membership.  What a failure or a join costs BETWEEN steps, on top
+    # of the recompute the step itself absorbs.
+    cluster = HeteroCluster(SLOWDOWNS, ["sim"] * len(SLOWDOWNS))
+    try:
+        cluster.probe_times = list(SLOWDOWNS)
+        cluster.plan_conv(xw.shape, ww, "train")  # warm the planner
+        cycles = 3
+        t0 = time.perf_counter()
+        for _ in range(cycles):
+            sd = cluster.slowdowns[-1]
+            cluster.evict(cluster.slave_ids[-1])
+            cluster.admit(slowdown=sd, backend="sim", probe_time=sd)
+            cluster.plan_conv(xw.shape, ww, "train")
+        dt = (time.perf_counter() - t0) / cycles
+    finally:
+        cluster.shutdown()
+    rows.append(
+        ("repartition_overhead", dt * 1e6,
+         f"evict+admit+replan cycle on the inproc sim cluster, mean of "
+         f"{cycles} (lower is better; us)")
     )
 
     # -- 4. real compute backends on this host (noisy, informational) ----

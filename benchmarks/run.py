@@ -11,9 +11,18 @@ tiny-shape pass — the CI benchmark-smoke lane.  ``--json`` additionally
 writes the rows as a JSON artifact (the ``BENCH_*.json`` perf
 trajectory).  ``--trajectory OUT`` extracts just the DETERMINISTIC
 trajectory rows (bench_master_slave.TRAJECTORY_ROWS: wire-byte ratios,
-sim-backend gains and the tcp-transport overhead, comparable across
-commits) — the CI bench-smoke lane writes them to ``BENCH_PR4.json`` at
-the repo root.
+sim-backend gains, the tcp-transport and re-partition overheads,
+comparable across commits) — the CI bench-smoke lane writes them to a
+``BENCH_PR*.json`` at the repo root.
+
+``--check-against BASELINE`` is the bench-regression GATE: fresh rows
+are compared to a committed ``BENCH_PR*.json`` and the run exits
+non-zero if any higher-is-better gain row (bench_master_slave.GAIN_ROWS)
+fell more than ``--regression-tolerance`` (default 20%) below its
+baseline value — the CI bench-smoke lane fails instead of silently
+shipping a perf regression.  Rows present only in one side are
+reported but never gated (a new row has no baseline yet); comparing
+ZERO rows is itself an error, so the gate cannot rot into a no-op.
 """
 from __future__ import annotations
 
@@ -61,7 +70,16 @@ def main() -> None:
     ap.add_argument("--trajectory", default=None, metavar="OUT",
                     help="also write the deterministic trajectory rows "
                          "(TRAJECTORY_ROWS) as a JSON artifact, e.g. "
-                         "BENCH_PR4.json")
+                         "BENCH_PR5.json")
+    ap.add_argument("--check-against", default=None, metavar="BASELINE",
+                    help="bench-regression gate: compare fresh gain rows "
+                         "(GAIN_ROWS) to this committed BENCH_PR*.json "
+                         "and exit non-zero on any regression beyond "
+                         "--regression-tolerance")
+    ap.add_argument("--regression-tolerance", type=float, default=0.20,
+                    help="allowed fractional drop of a gain row below "
+                         "its baseline before the gate fails "
+                         "(default 0.20 = 20%%)")
     args = ap.parse_args()
     if args.only:
         names = args.only.split(",")
@@ -107,8 +125,58 @@ def main() -> None:
               file=sys.stderr)
         if missing:
             failed += 1
+    if args.check_against:
+        failed += check_against(
+            records, args.check_against, args.regression_tolerance
+        )
     if failed:
         raise SystemExit(1)
+
+
+def check_against(records, baseline_path: str, tolerance: float) -> int:
+    """The bench-regression gate: every gain row present in BOTH the
+    fresh records and the committed baseline must satisfy
+    ``fresh >= baseline * (1 - tolerance)``.  Returns the number of
+    failures (regressions, or an empty comparison — a gate that
+    compares nothing must not pass green)."""
+    from benchmarks.bench_master_slave import GAIN_ROWS
+
+    with open(baseline_path) as f:
+        base_rows = {
+            r["name"]: float(r["us_per_call"])
+            for r in json.load(f)["rows"]
+        }
+    fresh_rows = {r["name"]: float(r["us_per_call"]) for r in records}
+    compared = 0
+    regressions = []
+    for name in GAIN_ROWS:
+        if name not in base_rows:
+            print(f"# gate: {name} has no baseline yet (new row); skipped",
+                  file=sys.stderr)
+            continue
+        if name not in fresh_rows:
+            print(f"# gate: {name} missing from this run; skipped",
+                  file=sys.stderr)
+            continue
+        compared += 1
+        base, fresh = base_rows[name], fresh_rows[name]
+        floor = base * (1.0 - tolerance)
+        verdict = "REGRESSED" if fresh < floor else "ok"
+        print(f"# gate: {name}: fresh={fresh:.3f} baseline={base:.3f} "
+              f"floor={floor:.3f} -> {verdict}", file=sys.stderr)
+        if fresh < floor:
+            regressions.append(name)
+    if compared == 0:
+        print(f"# gate: compared ZERO gain rows against {baseline_path} — "
+              f"refusing to pass an empty comparison", file=sys.stderr)
+        return 1
+    if regressions:
+        print(f"# gate: FAILED — gain rows regressed >{tolerance:.0%} vs "
+              f"{baseline_path}: {regressions}", file=sys.stderr)
+        return 1
+    print(f"# gate: {compared} gain rows within {tolerance:.0%} of "
+          f"{baseline_path}", file=sys.stderr)
+    return 0
 
 
 if __name__ == "__main__":

@@ -32,6 +32,9 @@ _EXPORTS = {
     "TCPSlaveEndpoint": ".transport",
     "TCPListener": ".transport",
     "TRANSPORT_KINDS": ".transport",
+    "SlaveLost": ".transport",
+    "HEARTBEAT": ".transport",
+    "is_heartbeat": ".transport",
     "resolve_wire_dtype": ".codec",
     "wire_nbytes": ".codec",
     "TRAIN_OVER": ".protocol",
@@ -40,6 +43,7 @@ _EXPORTS = {
     "PARTITION_MODES": ".plans",
     "LayerPlan": ".plans",
     "strip_plan": ".plans",
+    "check_plan": ".plans",
     "LayerTiming": ".scheduler",
     "TrainStepResult": ".scheduler",
     "Pending": ".scheduler",

@@ -29,6 +29,28 @@ Heterogeneity is emulated with per-slave *slowdown factors*: after
 computing, a slave sleeps (slowdown-1) x the measured compute time,
 appearing exactly like a proportionally slower machine to both the
 probe and the training loop — in a thread or a subprocess alike.
+
+The cluster is ELASTIC: membership may change while it runs.
+
+* ``expected_slaves=N`` (tcp) skips spawning and waits for N slaves
+  launched by hand — on this host or any remote one — via
+  ``python -m repro.core.cluster.protocol --host H --port P``; the
+  hello handshake brings each joiner's backend/slowdown and the master
+  assigns its device slot.  ``listen_host="0.0.0.0"`` opens the
+  listener to remote hosts (the REPRO_CLUSTER_AUTH secret must be set
+  in BOTH environments — the wire is pickle).
+* ``admit()`` grows a running cluster by one slave (a spawned local
+  one, or ``spawn=False`` to wait for an external join); ``evict()``
+  retires one gracefully.  Either way the next plan re-runs the
+  comm-aware Eq. 1 over the new membership.
+* ``heartbeat_s`` arms liveness: slaves beat small frames from a side
+  thread and the master's reads enforce a deadline, so a crashed OR
+  wedged slave raises ``SlaveLost`` within the timeout instead of
+  hanging the scheduler.  A lost slave is auto-evicted, every
+  in-flight op's missing shard is recomputed BY THE MASTER from the
+  plan the op rode (``Pending.plan``/``parts``), and the step drains
+  on the survivors with correct numerics — then the next step's plans
+  re-partition.  ``failures`` records each loss.
 """
 from __future__ import annotations
 
@@ -37,6 +59,7 @@ import os
 import secrets
 import subprocess
 import sys
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -52,8 +75,10 @@ from repro.core.cluster import codec, plans, protocol, scheduler
 from repro.core.cluster.transport import (
     TRANSPORT_KINDS,
     InProcTransport,
+    SlaveLost,
     TCPListener,
     TCPTransport,
+    Transport,
     _recv_exact,
 )
 from repro.core.partitioner import allocate_kernels, effective_times
@@ -107,6 +132,18 @@ class HeteroCluster:
     (per layer, the axis with the smaller predicted wall-clock over the
     measured links).  ``wire_dtype`` ("fp16"/"bf16") turns on the
     compact wire codec on either transport.
+
+    Elastic / fault-tolerance knobs (see the module docstring):
+    ``expected_slaves`` waits for hand-launched tcp joiners instead of
+    spawning; ``listen_host``/``listen_port`` place the tcp listener
+    (remote slaves need a routable host and usually a fixed port);
+    ``heartbeat_s`` makes spawned slaves beat liveness frames every
+    that many seconds and arms the master's read deadline
+    (``heartbeat_timeout_s``, default 3x the interval) — tcp only, the
+    in-proc queue wire cannot lose a slave silently.  ``admit()`` /
+    ``evict()`` change membership at runtime; a slave that dies is
+    detected within the deadline, auto-evicted and its in-flight work
+    recomputed by the master, and ``failures`` records the event.
     """
 
     def __init__(
@@ -121,6 +158,12 @@ class HeteroCluster:
         partition: str = "kernel",
         wire_dtype: Optional[str] = None,
         transport: str = "inproc",
+        expected_slaves: Optional[int] = None,
+        listen_host: str = "127.0.0.1",
+        listen_port: int = 0,
+        heartbeat_s: Optional[float] = None,
+        heartbeat_timeout_s: Optional[float] = None,
+        join_timeout_s: float = 300.0,
     ):
         assert len(slowdowns) >= 1
         if any(sd < 1.0 for sd in slowdowns):
@@ -136,14 +179,29 @@ class HeteroCluster:
                 f"FASTER virtual device use a parameterized sim backend, "
                 f"e.g. backends=['sim:5e9', ...]"
             )
+        if expected_slaves is not None:
+            if transport != "tcp":
+                raise ValueError(
+                    "expected_slaves waits for external TCP joins; it "
+                    "needs transport='tcp'"
+                )
+            if expected_slaves < 1:
+                raise ValueError("expected_slaves must be >= 1")
+            if len(slowdowns) != 1 or (backends is not None and len(backends) != 1):
+                raise ValueError(
+                    "with expected_slaves, pass ONLY the master's "
+                    "slowdown/backend — joining slaves bring their own "
+                    "in the hello handshake"
+                )
         self.slowdowns = list(slowdowns)
-        self.n_slaves = len(slowdowns) - 1
         if backends is None:
             backends = ["numpy"] * len(self.slowdowns)
         assert len(backends) == len(self.slowdowns), "one backend per device"
         self.backends = list(backends)
-        # resolve every name NOW: an unknown backend must raise here, not
-        # kill a slave later and leave the master blocked forever
+        # resolve every LOCAL name NOW: an unknown backend must raise
+        # here, not kill a slave later and leave the master blocked
+        # forever.  (External joiners' backends run on THEIR host and
+        # are recorded as-is.)
         for name in self.backends:
             get_backend(name)
         self._master_backend = get_backend(self.backends[0])
@@ -166,44 +224,51 @@ class HeteroCluster:
                 f"transport must be one of {TRANSPORT_KINDS}, got {transport!r}"
             )
         self.transport = transport
+        n_cfg = (
+            expected_slaves if expected_slaves is not None
+            else len(self.slowdowns) - 1
+        )
         if bandwidth_mbps is None or isinstance(bandwidth_mbps, (int, float)):
-            self.bandwidths: List[Optional[float]] = (
-                [bandwidth_mbps] * self.n_slaves
-            )
+            self.bandwidths: List[Optional[float]] = [bandwidth_mbps] * n_cfg
         else:
             self.bandwidths = list(bandwidth_mbps)
-            assert len(self.bandwidths) == self.n_slaves, "one bandwidth per slave"
+            assert len(self.bandwidths) == n_cfg, "one bandwidth per slave"
         # what the USER pinned, frozen: re-probing on tcp must overwrite
         # stale measurements, never a deliberate override (and never
         # mistake an old measurement for one)
         self._bandwidth_overrides = list(self.bandwidths)
-        self.threads: list = []
-        self.procs: List[subprocess.Popen] = []
-        self._listener: Optional[TCPListener] = None
-        if transport == "tcp":
-            self.sockets = self._spawn_tcp_slaves()
-        else:
-            self.sockets = [
-                InProcTransport(bw, self._wire_np_dtype) for bw in self.bandwidths
-            ]
-            import threading
-
-            self.threads = [
-                threading.Thread(
-                    target=protocol.slave_loop,
-                    args=(s.slave_endpoint(), sd, bk, i),
-                    daemon=True,
-                )
-                for i, (s, sd, bk) in enumerate(
-                    zip(self.sockets, self.slowdowns[1:], self.backends[1:]),
-                    start=1,
-                )
-            ]
-            for t in self.threads:
-                t.start()
+        if heartbeat_s is not None and heartbeat_s <= 0:
+            raise ValueError("heartbeat_s must be positive (or None)")
+        self.heartbeat_s = heartbeat_s
+        self.heartbeat_timeout_s = (
+            heartbeat_timeout_s
+            if heartbeat_timeout_s is not None
+            else (3.0 * heartbeat_s if heartbeat_s is not None else None)
+        )
+        self.expected_slaves = expected_slaves
+        self.listen_host = listen_host
+        self.listen_port = listen_port
+        # -- elastic membership: aligned per-slave slots -------------------
+        # slot i <-> sockets[i], procs[i], threads[i], slave_ids[i],
+        # slowdowns[i+1], backends[i+1], bandwidths[i], measured[i].
+        # slave_ids are STABLE (never reused): live plans reference the
+        # membership they were built for through them (LayerPlan.member_ids
+        # -> _registry), so a plan outlives any eviction.
+        self.n_slaves = 0
+        self.slave_ids: List[int] = []
+        self._next_slave_id = 1
+        self._registry: Dict[int, Transport] = {}  # every slave EVER, dead too
+        self.sockets: List[Transport] = []
+        self.procs: List[Optional[subprocess.Popen]] = []
+        self.threads: List[Optional[threading.Thread]] = []
+        self.reaped: List[subprocess.Popen] = []  # evicted/killed, waited on
+        self.failures: List[dict] = []  # {"device", "t_detected", "error"}
         self.probe_times: Optional[List[float]] = None
         self.probe_flops: Optional[float] = None  # flops of the probe workload
-        self.measured_bandwidths: List[Optional[float]] = [None] * self.n_slaves
+        self._probe_kwargs: Optional[dict] = None  # last probe() workload
+        self.measured_bandwidths: List[Optional[float]] = [None] * n_cfg
+        self._listener: Optional[TCPListener] = None
+        self._token: Optional[bytes] = None
         self.timing = scheduler.LayerTiming()
         self.comp_aware = bool(comp_aware)
         self.comp_duty = 0.0  # measured master non-conv duty (see shares_for)
@@ -211,76 +276,439 @@ class HeteroCluster:
         self._seq_issued = 0
         self._seq_gathered = 0
         self._shut = False
+        if transport == "tcp":
+            self._listener = TCPListener(listen_host, listen_port)
+            if expected_slaves is None:
+                self._token = secrets.token_bytes(self._AUTH_BYTES)
+                self._spawn_tcp_slaves()
+            else:
+                # the join secret comes from the operator's environment —
+                # hand-launched (possibly remote) slaves must present the
+                # same one, and there is no side channel to hand a
+                # generated secret to another terminal/host
+                env_tok = os.environ.get("REPRO_CLUSTER_AUTH")
+                if not env_tok:
+                    self._listener.close()
+                    raise RuntimeError(
+                        "expected_slaves mode needs the REPRO_CLUSTER_AUTH "
+                        "env var set (hex token) in BOTH the master's and "
+                        "every slave's environment: the wire is pickle, "
+                        "and an unauthenticated listener would hand any "
+                        "process that can reach it code execution here.  "
+                        "Generate one with: python -c 'import secrets; "
+                        "print(secrets.token_hex(32))'"
+                    )
+                self._token = bytes.fromhex(env_tok)
+                if len(self._token) != self._AUTH_BYTES:
+                    self._listener.close()
+                    raise RuntimeError(
+                        f"REPRO_CLUSTER_AUTH must be {self._AUTH_BYTES} "
+                        f"bytes ({2 * self._AUTH_BYTES} hex chars), got "
+                        f"{len(self._token)} bytes"
+                    )
+                try:
+                    self._await_tcp_joins(expected_slaves, join_timeout_s)
+                except Exception:
+                    # failed startup must not leak the listener or the
+                    # links of slaves that DID join (EOF tells them to
+                    # exit; their operators own the processes)
+                    for s in self.sockets:
+                        s.close()
+                    self._listener.close()
+                    raise
+        else:
+            for sd, bk, bw in zip(
+                self.slowdowns[1:], self.backends[1:], self.bandwidths
+            ):
+                self._start_inproc_slave(sd, bk, bw)
 
-    # -- tcp slave process management -------------------------------------
+    # -- membership plumbing: slots, spawn, accept, join -------------------
     _AUTH_BYTES = 32
 
-    def _spawn_tcp_slaves(self) -> List[TCPTransport]:
-        """Spawn one OS process per slave, accept their connections on a
-        localhost listener, and hand back the per-device channels in
-        device order (accept order is whoever wins the connect race; the
-        ("hello", device) handshake re-sorts).
+    def _add_slot(
+        self,
+        dev: int,
+        sock: Transport,
+        proc: Optional[subprocess.Popen],
+        thread: Optional[threading.Thread],
+    ) -> None:
+        """Append one live slave slot; every aligned list grows by one."""
+        self.slave_ids.append(dev)
+        self._registry[dev] = sock
+        self.sockets.append(sock)
+        self.procs.append(proc)
+        self.threads.append(thread)
+        self.n_slaves = len(self.sockets)
 
-        Connections are AUTHENTICATED before anything is unpickled: each
-        slave receives a fresh per-cluster random token via its
-        environment (REPRO_CLUSTER_AUTH — env, not argv, so it never
-        shows in ps) and must present it as its first raw bytes.  The
-        wire is pickle, so an unauthenticated listener would hand any
-        local process arbitrary code execution in the master."""
-        self._listener = TCPListener()
-        token = secrets.token_bytes(self._AUTH_BYTES)
+    def _start_inproc_slave(
+        self, slowdown: float, backend: str, bandwidth: Optional[float]
+    ) -> int:
+        link = InProcTransport(bandwidth, self._wire_np_dtype)
+        dev = self._next_slave_id
+        self._next_slave_id += 1
+        t = threading.Thread(
+            target=protocol.slave_loop,
+            args=(link.slave_endpoint(), slowdown, backend, dev),
+            daemon=True,
+        )
+        t.start()
+        self._add_slot(dev, link, None, t)
+        return dev
+
+    def _slave_env(self) -> dict:
+        """Environment for a spawned slave process: the src/ import root
+        and the per-cluster auth secret (env, not argv — argv shows in
+        ps)."""
         env = os.environ.copy()
         src = _src_pythonpath()
         env["PYTHONPATH"] = src + (
             os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
         )
-        env["REPRO_CLUSTER_AUTH"] = token.hex()
-        for i, (sd, bk) in enumerate(
-            zip(self.slowdowns[1:], self.backends[1:]), start=1
-        ):
-            cmd = [
-                sys.executable, "-m", "repro.core.cluster.protocol",
-                "--host", self._listener.host,
-                "--port", str(self._listener.port),
-                "--device", str(i),
-                "--slowdown", str(sd),
-                "--backend", bk,
-            ]
-            if self.wire_dtype is not None:
-                cmd += ["--wire-dtype", self.wire_dtype]
-            self.procs.append(subprocess.Popen(cmd, env=env))
+        env["REPRO_CLUSTER_AUTH"] = self._token.hex()
+        return env
+
+    def _spawn_slave_proc(
+        self, dev: int, slowdown: float, backend: str, env: dict
+    ) -> subprocess.Popen:
+        # a listener bound to the wildcard interface is not a connect
+        # target; local spawns dial loopback
+        host = (
+            "127.0.0.1" if self._listener.host == "0.0.0.0"
+            else self._listener.host
+        )
+        cmd = [
+            sys.executable, "-m", "repro.core.cluster.protocol",
+            "--host", host,
+            "--port", str(self._listener.port),
+            "--device", str(dev),
+            "--slowdown", str(slowdown),
+            "--backend", backend,
+        ]
+        if self.wire_dtype is not None:
+            cmd += ["--wire-dtype", self.wire_dtype]
+        if self.heartbeat_s is not None:
+            cmd += ["--heartbeat-s", str(self.heartbeat_s)]
+        return subprocess.Popen(cmd, env=env)
+
+    def _accept_slave(self, timeout_s: float) -> Tuple[TCPTransport, int, dict]:
+        """Accept + authenticate + handshake ONE joining slave, skipping
+        over junk connections.
+
+        Connections are AUTHENTICATED before anything is unpickled: the
+        joiner must present the per-cluster token as its first raw
+        bytes.  The wire is pickle, so an unauthenticated listener
+        would hand any process that can reach it arbitrary code
+        execution in the master.  A connection that fails the handshake
+        — no/wrong token, EOF, silence, garbled hello — is closed and
+        REJECTED, and the accept loop keeps waiting for a real slave
+        until ``timeout_s`` runs out: on an exposed listener a port
+        scanner or health check must never abort cluster startup.  The
+        hello frame carries the requested device slot (-1 = assign one)
+        and the joiner's backend/slowdown metadata; the master replies
+        ("welcome", dev) — it owns device numbering, and ids are never
+        reused so live plans can keep naming dead members."""
+        deadline = time.monotonic() + timeout_s
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"no valid slave joined within {timeout_s:.0f}s"
+                )
+            conn = self._listener.accept(timeout_s=remaining)
+            conn.settimeout(10.0)  # a silent stranger must not hang us
+            chan: Optional[TCPTransport] = None
+            try:
+                presented = _recv_exact(conn, self._AUTH_BYTES)
+                if not hmac.compare_digest(presented, self._token):
+                    raise RuntimeError(
+                        "connection did not present the cluster auth "
+                        "token (stray process, or REPRO_CLUSTER_AUTH "
+                        "mismatch?)"
+                    )
+                # the 10s timeout stays armed through the hello so a
+                # peer that authenticates then stalls cannot hang us
+                chan = TCPTransport(
+                    conn, self._wire_np_dtype,
+                    heartbeat_timeout_s=self.heartbeat_timeout_s,
+                )
+                requested, meta = protocol.parse_hello(chan.read_on_master())
+            except (OSError, EOFError, RuntimeError) as e:
+                if chan is not None:
+                    chan.close()
+                else:
+                    conn.close()
+                print(
+                    f"[hetero] rejected a connection on the cluster "
+                    f"listener: {e}",
+                    file=sys.stderr, flush=True,
+                )
+                continue
+            conn.settimeout(None)  # ops block indefinitely from here on
+            if requested >= 1 and requested not in self._registry:
+                dev = requested
+                self._next_slave_id = max(self._next_slave_id, dev + 1)
+            else:
+                dev = self._next_slave_id
+                self._next_slave_id += 1
+            chan.write_to_slave(("welcome", dev))
+            return chan, dev, meta
+
+    def _spawn_tcp_slaves(self) -> None:
+        """Spawn one OS process per configured slave, accept their
+        connections back, and register the channels in device order
+        (accept order is whoever wins the connect race; the hello
+        handshake re-sorts)."""
+        env = self._slave_env()
+        pending: Dict[int, subprocess.Popen] = {}
+        for sd, bk in zip(self.slowdowns[1:], self.backends[1:]):
+            dev = self._next_slave_id
+            self._next_slave_id += 1
+            pending[dev] = self._spawn_slave_proc(dev, sd, bk, env)
         by_device: Dict[int, TCPTransport] = {}
         try:
-            for _ in range(self.n_slaves):
-                conn = self._listener.accept(timeout_s=60.0)
-                conn.settimeout(10.0)  # a silent stranger must not hang us
-                presented = _recv_exact(conn, self._AUTH_BYTES)
-                if not hmac.compare_digest(presented, token):
-                    conn.close()
-                    raise RuntimeError(
-                        "TCP slave handshake failed: connection did not "
-                        "present the cluster auth token (stray local "
-                        "process on the listener port?)"
-                    )
-                conn.settimeout(None)
-                chan = TCPTransport(conn, self._wire_np_dtype)
-                hello = chan.read_on_master()
+            for _ in range(len(pending)):
+                chan, dev, _meta = self._accept_slave(timeout_s=60.0)
                 # RuntimeError, not assert: -O must not let a malformed
                 # handshake mispair device channels
-                if (
-                    not isinstance(hello, tuple) or len(hello) != 2
-                    or hello[0] != "hello"
-                ):
-                    raise RuntimeError(f"bad slave handshake frame {hello!r}")
-                by_device[hello[1]] = chan
+                if dev not in pending or dev in by_device:
+                    raise RuntimeError(
+                        f"unexpected device id {dev} in spawn handshake "
+                        f"(expected one of {sorted(pending)})"
+                    )
+                by_device[dev] = chan
         except Exception:
-            for p in self.procs:
+            for p in pending.values():
                 p.kill()
             self._listener.close()
             raise
-        for chan in by_device.values():
-            chan.reset_counters()  # the handshake is not protocol traffic
-        return [by_device[i] for i in range(1, self.n_slaves + 1)]
+        for dev in sorted(by_device):
+            by_device[dev].reset_counters()  # handshake isn't protocol traffic
+            self._add_slot(dev, by_device[dev], pending[dev], None)
+
+    def _await_tcp_joins(self, n: int, timeout_s: float) -> None:
+        """Wait for ``n`` hand-launched slaves to join the listener —
+        the remote-host path.  Each joiner's backend/slowdown come from
+        its hello metadata; the wait is announced on stderr so the
+        operator knows where to point the slaves."""
+        print(
+            f"[hetero] waiting for {n} slave(s) on "
+            f"{self._listener.host}:{self._listener.port} "
+            f"(auth: REPRO_CLUSTER_AUTH)",
+            file=sys.stderr, flush=True,
+        )
+        deadline = time.monotonic() + timeout_s
+        for _ in range(n):
+            chan, dev, meta = self._accept_slave(
+                timeout_s=max(1.0, deadline - time.monotonic())
+            )
+            self.slowdowns.append(float(meta.get("slowdown", 1.0)))
+            self.backends.append(str(meta.get("backend", "numpy")))
+            chan.reset_counters()
+            self._add_slot(dev, chan, None, None)
+            print(
+                f"[hetero] slave {dev} joined "
+                f"(backend={self.backends[-1]}, "
+                f"slowdown={self.slowdowns[-1]})",
+                file=sys.stderr, flush=True,
+            )
+
+    # -- elastic membership: admit / evict / loss --------------------------
+    @property
+    def auth_token_hex(self) -> Optional[str]:
+        """The cluster's join secret (hex), for handing to a slave an
+        operator launches AFTER the cluster came up (``admit(
+        spawn=False)``): export it as REPRO_CLUSTER_AUTH in the slave's
+        environment.  None on the in-proc transport (no listener)."""
+        return self._token.hex() if self._token is not None else None
+
+    @property
+    def listen_address(self) -> Optional[Tuple[str, int]]:
+        """(host, port) a joining slave should dial, or None (inproc)."""
+        if self._listener is None:
+            return None
+        return self._listener.host, self._listener.port
+
+    def admit(
+        self,
+        slowdown: float = 1.0,
+        backend: str = "numpy",
+        *,
+        bandwidth_mbps: Optional[float] = None,
+        spawn: bool = True,
+        timeout_s: float = 120.0,
+        probe_time: Optional[float] = None,
+    ) -> int:
+        """Grow the running cluster by one slave and fold it into the
+        next plan's comm-aware Eq. 1 split.  Returns the new device id.
+
+        ``spawn=True`` starts it here: a slave thread (inproc) or a
+        local subprocess (tcp) with the given slowdown/backend.
+        ``spawn=False`` (tcp only) WAITS for an external join — a slave
+        someone launched by hand via ``python -m
+        repro.core.cluster.protocol`` on any reachable host; its
+        backend/slowdown come from the hello handshake.
+
+        If the cluster has probe times, the newcomer is probed with the
+        same workload (or takes the explicit ``probe_time`` — pass one
+        when ``probe_times`` were pinned by hand, as the benches do,
+        so the synthetic scale stays consistent); on tcp its link
+        bandwidth is measured.  In-flight plans are untouched — they
+        bind the old membership — and ``partition_choices`` is cleared
+        so auto re-resolves per layer."""
+        if self._shut:
+            raise RuntimeError("cluster is shut down")
+        if slowdown < 1.0 and spawn:
+            raise ValueError("slowdowns must be >= 1.0 (see __init__)")
+        if self.transport == "inproc":
+            if not spawn:
+                raise ValueError(
+                    "inproc slaves are threads in this process; external "
+                    "joins (spawn=False) need transport='tcp'"
+                )
+            get_backend(backend)  # fail here, not in the slave thread
+            self._start_inproc_slave(slowdown, backend, bandwidth_mbps)
+            self.slowdowns.append(slowdown)
+            self.backends.append(backend)
+        else:
+            dev_hint = None
+            if spawn:
+                get_backend(backend)
+                dev_hint = self._next_slave_id
+                self._next_slave_id += 1
+                proc = self._spawn_slave_proc(
+                    dev_hint, slowdown, backend, self._slave_env()
+                )
+            else:
+                proc = None
+            try:
+                chan, dev, meta = self._accept_slave(timeout_s=timeout_s)
+            except Exception:
+                # never leak the just-spawned process on a failed accept
+                # (it holds the auth token and would retry forever)
+                if proc is not None:
+                    proc.kill()
+                    proc.wait(timeout=5)
+                raise
+            if spawn and dev != dev_hint:
+                # an external joiner won the accept race: keep IT (its
+                # hello metadata applies) and abort our spawn attempt —
+                # pairing our Popen with a stranger's channel would make
+                # a later evict kill the wrong process
+                proc.kill()
+                proc.wait(timeout=5)
+                proc = None
+                spawn = False
+            if not spawn:
+                slowdown = float(meta.get("slowdown", 1.0))
+                backend = str(meta.get("backend", "numpy"))
+            chan.reset_counters()
+            self.slowdowns.append(slowdown)
+            self.backends.append(backend)
+            self._add_slot(dev, chan, proc, None)
+        self.bandwidths.append(bandwidth_mbps)
+        self._bandwidth_overrides.append(bandwidth_mbps)
+        self.measured_bandwidths.append(None)
+        sock, dev = self.sockets[-1], self.slave_ids[-1]
+        if self.transport == "tcp":
+            try:
+                meas = sock.measure_bandwidth_mbps()
+            except SlaveLost as e:
+                self._on_slave_lost(sock, e)
+                raise
+            self.measured_bandwidths[-1] = meas
+            if self._bandwidth_overrides[-1] is None:
+                self.bandwidths[-1] = meas
+        if self.probe_times is not None:
+            if probe_time is None:
+                kw = self._probe_kwargs or dict(
+                    image_size=16, in_channels=3, kernel_size=3,
+                    num_kernels=8, batch=4, repeats=1,
+                )
+                try:
+                    sock.write_to_slave(("probe", kw))
+                    probe_time = self._check_result(sock.read_on_master())
+                except SlaveLost as e:
+                    self._on_slave_lost(sock, e)
+                    raise
+            self.probe_times.append(float(probe_time))
+        self.partition_choices.clear()
+        return dev
+
+    def evict(self, device: int) -> None:
+        """Gracefully retire slave ``device`` (its stable id): it is
+        told to exit, reaped, and removed from membership; the next
+        plan re-runs the comm-aware Eq. 1 over the survivors.  Plans
+        already in flight keep naming it and the master absorbs its
+        shards — an evict mid-step is safe, just not free."""
+        if device not in self.slave_ids:
+            raise KeyError(
+                f"no live slave with device id {device}; live: "
+                f"{self.slave_ids}"
+            )
+        pos = self.slave_ids.index(device)
+        sock = self.sockets[pos]
+        try:
+            sock.write_to_slave(protocol.TRAIN_OVER)
+        except RuntimeError:  # link already down; remove it anyway
+            pass
+        self._remove_slot(pos, kill=False)
+
+    def _remove_slot(self, pos: int, *, kill: bool) -> None:
+        """Drop slot ``pos`` from every aligned membership list.  The
+        socket is marked lost FIRST so any plan that still names this
+        member routes its shards to the master's recovery path."""
+        sock = self.sockets[pos]
+        sock.lost = True
+        proc, thread = self.procs[pos], self.threads[pos]
+        if kill and proc is not None:
+            proc.kill()
+        if thread is not None:
+            thread.join(timeout=10)
+        if proc is not None:
+            try:
+                proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:  # pragma: no cover - stuck exit
+                proc.kill()
+                proc.wait(timeout=5)
+            self.reaped.append(proc)
+        sock.close()
+        had = self.n_slaves
+        for lst in (
+            self.slave_ids, self.sockets, self.procs, self.threads,
+            self.measured_bandwidths,
+        ):
+            del lst[pos]
+        del self.slowdowns[pos + 1]
+        del self.backends[pos + 1]
+        del self.bandwidths[pos]
+        del self._bandwidth_overrides[pos]
+        if self.probe_times is not None and len(self.probe_times) == had + 1:
+            del self.probe_times[pos + 1]
+        self.n_slaves = len(self.sockets)
+        self.partition_choices.clear()
+
+    def _on_slave_lost(self, sock: Transport, err: BaseException) -> None:
+        """A link reported its slave dead: record the failure, kill any
+        local process remnant, and auto-evict the slot.  Idempotent —
+        a slave's loss may surface on several reads."""
+        sock.lost = True
+        if sock not in self.sockets:
+            return  # already evicted
+        pos = self.sockets.index(sock)
+        self.failures.append({
+            "device": self.slave_ids[pos],
+            "t_detected": time.monotonic(),
+            "error": str(err),
+        })
+        self._remove_slot(pos, kill=True)
+
+    def _plan_sockets(self, plan: plans.LayerPlan) -> List[Transport]:
+        """The participant links of a plan, in plan order — resolved
+        through the stable-id registry so a plan built before an
+        evict/admit still addresses exactly the members it split for."""
+        if plan.member_ids is None:
+            return list(self.sockets)
+        return [self._registry[d] for d in plan.member_ids]
 
     # -- §4.1.1 pre-processing -------------------------------------------
     def probe(self, **probe_kwargs) -> List[float]:
@@ -291,27 +719,26 @@ class HeteroCluster:
         chooser turn probe times into absolute per-layer predictions)
         and, on the tcp transport, each link's measured round-trip
         bandwidth — the real wire feeds ``link_aware_times`` instead of
-        the ``bandwidth_mbps`` knob."""
+        the ``bandwidth_mbps`` knob.  A slave lost mid-probe is
+        auto-evicted and the times cover the survivors."""
         master_t = probe_conv_time(
             self._master_backend, slowdown=self.slowdowns[0], **probe_kwargs
         )
-        slave_ts = []
-        for s in self.sockets:
-            s.write_to_slave(("probe", probe_kwargs))
-            slave_ts.append(self._check_result(s.read_on_master()))
-        self.probe_times = [master_t] + slave_ts
-        self.probe_flops = (
-            2.0
-            * probe_kwargs["batch"]
-            * probe_kwargs["image_size"] ** 2
-            * probe_kwargs["kernel_size"] ** 2
-            * probe_kwargs["in_channels"]
-            * probe_kwargs["num_kernels"]
-        )
+        slave_ts: Dict[Transport, float] = {}
+        for s in list(self.sockets):
+            try:
+                s.write_to_slave(("probe", probe_kwargs))
+                slave_ts[s] = self._check_result(s.read_on_master())
+            except SlaveLost as e:
+                self._on_slave_lost(s, e)
         if self.transport == "tcp":
-            self.measured_bandwidths = [
-                s.measure_bandwidth_mbps() for s in self.sockets
-            ]
+            measured: Dict[Transport, Optional[float]] = {}
+            for s in list(self.sockets):
+                try:
+                    measured[s] = s.measure_bandwidth_mbps()
+                except SlaveLost as e:
+                    self._on_slave_lost(s, e)
+            self.measured_bandwidths = [measured.get(s) for s in self.sockets]
             # an explicit constructor bandwidth_mbps stays an override for
             # planning; otherwise every probe() refreshes the measurement
             self.bandwidths = [
@@ -320,6 +747,18 @@ class HeteroCluster:
                     self._bandwidth_overrides, self.measured_bandwidths
                 )
             ]
+        self.probe_times = [master_t] + [
+            slave_ts[s] for s in self.sockets if s in slave_ts
+        ]
+        self.probe_flops = (
+            2.0
+            * probe_kwargs["batch"]
+            * probe_kwargs["image_size"] ** 2
+            * probe_kwargs["kernel_size"] ** 2
+            * probe_kwargs["in_channels"]
+            * probe_kwargs["num_kernels"]
+        )
+        self._probe_kwargs = dict(probe_kwargs)
         return self.probe_times
 
     def _effective_times(self) -> List[float]:
@@ -412,15 +851,28 @@ class HeteroCluster:
         plan = self.plan_conv(x.shape, w, "conv", partition)
         return self._scatter_conv_planned(x, plan, send_weights=True)
 
+    def _write_op(self, sock, msg) -> None:
+        """One scatter write; a link that died under the write is folded
+        into the loss path (its shard will be recomputed at the gather)
+        instead of aborting the step."""
+        if sock.lost:
+            return
+        try:
+            sock.write_to_slave(msg)
+        except SlaveLost as e:
+            self._on_slave_lost(sock, e)
+
     def _scatter_conv_planned(
         self, x: np.ndarray, plan: plans.LayerPlan, send_weights: bool
     ) -> scheduler.Pending:
         if plan.mode == "kernel":
-            return self._scatter_conv_shards(x, plan.shards, send_weights)
+            return self._scatter_conv_shards(x, plan, send_weights)
+        socks = self._plan_sockets(plan)
         t0 = time.perf_counter()
-        for sock, (lo, hi, pt, pb) in zip(self.sockets, plan.halos[1:]):
-            sock.write_to_slave(
-                ("sconv", (x[:, lo:hi], plan.w if send_weights else None, pt, pb))
+        for sock, (lo, hi, pt, pb) in zip(socks, plan.halos[1:]):
+            self._write_op(
+                sock,
+                ("sconv", (x[:, lo:hi], plan.w if send_weights else None, pt, pb)),
             )
         now = time.perf_counter()
         self.timing.comm_s += now - t0
@@ -428,25 +880,32 @@ class HeteroCluster:
         return scheduler.Pending(
             "conv", self._seq_issued, x, plan.w, None, now,
             mode="spatial", rows=plan.rows, halos=plan.halos,
+            plan=plan, parts=socks,
         )
 
     def _scatter_conv_shards(
-        self, x: np.ndarray, shards: List[np.ndarray], send_weights: bool
+        self, x: np.ndarray, plan: plans.LayerPlan, send_weights: bool
     ) -> scheduler.Pending:
         """send_weights=False sends w=None: the slave reuses its cached
         shard, so pipelined microbatches pay the weight traffic once."""
+        socks = self._plan_sockets(plan)
         t0 = time.perf_counter()
-        for sock, shard in zip(self.sockets, shards[1:]):
-            sock.write_to_slave(("conv", (x, shard if send_weights else None)))
+        for sock, shard in zip(socks, plan.shards[1:]):
+            self._write_op(sock, ("conv", (x, shard if send_weights else None)))
         now = time.perf_counter()
         self.timing.comm_s += now - t0
         self._seq_issued += 1
-        return scheduler.Pending("conv", self._seq_issued, x, shards[0], None, now)
+        return scheduler.Pending(
+            "conv", self._seq_issued, x, plan.shards[0], None, now,
+            plan=plan, parts=socks,
+        )
 
     def gather_conv(self, p: scheduler.Pending) -> np.ndarray:
         """Compute the master's shard, collect the slaves' feature maps
         (FIFO: gathers must be issued in scatter order), concatenate —
-        along channels (kernel mode) or height (spatial strips)."""
+        along channels (kernel mode) or height (spatial strips).  A
+        participant lost since the scatter contributes via the master's
+        recovery compute instead of the wire."""
         self._check_order(p, "conv")
         t0 = time.perf_counter()
         if p.mode == "spatial":
@@ -462,8 +921,8 @@ class HeteroCluster:
             axis = -1
         outs = [my_out]
         t_wait = time.perf_counter()
-        for sock in self.sockets:
-            outs.append(self._check_result(sock.read_on_master()))
+        for idx, sock in enumerate(p.parts):
+            outs.append(self._read_or_recover(sock, p, idx))
         t1 = time.perf_counter()
         self._account_gather(p, t0, t_wait, t1)
         return np.concatenate(outs, axis=axis)
@@ -482,18 +941,18 @@ class HeteroCluster:
         send_weights: bool,
     ) -> scheduler.Pending:
         if plan.mode == "kernel":
-            return self._scatter_bwd_shards(
-                x, plan.shards, g, plan.counts, send_weights
-            )
+            return self._scatter_bwd_shards(x, plan, g, send_weights)
+        socks = self._plan_sockets(plan)
         t0 = time.perf_counter()
         for sock, (r0, r1), (lo, hi, pt, pb) in zip(
-            self.sockets, plan.rows[1:], plan.halos[1:]
+            socks, plan.rows[1:], plan.halos[1:]
         ):
-            sock.write_to_slave(
+            self._write_op(
+                sock,
                 ("sbwd", (
                     x[:, lo:hi], plan.w if send_weights else None,
                     g[:, r0:r1], pt, pb,
-                ))
+                )),
             )
         now = time.perf_counter()
         self.timing.comm_s += now - t0
@@ -502,32 +961,32 @@ class HeteroCluster:
         return scheduler.Pending(
             "bwd", self._seq_issued, x, plan.w, g[:, r0:r1], now,
             mode="spatial", rows=plan.rows, halos=plan.halos,
+            plan=plan, parts=socks, g_all=g,
         )
 
     def _scatter_bwd_shards(
-        self,
-        x: np.ndarray,
-        w_shards: List[np.ndarray],
-        g: np.ndarray,
-        counts: np.ndarray,
+        self, x: np.ndarray, plan: plans.LayerPlan, g: np.ndarray,
         send_weights: bool,
     ) -> scheduler.Pending:
-        g_shards = self._split(g, counts)
+        socks = self._plan_sockets(plan)
+        g_shards = self._split(g, plan.counts)
         t0 = time.perf_counter()
-        for sock, ws, gs in zip(self.sockets, w_shards[1:], g_shards[1:]):
-            sock.write_to_slave(("bwd", (x, ws if send_weights else None, gs)))
+        for sock, ws, gs in zip(socks, plan.shards[1:], g_shards[1:]):
+            self._write_op(sock, ("bwd", (x, ws if send_weights else None, gs)))
         now = time.perf_counter()
         self.timing.comm_s += now - t0
         self._seq_issued += 1
         return scheduler.Pending(
-            "bwd", self._seq_issued, x, w_shards[0], g_shards[0], now
+            "bwd", self._seq_issued, x, plan.shards[0], g_shards[0], now,
+            plan=plan, parts=socks, g_all=g,
         )
 
     def gather_bwd(self, p: scheduler.Pending) -> Tuple[np.ndarray, np.ndarray]:
         """Master's shard VJP + gather.  Kernel mode: sum partial dX,
         concat dW shards.  Spatial mode: overlap-ADD each device's halo'd
         dX rows into the full dX (the seam sums) and SUM the full-kernel
-        dW contributions."""
+        dW contributions.  Lost participants' contributions come from
+        the master's recovery compute."""
         self._check_order(p, "bwd")
         t0 = time.perf_counter()
         if p.mode == "spatial":
@@ -540,8 +999,9 @@ class HeteroCluster:
             dx = np.zeros(p.x.shape, np.float32)
             dx[:, lo:hi] += dxh
             t_wait = time.perf_counter()
-            for sock, (lo_i, hi_i, _pt, _pb) in zip(self.sockets, p.halos[1:]):
-                dxh_i, dw_i = self._check_result(sock.read_on_master())
+            for idx, sock in enumerate(p.parts):
+                dxh_i, dw_i = self._read_or_recover(sock, p, idx)
+                lo_i, hi_i, _pt, _pb = p.halos[idx + 1]
                 dx[:, lo_i:hi_i] += dxh_i  # the halo seams overlap-sum here
                 dw = dw + dw_i
             t1 = time.perf_counter()
@@ -552,8 +1012,8 @@ class HeteroCluster:
         )
         dws = [dw0]
         t_wait = time.perf_counter()
-        for sock in self.sockets:
-            dxi, dwi = self._check_result(sock.read_on_master())
+        for idx, sock in enumerate(p.parts):
+            dxi, dwi = self._read_or_recover(sock, p, idx)
             dx = dx + dxi
             dws.append(dwi)
         t1 = time.perf_counter()
@@ -568,6 +1028,57 @@ class HeteroCluster:
                 f"slave device {out.device} failed while computing its "
                 f"shard:\n{out.tb}"
             )
+        return out
+
+    def _read_or_recover(self, sock, p: scheduler.Pending, idx: int):
+        """Device ``idx+1``'s contribution to this gather: read it from
+        the live link, or — the slave being gone — compute it HERE.
+        The master re-issues the lost shard's work to itself from the
+        plan the op rode, so every in-flight op drains on the survivors
+        with identical numerics.  A ``SlaveError`` (the slave computed
+        and FAILED) still raises: that is a broken backend, not a
+        broken link."""
+        if not sock.lost:
+            try:
+                return self._check_result(sock.read_on_master())
+            except SlaveLost as e:
+                self._on_slave_lost(sock, e)
+        return self._recover_shard(p, idx + 1)
+
+    def _recover_shard(self, p: scheduler.Pending, dev_pos: int):
+        """Compute plan position ``dev_pos``'s shard of the pending op
+        on the master's own backend — the recovery path for a member
+        that died between scatter and gather."""
+        plan = p.plan
+        t0 = time.perf_counter()
+        if p.op == "conv":
+            if plan.mode == "kernel":
+                out = protocol.conv_shard(
+                    self._master_backend, p.x, plan.shards[dev_pos]
+                )
+            else:
+                lo, hi, pt, pb = plan.halos[dev_pos]
+                out = strip_conv(
+                    self._master_backend, p.x[:, lo:hi], plan.w, pt, pb
+                )
+        else:
+            if plan.mode == "kernel":
+                gs = plans.split_kernels(p.g_all, plan.counts)
+                out = protocol.bwd_shard(
+                    self._master_backend, p.x, plan.shards[dev_pos],
+                    gs[dev_pos],
+                )
+            else:
+                r0, r1 = plan.rows[dev_pos]
+                lo, hi, pt, pb = plan.halos[dev_pos]
+                out = strip_conv_vjp(
+                    self._master_backend, p.x[:, lo:hi], plan.w,
+                    p.g_all[:, r0:r1], pt, pb,
+                )
+        el = time.perf_counter() - t0
+        if self.slowdowns[0] > 1.0:
+            time.sleep(el * (self.slowdowns[0] - 1.0))
+        self.timing.recompute_s += time.perf_counter() - t0
         return out
 
     def _check_order(self, p: scheduler.Pending, op: str):
@@ -653,9 +1164,12 @@ class HeteroCluster:
             except RuntimeError:  # link already down (dead slave)
                 pass
         for t in self.threads:
-            t.join(timeout=10)
+            if t is not None:
+                t.join(timeout=10)
         deadline = time.monotonic() + 10
         for p in self.procs:
+            if p is None:  # external join: its operator owns the process
+                continue
             try:
                 p.wait(timeout=max(0.1, deadline - time.monotonic()))
             except subprocess.TimeoutExpired:

@@ -49,7 +49,14 @@ def strip_plan(
 class LayerPlan:
     """How ONE conv layer is split over the devices — fixed for every
     microbatch of the layer (the slave caches one kernel shard per op,
-    so the split must not drift between microbatches)."""
+    so the split must not drift between microbatches).
+
+    ``member_ids`` pins the membership the plan was built for: the
+    stable slave ids behind ``counts[1:]``, in order.  An elastic
+    cluster may lose a slave while a plan is still live (later
+    microbatches, the backward sweep) — scatters resolve shard k to
+    member ``member_ids[k-1]``, never to "whatever the k-th live slave
+    is now", and the master absorbs shards of members that died."""
 
     mode: str                     # "kernel" | "spatial" (auto is resolved)
     counts: np.ndarray            # kernels (kernel) or rows (spatial) per device
@@ -57,6 +64,7 @@ class LayerPlan:
     w: Optional[np.ndarray] = None             # spatial mode: the full kernel
     rows: Optional[List[Tuple[int, int]]] = None
     halos: Optional[List[Tuple[int, int, int, int]]] = None
+    member_ids: Optional[Tuple[int, ...]] = None  # slave ids behind counts[1:]
 
 
 def split_kernels(w: np.ndarray, counts: np.ndarray) -> List[np.ndarray]:
@@ -188,7 +196,8 @@ def plan_conv(
     """Freeze how one conv layer splits over the devices: the axis
     (resolving ``"auto"`` against what the plan will govern — ``op``
     is ``"conv"``, ``"bwd"`` or ``"train"``), the Eq. 1(+comm) unit
-    counts, and the per-device kernel shards or row strips.  One
+    counts, the per-device kernel shards or row strips, and the
+    membership snapshot (``member_ids``) the split binds to.  One
     plan serves every microbatch of the layer — the slave caches ONE
     kernel shard per op, so the split must not drift within a
     layer."""
@@ -197,13 +206,48 @@ def plan_conv(
     kh, kw, _, cout = w.shape
     layer_flops = 2.0 * b * h * wd * kh * kw * cin * cout
     ub = unit_bytes(x_shape, w.shape, mode, op, cluster._wire_itemsize)
+    members = getattr(cluster, "slave_ids", None)
+    members = tuple(members) if members is not None else None
     if mode == "kernel":
         counts = cluster.shares_for(
             cout, unit_bytes=ub, layer_flops=layer_flops
         )
-        return LayerPlan("kernel", counts, shards=split_kernels(w, counts))
+        return LayerPlan(
+            "kernel", counts, shards=split_kernels(w, counts),
+            member_ids=members,
+        )
     counts = cluster.shares_for(h, unit_bytes=ub, layer_flops=layer_flops)
     rows, halos = strip_plan(h, kh, counts)
     return LayerPlan(
-        "spatial", counts, w=np.asarray(w, np.float32), rows=rows, halos=halos
+        "spatial", counts, w=np.asarray(w, np.float32), rows=rows,
+        halos=halos, member_ids=members,
     )
+
+
+def check_plan(plan: LayerPlan, n_units: int, n_devices: int) -> None:
+    """Invariants every live plan must satisfy — what the re-partition
+    conformance tests assert after an evict/admit: unit counts cover the
+    layer exactly once over exactly the current membership, and spatial
+    strips tile [0, n_units) with in-bounds halo windows.  Raises
+    AssertionError with a named reason."""
+    assert len(plan.counts) == n_devices, (
+        f"plan covers {len(plan.counts)} devices, membership has {n_devices}"
+    )
+    assert int(np.sum(plan.counts)) == n_units, (
+        f"plan units sum to {int(np.sum(plan.counts))}, layer has {n_units}"
+    )
+    if plan.member_ids is not None:
+        assert len(plan.member_ids) == n_devices - 1, "one member id per slave"
+    if plan.mode == "kernel":
+        assert plan.shards is not None and len(plan.shards) == n_devices
+        assert sum(s.shape[-1] for s in plan.shards) == n_units
+        return
+    assert plan.rows is not None and plan.halos is not None
+    r_prev = 0
+    for (r0, r1), (lo, hi, pt, pb) in zip(plan.rows, plan.halos):
+        assert r0 == (r_prev if r1 > r0 else r0), "strips tile in order"
+        if r1 > r0:
+            r_prev = r1
+        assert 0 <= lo <= hi <= n_units, "halo window inside the image"
+        assert pt >= 0 and pb >= 0, "halo pads non-negative"
+    assert r_prev == n_units, "strips cover every output row"

@@ -19,16 +19,28 @@ exception ships back as a ``SlaveError`` (the master re-raises it at the
 matching gather) so a broken backend fails loudly instead of hanging the
 protocol.
 
-Run as a module, this file IS the TCP slave process:
+Run as a module, this file IS the TCP slave process — spawned by the
+master on this host, or hand-launched on ANY host that can reach the
+master's listener:
 
-    python -m repro.core.cluster.protocol --host H --port P --device I \
-        --slowdown 1.5 --backend numpy [--wire-dtype fp16]
+    python -m repro.core.cluster.protocol --host H --port P \
+        [--device I] [--slowdown 1.5] [--backend numpy] \
+        [--wire-dtype fp16] [--heartbeat-s 0.5] \
+        [--auth-env REPRO_CLUSTER_AUTH] [--connect-timeout-s 60]
 
-It connects back to the master's listener, identifies itself with a
-("hello", device) frame, serves ops until "trainOver" or EOF, and leaves
-via ``os._exit`` so native runtime threads (XLA) can never hang the
-interpreter at exit.  Imports stay numpy-light until the first op needs
-a compute backend, keeping subprocess spawn fast for numpy/sim slaves.
+It connects back to the master's listener (retrying while the master is
+still binding), presents the cluster auth token (read from the env var
+named by ``--auth-env``), identifies itself with a
+``("hello", device, {"backend", "slowdown"})`` frame, and waits for the
+master's ``("welcome", assigned_device)`` — the master owns device
+numbering, so a hand-launched slave may omit ``--device`` entirely and
+take whatever slot the cluster assigns.  With ``--heartbeat-s`` it
+beats liveness frames from a side thread so a master with a heartbeat
+deadline can tell "busy convolving" from "dead".  It then serves ops
+until "trainOver" or EOF and leaves via ``os._exit`` so native runtime
+threads (XLA) can never hang the interpreter at exit.  Imports stay
+numpy-light until the first op needs a compute backend, keeping
+subprocess spawn fast for numpy/sim slaves.
 """
 from __future__ import annotations
 
@@ -134,6 +146,27 @@ def slave_loop(endpoint, slowdown: float, backend_name: str, device: int):
         endpoint.send(out)
 
 
+def hello_frame(device: int, backend: str, slowdown: float) -> tuple:
+    """The join handshake: requested device slot (-1 = let the master
+    assign one) plus the metadata the master records for membership —
+    what an externally-launched slave brings that a spawned one was
+    configured with."""
+    return ("hello", device, {"backend": backend, "slowdown": slowdown})
+
+
+def parse_hello(frame) -> Tuple[int, dict]:
+    """(requested_device, meta) from a hello frame; raises RuntimeError
+    (never assert: -O strips those) on anything else."""
+    if (
+        isinstance(frame, tuple)
+        and len(frame) == 3
+        and frame[0] == "hello"
+        and isinstance(frame[2], dict)
+    ):
+        return int(frame[1]), dict(frame[2])
+    raise RuntimeError(f"bad slave handshake frame {frame!r}")
+
+
 def main(argv=None):
     """TCP slave process entry — see module docstring."""
     import argparse
@@ -145,22 +178,46 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description="master/slave TCP slave process")
     ap.add_argument("--host", required=True)
     ap.add_argument("--port", type=int, required=True)
-    ap.add_argument("--device", type=int, required=True)
+    ap.add_argument("--device", type=int, default=-1,
+                    help="requested device slot; -1 (default) lets the "
+                         "master assign the next free one — what a "
+                         "hand-launched remote slave should use")
     ap.add_argument("--slowdown", type=float, default=1.0)
     ap.add_argument("--backend", default="numpy")
     ap.add_argument("--wire-dtype", default=None)
+    ap.add_argument("--heartbeat-s", type=float, default=0.0,
+                    help="send a liveness frame every this many seconds "
+                         "(0 = off); masters with a heartbeat deadline "
+                         "need it to tell busy from dead")
+    ap.add_argument("--auth-env", default="REPRO_CLUSTER_AUTH",
+                    help="name of the env var holding the cluster auth "
+                         "token (hex); the secret rides the environment, "
+                         "never argv (visible in ps)")
+    ap.add_argument("--connect-timeout-s", type=float, default=60.0,
+                    help="keep retrying the connect for this long — a "
+                         "hand-launched slave may legally start before "
+                         "the master binds its listener")
     args = ap.parse_args(argv)
 
-    # the per-cluster secret rides an env var (not argv: visible in ps)
-    token_hex = os.environ.get("REPRO_CLUSTER_AUTH")
+    token_hex = os.environ.get(args.auth_env)
     endpoint = TCPSlaveEndpoint(
         args.host, args.port, wire_dtype=resolve_wire_dtype(args.wire_dtype),
+        connect_timeout_s=args.connect_timeout_s,
         auth_token=bytes.fromhex(token_hex) if token_hex else None,
     )
     code = 0
     try:
-        endpoint.send(("hello", args.device))
-        slave_loop(endpoint, args.slowdown, args.backend, args.device)
+        endpoint.send(hello_frame(args.device, args.backend, args.slowdown))
+        reply = endpoint.recv()
+        if (
+            not isinstance(reply, tuple) or len(reply) != 2
+            or reply[0] != "welcome"
+        ):
+            raise RuntimeError(f"bad master welcome frame {reply!r}")
+        device = int(reply[1])
+        if args.heartbeat_s > 0:
+            endpoint.start_heartbeat(args.heartbeat_s)
+        slave_loop(endpoint, args.slowdown, args.backend, device)
     except Exception:  # pragma: no cover - surfaced via the exit code
         traceback.print_exc()
         code = 1

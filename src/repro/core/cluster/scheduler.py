@@ -46,6 +46,8 @@ class LayerTiming:
     #                             wait: comm/compute genuinely overlapped
     master_conv_s: float = 0.0  # master's own conv/bwd shard compute — the
     #                             denominator of its non-conv duty
+    recompute_s: float = 0.0    # master time absorbing DEAD slaves' shards
+    #                             (fault recovery; see cluster._recover_shard)
 
 
 @dataclasses.dataclass
@@ -60,7 +62,16 @@ class TrainStepResult:
 @dataclasses.dataclass
 class Pending:
     """An in-flight scatter: the master's own shard is deferred to the
-    gather so issuing the NEXT scatter never waits on local compute."""
+    gather so issuing the NEXT scatter never waits on local compute.
+
+    An elastic cluster may lose a slave between this scatter and its
+    gather, so a Pending carries enough to finish WITHOUT that slave:
+    ``plan`` (the full split, every device's shard derivable), ``parts``
+    (the participant links, frozen at scatter time — membership lists
+    may have shrunk by gather time), and ``g_all`` (backward only: the
+    whole microbatch gradient, so any member's slice can be recut).
+    The gather reads live participants and recomputes dead ones' shards
+    on the master — the step drains on the survivors."""
 
     op: str                       # "conv" | "bwd"
     seq: int                      # FIFO position; gathers must match
@@ -74,6 +85,9 @@ class Pending:
     rows: Optional[List[Tuple[int, int]]] = None      # spatial: [r0, r1) per device
     halos: Optional[List[Tuple[int, int, int, int]]] = None
     #                               spatial: (lo, hi, pad_top, pad_bot) per device
+    plan: Optional[LayerPlan] = None  # the split this op rode (recovery)
+    parts: Optional[list] = None      # participant transports, scatter-time
+    g_all: Optional[np.ndarray] = None  # bwd: full microbatch gradient
 
 
 def microbatch_slices(cluster, batch: int) -> List[slice]:

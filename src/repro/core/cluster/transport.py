@@ -34,6 +34,15 @@ counters, and ``measure_bandwidth_mbps`` times a real echo round-trip
 through the slave — the measured link the comm-aware partitioner
 consumes instead of the ``bandwidth_mbps`` knob.
 
+Liveness: ``SlaveLost`` is the transport's "this link's slave is gone"
+signal — EOF/reset on the socket, a failed writer, or (with
+``heartbeat_timeout_s`` set) no frame of ANY kind within the deadline.
+Slave processes beat through ``TCPSlaveEndpoint.start_heartbeat``: a
+daemon thread sends tiny ``(HEARTBEAT, seq)`` frames that the master's
+read loop consumes silently (they count as liveness, never as protocol
+traffic), so a wedged or SIGSTOPped slave is detected within the
+deadline instead of hanging the scheduler forever.
+
 Import-light on purpose (numpy + stdlib): TCP slave subprocesses import
 this module before any heavy framework lands.
 """
@@ -42,6 +51,7 @@ from __future__ import annotations
 import abc
 import pickle
 import queue
+import select
 import socket
 import struct
 import threading
@@ -54,6 +64,28 @@ from repro.core.cluster import codec
 
 TRANSPORT_KINDS = ("inproc", "tcp")
 
+HEARTBEAT = "hb"  # liveness frame tag: (HEARTBEAT, seq), never an op
+
+
+def is_heartbeat(obj) -> bool:
+    # the first-element type check matters: op results are tuples too,
+    # and ``ndarray == str`` compares elementwise
+    return (
+        isinstance(obj, tuple)
+        and len(obj) == 2
+        and isinstance(obj[0], str)
+        and obj[0] == HEARTBEAT
+    )
+
+
+class SlaveLost(RuntimeError):
+    """The link's slave is dead or unreachable: the socket hit EOF/reset,
+    the writer thread failed, or no frame (op result OR heartbeat)
+    arrived within the heartbeat deadline.  A RuntimeError subclass so
+    pre-elastic callers that caught RuntimeError still do — but the
+    cluster's recovery path catches THIS type specifically and
+    re-partitions instead of aborting the step."""
+
 
 class Transport(abc.ABC):
     """Master-side contract of one master<->slave link (see module doc)."""
@@ -61,6 +93,10 @@ class Transport(abc.ABC):
     wire_dtype: Optional[np.dtype] = None
     bytes_to_slave: int = 0
     bytes_to_master: int = 0
+    # set (by the transport or the cluster) once the slave behind this
+    # link is known dead: scatters skip it, gathers recompute its shard
+    # on the master instead of reading, writes/reads raise SlaveLost
+    lost: bool = False
 
     @abc.abstractmethod
     def write_to_slave(self, obj) -> None:
@@ -238,14 +274,21 @@ def _dumps(obj) -> bytes:
 
 
 class TCPListener:
-    """The master's accept socket; slaves connect to (host, port)."""
+    """The master's accept socket; slaves connect to (host, port).
 
-    def __init__(self, host: str = "127.0.0.1"):
+    ``host`` picks the bind interface: the localhost default keeps the
+    pre-elastic behaviour (only processes on this machine can join);
+    ``"0.0.0.0"`` accepts slaves from genuinely remote hosts — pair it
+    with the cluster auth token, the wire is pickle.  ``port=0`` (the
+    default) lets the kernel pick a free port; a fixed port is what a
+    remote-slave quickstart advertises to its operators."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0):
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self._sock.bind((host, 0))
+        self._sock.bind((host, port))
         self._sock.listen(64)
-        self.host, self.port = self._sock.getsockname()
+        self.host, self.port = self._sock.getsockname()[:2]
 
     def accept(self, timeout_s: float = 60.0) -> socket.socket:
         self._sock.settimeout(timeout_s)
@@ -269,14 +312,33 @@ class TCPTransport(Transport):
     schedules assume and decoupling deep in-flight windows from the
     kernel's socket buffer sizes.  ``bytes_to_*`` count the canonical
     codec bytes (comparable with InProcTransport); ``frame_bytes_to_*``
-    count what actually crossed the socket, framing included."""
+    count what actually crossed the socket, framing included.
+
+    ``heartbeat_timeout_s`` arms the liveness deadline: the read loop
+    polls the socket (``select``, never consuming a partial frame) and
+    raises ``SlaveLost`` once NO frame — result or heartbeat — has
+    arrived within the deadline.  Heartbeat frames refresh the deadline
+    and are consumed silently (no byte accounting: they are liveness,
+    not protocol traffic).  EOF/reset raises ``SlaveLost`` immediately
+    with or without a deadline — a SIGKILLed slave's kernel closes its
+    socket, so crashes are detected at wire speed and only a wedged or
+    SIGSTOPped slave needs the heartbeat clock."""
 
     _WRITER_DOWN = object()
+    _POLL_S = 0.25  # deadline-check granularity while waiting for frames
 
-    def __init__(self, conn: socket.socket, wire_dtype: Optional[np.dtype] = None):
+    def __init__(
+        self,
+        conn: socket.socket,
+        wire_dtype: Optional[np.dtype] = None,
+        heartbeat_timeout_s: Optional[float] = None,
+    ):
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         self._conn = conn
         self.wire_dtype = wire_dtype
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.last_alive = time.monotonic()
+        self.lost = False
         self.bytes_to_slave = 0
         self.bytes_to_master = 0
         self.frame_bytes_to_slave = 0
@@ -300,12 +362,18 @@ class TCPTransport(Transport):
 
     def _check_writer(self):
         if self._werr is not None:
-            raise RuntimeError(
+            self.lost = True
+            raise SlaveLost(
                 f"TCP link writer failed (slave died or connection dropped): "
                 f"{self._werr!r}"
             )
 
+    def _check_lost(self):
+        if self.lost:
+            raise SlaveLost("TCP link already marked lost")
+
     def write_to_slave(self, obj):
+        self._check_lost()
         self._check_writer()
         if self.wire_dtype is not None:
             obj = codec.encode(obj, self.wire_dtype)
@@ -315,17 +383,65 @@ class TCPTransport(Transport):
         self._wq.put(payload)
 
     def read_on_master(self):
-        self._check_writer()
-        try:
-            payload = _recv_frame(self._conn)
-        except (EOFError, OSError) as e:
-            raise RuntimeError(
-                f"TCP link to slave closed mid-protocol: {e!r}"
-            ) from e
-        obj = pickle.loads(payload)
-        self.bytes_to_master += codec.wire_nbytes(obj)
-        self.frame_bytes_to_master += len(payload) + _HDR.size
-        return codec.decode(obj, self.wire_dtype) if self.wire_dtype is not None else obj
+        """Next non-heartbeat frame from the slave, decoded.  With a
+        heartbeat deadline armed, waits in ``select`` polls so buffered
+        heartbeats refresh ``last_alive`` before the deadline is judged
+        (a master that was busy computing must drain the backlog, not
+        declare a live slave dead on a stale clock)."""
+        while True:
+            self._check_lost()
+            self._check_writer()
+            if self.heartbeat_timeout_s is not None:
+                deadline = self.last_alive + self.heartbeat_timeout_s
+                wait = min(max(0.0, deadline - time.monotonic()), self._POLL_S)
+                readable, _, _ = select.select([self._conn], [], [], wait)
+                if not readable:
+                    if time.monotonic() >= deadline:
+                        self.lost = True
+                        raise SlaveLost(
+                            f"no frame or heartbeat from slave for "
+                            f"{self.heartbeat_timeout_s:.2f}s (deadline "
+                            f"exceeded): slave wedged or unreachable"
+                        )
+                    continue
+            try:
+                # with a deadline armed, the frame body is read under a
+                # per-chunk socket timeout: select only promises the
+                # FIRST byte, and a peer that stalls mid-frame (SIGSTOP
+                # between chunks of a multi-MB result) must still trip
+                # the deadline, not hang a timeout-less recv forever
+                if self.heartbeat_timeout_s is not None:
+                    self._conn.settimeout(self.heartbeat_timeout_s)
+                payload = _recv_frame(self._conn)
+            except socket.timeout as e:
+                self.lost = True
+                raise SlaveLost(
+                    f"slave stalled mid-frame for "
+                    f"{self.heartbeat_timeout_s:.2f}s (deadline "
+                    f"exceeded): slave wedged or unreachable"
+                ) from e
+            except (EOFError, OSError) as e:
+                self.lost = True
+                raise SlaveLost(
+                    f"TCP link to slave closed mid-protocol: {e!r}"
+                ) from e
+            finally:
+                if self.heartbeat_timeout_s is not None:
+                    try:
+                        self._conn.settimeout(None)
+                    except OSError:  # pragma: no cover - socket already dead
+                        pass
+            self.last_alive = time.monotonic()
+            obj = pickle.loads(payload)
+            if is_heartbeat(obj):
+                continue  # liveness only: no byte accounting, not a result
+            self.bytes_to_master += codec.wire_nbytes(obj)
+            self.frame_bytes_to_master += len(payload) + _HDR.size
+            return (
+                codec.decode(obj, self.wire_dtype)
+                if self.wire_dtype is not None
+                else obj
+            )
 
     def reset_counters(self) -> None:
         super().reset_counters()
@@ -387,7 +503,18 @@ class TCPTransport(Transport):
 class TCPSlaveEndpoint:
     """Slave-side endpoint: connects to the master's listener and speaks
     the same framed-pickle wire (codec included).  Drives ``slave_loop``
-    inside a spawned subprocess — or a thread, for conformance tests."""
+    inside a spawned subprocess — or a thread, for conformance tests.
+
+    ``connect_timeout_s`` is a RETRY window, not a single attempt: a
+    hand-launched remote slave may race the master's bind (two
+    terminals, two hosts), so refused connections are retried with a
+    short sleep until the deadline.  ``start_heartbeat`` arms the
+    liveness beacon: a daemon thread sends ``(HEARTBEAT, seq)`` frames
+    every interval — concurrently with the op loop's results, which is
+    why every ``send`` serializes under a lock (interleaved partial
+    frames would corrupt the wire)."""
+
+    _RETRY_S = 0.25
 
     def __init__(
         self,
@@ -397,24 +524,59 @@ class TCPSlaveEndpoint:
         connect_timeout_s: float = 30.0,
         auth_token: Optional[bytes] = None,
     ):
-        self._conn = socket.create_connection((host, port), timeout=connect_timeout_s)
+        deadline = time.monotonic() + connect_timeout_s
+        while True:
+            try:
+                self._conn = socket.create_connection(
+                    (host, port),
+                    timeout=max(self._RETRY_S, deadline - time.monotonic()),
+                )
+                break
+            except OSError:
+                # master not listening yet (or transient network blip):
+                # retry until the window closes
+                if time.monotonic() + self._RETRY_S >= deadline:
+                    raise
+                time.sleep(self._RETRY_S)
         self._conn.settimeout(None)  # ops block indefinitely, like the queues
         self._conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         self.wire_dtype = wire_dtype
+        self._send_lock = threading.Lock()
         if auth_token is not None:
             # RAW token bytes before any frame: the master refuses to
             # unpickle anything from a connection that cannot present
-            # the per-cluster secret (see HeteroCluster._spawn_tcp_slaves)
+            # the per-cluster secret (see HeteroCluster handshake)
             self._conn.sendall(auth_token)
 
     def send(self, obj) -> None:
         if self.wire_dtype is not None:
             obj = codec.encode(obj, self.wire_dtype)
-        _send_frame(self._conn, _dumps(obj))
+        payload = _dumps(obj)
+        with self._send_lock:
+            _send_frame(self._conn, payload)
 
     def recv(self):
         obj = pickle.loads(_recv_frame(self._conn))
         return codec.decode(obj, self.wire_dtype) if self.wire_dtype is not None else obj
+
+    def start_heartbeat(self, interval_s: float) -> threading.Thread:
+        """Beat ``(HEARTBEAT, seq)`` every ``interval_s`` from a daemon
+        thread, proving liveness even while the op loop is deep in a
+        long convolution.  The thread dies silently with the socket."""
+
+        def _beat():
+            seq = 0
+            while True:
+                time.sleep(interval_s)
+                try:
+                    self.send((HEARTBEAT, seq))
+                except OSError:
+                    return  # link gone: the op loop is exiting too
+                seq += 1
+
+        t = threading.Thread(target=_beat, daemon=True)
+        t.start()
+        return t
 
     def close(self) -> None:
         try:

@@ -44,6 +44,7 @@ from repro.core.cluster.scheduler import (  # noqa: F401
 )
 from repro.core.cluster.transport import (  # noqa: F401
     InProcTransport as _Socket,
+    SlaveLost,
     TCPListener,
     TCPSlaveEndpoint,
     TCPTransport,
@@ -68,4 +69,5 @@ __all__ = [
     "TCPTransport",
     "TCPSlaveEndpoint",
     "TCPListener",
+    "SlaveLost",
 ]

@@ -42,6 +42,20 @@ link's measured bandwidth to the comm-aware partitioner:
     PYTHONPATH=src python -m repro.launch.hetero \
         --transport tcp --train-pipeline --slowdowns 1.0,1.5 --steps 2
 
+``--expected-slaves N`` makes the master WAIT for N hand-launched
+slaves instead of spawning them — the remote-host path.  Pass only the
+master's ``--slowdowns`` entry, bind with ``--listen-host``/
+``--listen-port``, export the same REPRO_CLUSTER_AUTH hex token in
+both environments, and start each slave (any reachable host) with:
+
+    python -m repro.core.cluster.protocol --host MASTER --port P \
+        --backend numpy --heartbeat-s 0.5
+
+``--heartbeat-s`` arms liveness on tcp: slaves beat small frames and
+the master declares a silent link dead after 3x the interval, evicts
+it, absorbs its in-flight shards, and re-partitions the next step over
+the survivors (core/cluster/cluster.py, the elastic runtime).
+
 The CLI always leaves through ``os._exit`` after flushing its output:
 an ``xla`` slave (or any backend with native runtime threads) used to
 complete its steps and then hang the interpreter at exit (XLA runtime
@@ -87,6 +101,10 @@ def run_hetero(
     wire_dtype=None,
     bandwidth_mbps=None,
     transport: str = "inproc",
+    expected_slaves=None,
+    listen_host: str = "127.0.0.1",
+    listen_port: int = 0,
+    heartbeat_s=None,
 ) -> dict:
     if not train_pipeline and backends is not None and backends[0] != "numpy":
         # the callback training loop re-enters jax on the blocked runtime
@@ -104,6 +122,9 @@ def run_hetero(
         pipeline=pipeline or train_pipeline, microbatches=microbatches,
         partition=partition, wire_dtype=wire_dtype,
         bandwidth_mbps=bandwidth_mbps, transport=transport,
+        expected_slaves=expected_slaves,
+        listen_host=listen_host, listen_port=listen_port,
+        heartbeat_s=heartbeat_s,
     )
     try:
         probe = cluster.probe(
@@ -165,6 +186,9 @@ def run_hetero(
             },
             "wire_dtype": wire_dtype or "fp32",
             "bandwidth_mbps": bandwidth_mbps,
+            "heartbeat_s": heartbeat_s,
+            "slave_ids": list(cluster.slave_ids),
+            "failures": list(cluster.failures),
             "comp_duty": cluster.comp_duty,
             "backends": list(cluster.backends),
             "probe_s": [float(x) for x in probe],
@@ -234,6 +258,24 @@ def main():
                     help="the wire: in-process queue emulation (threads, "
                          "seed behaviour) or real localhost TCP sockets "
                          "with one OS subprocess per slave")
+    ap.add_argument("--expected-slaves", type=int, default=None,
+                    help="wait for this many HAND-LAUNCHED slaves to "
+                         "join the listener instead of spawning any "
+                         "(implies --transport tcp; pass only the "
+                         "master's --slowdowns entry and export "
+                         "REPRO_CLUSTER_AUTH in both environments)")
+    ap.add_argument("--listen-host", default="127.0.0.1",
+                    help="TCP listener bind interface; 0.0.0.0 accepts "
+                         "slaves from remote hosts")
+    ap.add_argument("--listen-port", type=int, default=0,
+                    help="TCP listener port (0 = kernel-assigned); fix "
+                         "it so remote slaves know where to connect")
+    ap.add_argument("--heartbeat-s", type=float, default=None,
+                    help="slave liveness interval: spawned slaves beat "
+                         "every this many seconds and the master "
+                         "declares a silent link dead after 3x (tcp "
+                         "only); hand-launched slaves must pass the "
+                         "same --heartbeat-s themselves")
     ap.add_argument("--microbatches", type=int, default=4)
     ap.add_argument("--c1", type=int, default=8)
     ap.add_argument("--c2", type=int, default=16)
@@ -244,6 +286,9 @@ def main():
 
     slowdowns = [float(s) for s in args.slowdowns.split(",")]
     backends = args.backends.split(",") if args.backends else None
+    transport = args.transport
+    if args.expected_slaves is not None:
+        transport = "tcp"  # external joins only exist on the real wire
     try:
         rec = run_hetero(
             slowdowns, backends, pipeline=args.pipeline,
@@ -251,7 +296,10 @@ def main():
             microbatches=args.microbatches, c1=args.c1, c2=args.c2,
             batch=args.batch, steps=args.steps,
             partition=args.partition, wire_dtype=args.wire_dtype,
-            bandwidth_mbps=args.bandwidth_mbps, transport=args.transport,
+            bandwidth_mbps=args.bandwidth_mbps, transport=transport,
+            expected_slaves=args.expected_slaves,
+            listen_host=args.listen_host, listen_port=args.listen_port,
+            heartbeat_s=args.heartbeat_s,
         )
         if args.out:
             with open(args.out, "a") as f:

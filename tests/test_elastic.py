@@ -1,0 +1,293 @@
+"""Re-partition conformance: evict/admit on a LIVE cluster must keep
+plans coherent and numerics exact on every partition axis, over both
+transports.
+
+After each membership change the next plan must re-run the comm-aware
+Eq. 1 over exactly the current device set (counts re-sum to the layer's
+units, spatial strips re-tile the image with fresh halos), and a full
+pipelined fwd+bwd train chain must keep matching the single-device VJP.
+Also: the membership bookkeeping itself (stable ids, aligned lists,
+validation of the elastic constructor knobs).
+"""
+import os
+import subprocess
+import time
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.cluster.plans import check_plan, strip_plan
+from repro.core.master_slave import HeteroCluster
+
+TRANSPORTS = ("inproc", "tcp")
+AXES = ("kernel", "spatial", "auto")
+
+
+def _data(seed=4):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(5, 8, 8, 3)).astype(np.float32)
+    w1 = rng.normal(size=(3, 3, 3, 6)).astype(np.float32)
+    w2 = rng.normal(size=(3, 3, 6, 9)).astype(np.float32)
+    g = rng.normal(size=(5, 8, 8, 9)).astype(np.float32)
+    return x, w1, w2, g
+
+
+def _single_device_grads(x, w1, w2, g):
+    import jax
+    import jax.numpy as jnp
+
+    def f(x_, w1_, w2_):
+        y = jax.nn.relu(jax.lax.conv_general_dilated(
+            x_, w1_, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ))
+        y2 = jax.lax.conv_general_dilated(
+            y, w2_, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        return jnp.sum(y2 * g)
+
+    return tuple(
+        np.asarray(a)
+        for a in jax.grad(f, argnums=(0, 1, 2))(
+            jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2)
+        )
+    )
+
+
+def _train_step(c, x, w1, w2, g, evict_mid_step=None):
+    fired = {}
+
+    def between(y):
+        if evict_mid_step is not None and not fired:
+            fired["done"] = True
+            c.evict(evict_mid_step)
+        mask = (y > 0).astype(np.float32)
+        return np.maximum(y, 0.0), lambda gz: gz * mask
+
+    slices = c.microbatch_slices(x.shape[0])
+
+    def head(z, i):
+        return None, g[slices[i]]
+
+    return c.conv_train_chain(x, [w1, w2], [between, None], head)
+
+
+def _assert_matches(res, want, atol=1e-3):
+    dx_want, dw1_want, dw2_want = want
+    np.testing.assert_allclose(res.dx, dx_want, rtol=1e-4, atol=atol)
+    np.testing.assert_allclose(res.dw[0], dw1_want, rtol=1e-4, atol=atol)
+    np.testing.assert_allclose(res.dw[1], dw2_want, rtol=1e-4, atol=atol)
+
+
+def _check_all_plans(c, x, w):
+    """Fresh plans on both axes satisfy the invariants for the CURRENT
+    membership."""
+    n_dev = c.n_slaves + 1
+    kp = c.plan_conv(x.shape, w, "train", partition="kernel")
+    check_plan(kp, w.shape[-1], n_dev)
+    sp = c.plan_conv(x.shape, w, "train", partition="spatial")
+    check_plan(sp, x.shape[1], n_dev)
+    # halos recomputed for the current counts, not inherited
+    rows, halos = strip_plan(x.shape[1], w.shape[0], sp.counts)
+    assert sp.rows == rows and sp.halos == halos
+
+
+@pytest.mark.parametrize("kind", TRANSPORTS)
+@pytest.mark.parametrize("partition", AXES)
+def test_evict_admit_train_chain_matches_vjp(kind, partition):
+    """The conformance bar: train-chain numerics vs the single-device
+    VJP before, after an evict, and after an admit — every axis, both
+    wires.  Finite planning bandwidth exercises the comm-aware Eq. 1
+    re-run on each membership."""
+    x, w1, w2, g = _data()
+    want = _single_device_grads(x, w1, w2, g)
+    c = HeteroCluster(
+        [1.0, 1.0, 1.0], transport=kind, partition=partition,
+        pipeline=True, microbatches=3, bandwidth_mbps=50.0,
+    )
+    try:
+        c.probe_times = [1.0, 1.0, 1.0]
+        _assert_matches(_train_step(c, x, w1, w2, g), want)
+        c.evict(c.slave_ids[-1])
+        assert c.n_slaves == 1
+        _check_all_plans(c, x, w1)
+        _assert_matches(_train_step(c, x, w1, w2, g), want)
+        dev = c.admit(slowdown=1.0, backend="numpy", bandwidth_mbps=50.0,
+                      probe_time=1.0)
+        assert dev not in (None, c.slave_ids[0]) and c.n_slaves == 2
+        _check_all_plans(c, x, w1)
+        _assert_matches(_train_step(c, x, w1, w2, g), want)
+    finally:
+        c.shutdown()
+
+
+@pytest.mark.parametrize("kind", TRANSPORTS)
+def test_graceful_evict_mid_step_drains_on_survivors(kind):
+    """evict() while ops are in flight: the live plans keep naming the
+    retiree, the master absorbs its shards, the step's numerics hold,
+    and the NEXT plans cover only the survivors."""
+    x, w1, w2, g = _data(seed=6)
+    want = _single_device_grads(x, w1, w2, g)
+    c = HeteroCluster([1.0, 1.0, 1.0], transport=kind, pipeline=True,
+                      microbatches=3)
+    try:
+        c.probe_times = [1.0, 1.0, 1.0]
+        res = _train_step(c, x, w1, w2, g, evict_mid_step=c.slave_ids[0])
+        _assert_matches(res, want)
+        assert c.n_slaves == 1
+        assert c.timing.recompute_s > 0.0  # the master really absorbed work
+        assert not c.failures  # graceful: an evict is not a failure
+        _check_all_plans(c, x, w1)
+    finally:
+        c.shutdown()
+
+
+def test_membership_bookkeeping_stays_aligned():
+    """Stable ids never recycle; every per-slot list tracks membership
+    through an evict/admit churn."""
+    c = HeteroCluster([1.0, 1.0, 1.5], bandwidth_mbps=[25.0, 50.0])
+    try:
+        c.probe_times = [1.0, 1.0, 1.5]
+        assert c.slave_ids == [1, 2]
+        c.evict(1)
+        assert c.slave_ids == [2]
+        assert c.slowdowns == [1.0, 1.5]
+        assert c.bandwidths == [50.0]
+        assert c.probe_times == [1.0, 1.5]
+        dev = c.admit(slowdown=2.0, backend="numpy", bandwidth_mbps=10.0,
+                      probe_time=2.0)
+        assert dev == 3  # id 1 is never reused
+        assert c.slave_ids == [2, 3]
+        assert c.slowdowns == [1.0, 1.5, 2.0]
+        assert c.bandwidths == [50.0, 10.0]
+        assert c.probe_times == [1.0, 1.5, 2.0]
+        # Eq. 1 over the new membership: every unit lands somewhere
+        counts = c.shares_for(16)
+        assert counts.sum() == 16 and len(counts) == 3
+        # the 2.0x slave gets the smallest share (largest probe time)
+        assert counts[2] == counts.min()
+    finally:
+        c.shutdown()
+
+
+def test_evict_unknown_device_raises():
+    c = HeteroCluster([1.0, 1.0])
+    try:
+        with pytest.raises(KeyError, match="no live slave"):
+            c.evict(99)
+        c.evict(1)
+        with pytest.raises(KeyError, match="no live slave"):
+            c.evict(1)  # already gone
+    finally:
+        c.shutdown()
+
+
+def test_elastic_constructor_validation():
+    with pytest.raises(ValueError, match="transport='tcp'"):
+        HeteroCluster([1.0], expected_slaves=1)  # inproc can't join
+    with pytest.raises(ValueError, match="ONLY the master"):
+        HeteroCluster([1.0, 1.5], transport="tcp", expected_slaves=1)
+    with pytest.raises(ValueError, match="heartbeat_s"):
+        HeteroCluster([1.0, 1.0], heartbeat_s=0.0)
+    with pytest.raises(ValueError, match="spawn=False"):
+        c = HeteroCluster([1.0, 1.0])
+        try:
+            c.admit(spawn=False)
+        finally:
+            c.shutdown()
+
+
+def test_expected_slaves_requires_auth_token():
+    """An unauthenticated waiting listener would hand any process that
+    can reach it pickle-powered code execution: refuse to start."""
+    env_had = os.environ.pop("REPRO_CLUSTER_AUTH", None)
+    try:
+        with pytest.raises(RuntimeError, match="REPRO_CLUSTER_AUTH"):
+            HeteroCluster([1.0], transport="tcp", expected_slaves=1)
+    finally:
+        if env_had is not None:
+            os.environ["REPRO_CLUSTER_AUTH"] = env_had
+
+
+def test_stray_connections_do_not_abort_join():
+    """A port scanner hitting the listener — connect-and-slam, wrong
+    token — is rejected and SKIPPED; the real joiner behind it in the
+    backlog still gets in.  One bad peer must never abort membership."""
+    import socket as socket_mod
+
+    c = HeteroCluster([1.0, 1.0], transport="tcp")
+    slave = None
+    try:
+        c.probe_times = [1.0, 1.0]
+        host, port = c.listen_address
+        junk1 = socket_mod.create_connection((host, port))
+        junk1.close()  # EOF before any auth bytes
+        junk2 = socket_mod.create_connection((host, port))
+        junk2.sendall(b"\x00" * 32)  # wrong token
+        env = os.environ.copy()
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = os.path.abspath(src) + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+        )
+        env["REPRO_CLUSTER_AUTH"] = c.auth_token_hex
+        slave = subprocess.Popen(
+            [sys.executable, "-m", "repro.core.cluster.protocol",
+             "--host", host, "--port", str(port), "--backend", "numpy"],
+            env=env,
+        )
+        dev = c.admit(spawn=False, timeout_s=60.0, probe_time=1.0)
+        junk2.close()
+        assert c.n_slaves == 2 and dev in c.slave_ids
+    finally:
+        c.shutdown()
+        if slave is not None:
+            assert slave.wait(timeout=10) == 0
+
+
+def test_admit_timeout_raises_not_hangs():
+    """admit(spawn=False) with nobody joining fails loudly and promptly."""
+    c = HeteroCluster([1.0, 1.0], transport="tcp")
+    try:
+        t0 = time.monotonic()
+        with pytest.raises((TimeoutError, OSError)):
+            c.admit(spawn=False, timeout_s=1.0)
+        assert time.monotonic() - t0 < 10.0
+        assert c.n_slaves == 1  # membership untouched
+    finally:
+        c.shutdown()
+
+
+def test_admit_external_join_into_spawned_cluster():
+    """admit(spawn=False): a hand-launched slave joins a RUNNING
+    spawn-mode cluster mid-life, using the cluster's own join secret
+    (auth_token_hex) — grow-while-training, the ISSUE's join path."""
+    c = HeteroCluster([1.0, 1.0], transport="tcp")
+    slave = None
+    try:
+        c.probe_times = [1.0, 1.0]
+        host, port = c.listen_address
+        env = os.environ.copy()
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = os.path.abspath(src) + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+        )
+        env["REPRO_CLUSTER_AUTH"] = c.auth_token_hex
+        slave = subprocess.Popen(
+            [sys.executable, "-m", "repro.core.cluster.protocol",
+             "--host", host, "--port", str(port),
+             "--backend", "numpy", "--slowdown", "1.0"],
+            env=env,
+        )
+        dev = c.admit(spawn=False, timeout_s=60.0, probe_time=1.0)
+        assert dev == 2 and c.n_slaves == 2
+        assert c.backends == ["numpy", "numpy", "numpy"]
+        # the joiner serves real ops
+        x = np.random.default_rng(0).normal(size=(2, 8, 8, 3)).astype(np.float32)
+        w = np.random.default_rng(1).normal(size=(3, 3, 3, 9)).astype(np.float32)
+        y = c.conv_forward(x, w)
+        assert y.shape == (2, 8, 8, 9)
+    finally:
+        c.shutdown()
+        if slave is not None:
+            assert slave.wait(timeout=10) == 0

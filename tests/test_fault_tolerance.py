@@ -1,0 +1,321 @@
+"""Chaos lane: fault injection against the elastic cluster runtime.
+
+The acceptance bar, exercised for real: a TCP slave SIGKILLed in the
+middle of a pipelined train step is DETECTED within the configured
+heartbeat timeout, auto-evicted, its in-flight shards recomputed by the
+master, and the step completes on the survivors with gradients matching
+the single-device VJP — then the next step re-partitions via the
+comm-aware Eq. 1 over the survivors.  A wedged (SIGSTOPped) slave —
+socket open, nothing flowing — trips the heartbeat deadline instead of
+the EOF fast path.  And a slave launched BY HAND via
+``python -m repro.core.cluster.protocol --host H --port P`` joins a
+waiting cluster (the remote-host path, over loopback here).
+"""
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cluster.transport import (
+    SlaveLost,
+    TCPListener,
+    TCPSlaveEndpoint,
+    TCPTransport,
+)
+from repro.core.master_slave import HeteroCluster
+
+
+def _data(seed=4):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(5, 8, 8, 3)).astype(np.float32)
+    w1 = rng.normal(size=(3, 3, 3, 6)).astype(np.float32)
+    w2 = rng.normal(size=(3, 3, 6, 9)).astype(np.float32)
+    g = rng.normal(size=(5, 8, 8, 9)).astype(np.float32)
+    return x, w1, w2, g
+
+
+def _single_device_grads(x, w1, w2, g):
+    import jax
+    import jax.numpy as jnp
+
+    def f(x_, w1_, w2_):
+        y = jax.nn.relu(jax.lax.conv_general_dilated(
+            x_, w1_, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ))
+        y2 = jax.lax.conv_general_dilated(
+            y, w2_, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        return jnp.sum(y2 * g)
+
+    return tuple(
+        np.asarray(a)
+        for a in jax.grad(f, argnums=(0, 1, 2))(
+            jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2)
+        )
+    )
+
+
+def _run_step(c, x, w1, w2, g, fault=None):
+    """One pipelined fwd+bwd train chain; ``fault()`` (if given) fires
+    from the first between-stage callback — i.e. MID-STEP, with conv
+    and bwd ops still in flight on every link."""
+    fired = {}
+
+    def between(y):
+        if fault is not None and not fired:
+            fired["t"] = time.monotonic()
+            fault()
+        mask = (y > 0).astype(np.float32)
+        return np.maximum(y, 0.0), lambda gz: gz * mask
+
+    slices = c.microbatch_slices(x.shape[0])
+
+    def head(z, i):
+        return None, g[slices[i]]
+
+    res = c.conv_train_chain(x, [w1, w2], [between, None], head)
+    return res, fired.get("t")
+
+
+def _assert_matches(res, want, atol=1e-3):
+    dx_want, dw1_want, dw2_want = want
+    np.testing.assert_allclose(res.dx, dx_want, rtol=1e-4, atol=atol)
+    np.testing.assert_allclose(res.dw[0], dw1_want, rtol=1e-4, atol=atol)
+    np.testing.assert_allclose(res.dw[1], dw2_want, rtol=1e-4, atol=atol)
+
+
+def test_sigkill_mid_step_recovers_on_survivors():
+    """SIGKILL one TCP slave while a pipelined train step has ops in
+    flight: the loss is detected within the heartbeat timeout, the
+    victim is auto-evicted, the master absorbs its shards, and the
+    step's gradients still match the single-device VJP.  The NEXT step
+    re-partitions over the survivors and matches too."""
+    x, w1, w2, g = _data()
+    want = _single_device_grads(x, w1, w2, g)
+    c = HeteroCluster(
+        [1.0, 1.0, 1.0], transport="tcp", pipeline=True, microbatches=3,
+        heartbeat_s=2.0,  # timeout 6s; a SIGKILL EOF lands far sooner
+    )
+    try:
+        c.probe_times = [1.0, 1.0, 1.0]
+        victim_proc = c.procs[0]
+        victim_dev = c.slave_ids[0]
+        res, t_kill = _run_step(c, x, w1, w2, g, fault=victim_proc.kill)
+        _assert_matches(res, want)
+        # detection: recorded, attributed, and within the deadline
+        assert len(c.failures) == 1
+        assert c.failures[0]["device"] == victim_dev
+        assert t_kill is not None
+        assert c.failures[0]["t_detected"] - t_kill < c.heartbeat_timeout_s
+        # survivor-only membership, victim reaped, recovery work logged
+        assert c.slave_ids == [2] and c.n_slaves == 1
+        assert victim_proc.returncode is not None
+        assert c.timing.recompute_s > 0.0
+        # the next step re-partitions on the survivors: plans cover
+        # exactly master + 1 slave and numerics hold
+        plan = c.plan_conv(x.shape, w2, "train")
+        assert len(plan.counts) == 2 and int(plan.counts.sum()) == w2.shape[-1]
+        res2, _ = _run_step(c, x, w1, w2, g)
+        _assert_matches(res2, want)
+    finally:
+        c.shutdown()
+
+
+def test_sigstop_wedged_slave_trips_heartbeat_deadline():
+    """A SIGSTOPped slave keeps its socket open — only the heartbeat
+    deadline can unmask it.  The step must still complete correctly,
+    within the timeout + the step's own work."""
+    x, w1, w2, g = _data(seed=7)
+    want = _single_device_grads(x, w1, w2, g)
+    c = HeteroCluster(
+        [1.0, 1.0, 1.0], transport="tcp", pipeline=True, microbatches=3,
+        heartbeat_s=0.25,  # timeout 0.75s: keep the blocked wait short
+    )
+    try:
+        c.probe_times = [1.0, 1.0, 1.0]
+        victim = c.procs[0]
+        res, t_stop = _run_step(
+            c, x, w1, w2, g,
+            fault=lambda: os.kill(victim.pid, signal.SIGSTOP),
+        )
+        _assert_matches(res, want)
+        assert len(c.failures) == 1
+        assert "deadline" in c.failures[0]["error"]
+        # detected via the heartbeat clock, not EOF — and within it
+        # (plus scheduling slack: the master only reads at gathers)
+        assert c.failures[0]["t_detected"] - t_stop < c.heartbeat_timeout_s + 2.0
+        assert c.slave_ids == [2]
+    finally:
+        c.shutdown()
+        # _remove_slot SIGKILLed and reaped the stopped process
+        assert victim.returncode is not None
+
+
+def test_wedged_link_raises_slave_lost_within_deadline():
+    """Transport-level deadline: a link whose peer never beats raises
+    SlaveLost from read_on_master within the configured timeout."""
+    listener = TCPListener()
+    box = {}
+
+    def _connect():
+        box["ep"] = TCPSlaveEndpoint(listener.host, listener.port)
+
+    t = threading.Thread(target=_connect)
+    t.start()
+    chan = TCPTransport(listener.accept(timeout_s=10), heartbeat_timeout_s=0.6)
+    t.join(timeout=10)
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(SlaveLost, match="deadline"):
+            chan.read_on_master()
+        elapsed = time.monotonic() - t0
+        assert 0.5 <= elapsed < 5.0, elapsed
+    finally:
+        chan.close()
+        box["ep"].close()
+        listener.close()
+
+
+def test_mid_frame_stall_trips_deadline():
+    """select() only promises the FIRST byte of a frame: a peer that
+    stalls MID-frame (e.g. SIGSTOPped between chunks of a multi-MB
+    result) must still trip the armed deadline instead of hanging a
+    timeout-less recv forever."""
+    import struct
+
+    listener = TCPListener()
+    box = {}
+
+    def _connect():
+        box["s"] = socket.create_connection((listener.host, listener.port))
+
+    t = threading.Thread(target=_connect)
+    t.start()
+    chan = TCPTransport(listener.accept(timeout_s=10), heartbeat_timeout_s=0.6)
+    t.join(timeout=10)
+    peer = box["s"]
+    try:
+        # header promises 1 MB; only 1 KB ever arrives
+        peer.sendall(struct.pack(">Q", 1 << 20) + b"x" * 1024)
+        t0 = time.monotonic()
+        with pytest.raises(SlaveLost, match="mid-frame"):
+            chan.read_on_master()
+        assert 0.5 <= time.monotonic() - t0 < 5.0
+    finally:
+        chan.close()
+        peer.close()
+        listener.close()
+
+
+def test_heartbeats_keep_slow_link_alive():
+    """The inverse: a peer that beats but answers slowly must NOT be
+    declared lost — heartbeats refresh the deadline."""
+    listener = TCPListener()
+    box = {}
+
+    def _connect():
+        box["ep"] = TCPSlaveEndpoint(listener.host, listener.port)
+
+    t = threading.Thread(target=_connect)
+    t.start()
+    chan = TCPTransport(listener.accept(timeout_s=10), heartbeat_timeout_s=0.6)
+    t.join(timeout=10)
+    ep = box["ep"]
+    try:
+        ep.start_heartbeat(0.15)
+
+        def _slow_reply():
+            time.sleep(1.5)  # >2x the deadline, bridged by heartbeats
+            ep.send(("done", np.arange(3, dtype=np.float32)))
+
+        threading.Thread(target=_slow_reply, daemon=True).start()
+        tag, arr = chan.read_on_master()
+        assert tag == "done"
+        np.testing.assert_array_equal(arr, np.arange(3, dtype=np.float32))
+        # heartbeats are liveness, not protocol traffic: only the real
+        # reply may be accounted
+        assert chan.bytes_to_master == arr.nbytes + 8
+    finally:
+        chan.close()
+        ep.close()
+        listener.close()
+
+
+def test_slave_killed_between_steps_recovers():
+    """A slave dead BEFORE the step starts (no in-flight ops): the
+    first scatter/gather of the next step discovers it, recovery kicks
+    in, and the step completes correctly on the survivors."""
+    x, w1, w2, g = _data(seed=9)
+    want = _single_device_grads(x, w1, w2, g)
+    c = HeteroCluster([1.0, 1.0, 1.0], transport="tcp", pipeline=True,
+                      microbatches=3)
+    try:
+        c.probe_times = [1.0, 1.0, 1.0]
+        c.procs[1].kill()
+        c.procs[1].wait(timeout=10)
+        res, _ = _run_step(c, x, w1, w2, g)
+        _assert_matches(res, want)
+        assert c.slave_ids == [1]
+        assert len(c.failures) == 1 and c.failures[0]["device"] == 2
+    finally:
+        c.shutdown()
+
+
+def test_hand_launched_slave_joins_waiting_cluster():
+    """The remote-host path over loopback: a slave started by hand via
+    ``python -m repro.core.cluster.protocol --host H --port P`` (no
+    --device: the master assigns one) joins a cluster waiting with
+    expected_slaves=1, probes, and serves a real train step."""
+    x, w1, w2, g = _data(seed=11)
+    want = _single_device_grads(x, w1, w2, g)
+    # rendezvous port: bind-and-release (the race window is negligible
+    # on a CI loopback)
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    token = "ab" * 32
+    env = os.environ.copy()
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    env["REPRO_CLUSTER_AUTH"] = token
+    # the slave starts FIRST and retries the connect until the master
+    # binds — the two-terminal ordering an operator would actually hit
+    slave = subprocess.Popen(
+        [sys.executable, "-m", "repro.core.cluster.protocol",
+         "--host", "127.0.0.1", "--port", str(port),
+         "--backend", "numpy", "--heartbeat-s", "0.25",
+         "--connect-timeout-s", "30"],
+        env=env,
+    )
+    os.environ["REPRO_CLUSTER_AUTH"] = token
+    try:
+        c = HeteroCluster(
+            [1.0], transport="tcp", expected_slaves=1,
+            listen_port=port, heartbeat_s=0.25, pipeline=True,
+            microbatches=3,
+        )
+        try:
+            assert c.n_slaves == 1 and c.backends == ["numpy", "numpy"]
+            probe = c.probe(image_size=8, in_channels=3, kernel_size=3,
+                            num_kernels=4, batch=2, repeats=1)
+            assert len(probe) == 2 and all(t > 0 for t in probe)
+            assert c.measured_bandwidths[0] is not None
+            res, _ = _run_step(c, x, w1, w2, g)
+            _assert_matches(res, want)
+        finally:
+            c.shutdown()
+        assert slave.wait(timeout=10) == 0
+    finally:
+        os.environ.pop("REPRO_CLUSTER_AUTH", None)
+        if slave.poll() is None:
+            slave.kill()

@@ -267,13 +267,18 @@ def test_zero_kernel_shard_runs_on_every_backend():
 def test_slave_exception_raises_at_gather():
     """A slave whose backend blows up ships the traceback to the master,
     which raises at the matching gather — no 0%-CPU hang."""
+    from repro.core.cluster.plans import LayerPlan
+
     x, w, _ = _data(b=2, s=4, cout=4, k=3, seed=11)
     c = HeteroCluster([1.0, 1.0])
     try:
         c.probe_times = [1.0, 1.0]
-        p = c._scatter_conv_shards(
-            x, [w[..., :2], "not-an-array"], send_weights=True
+        plan = LayerPlan(
+            "kernel", np.array([2, 2]),
+            shards=[w[..., :2], "not-an-array"],
+            member_ids=tuple(c.slave_ids),
         )
+        p = c._scatter_conv_shards(x, plan, send_weights=True)
         with pytest.raises(RuntimeError, match="slave device 1 failed"):
             c.gather_conv(p)
     finally:
