@@ -10,14 +10,15 @@ master/slave cluster and the data-parallel baseline on this host.
 tiny-shape pass — the CI benchmark-smoke lane.  ``--json`` additionally
 writes the rows as a JSON artifact (the ``BENCH_*.json`` perf
 trajectory).  ``--trajectory OUT`` extracts just the DETERMINISTIC
-trajectory rows (bench_master_slave.TRAJECTORY_ROWS: wire-byte ratios,
-sim-backend gains, the tcp-transport and re-partition overheads,
-comparable across commits) — the CI bench-smoke lane writes them to a
-``BENCH_PR*.json`` at the repo root.
+trajectory rows (the union of each selected module's TRAJECTORY_ROWS:
+wire-byte ratios, sim-backend gains, transport/re-partition overheads,
+the serving lane's req/s + tail latency, comparable across commits) —
+the CI bench-smoke lane writes them to a ``BENCH_PR*.json`` at the
+repo root.
 
 ``--check-against BASELINE`` is the bench-regression GATE: fresh rows
 are compared to a committed ``BENCH_PR*.json`` and the run exits
-non-zero if any higher-is-better gain row (bench_master_slave.GAIN_ROWS)
+non-zero if any higher-is-better gain row (the modules' GAIN_ROWS)
 fell more than ``--regression-tolerance`` (default 20%) below its
 baseline value — the CI bench-smoke lane fails instead of silently
 shipping a perf regression.  Rows present only in one side are
@@ -42,6 +43,7 @@ from benchmarks import (
     bench_master_slave,
     bench_mobile,
     bench_scalability,
+    bench_serve,
     bench_speedup,
 )
 
@@ -56,7 +58,19 @@ MODULES = {
     "master_slave": bench_master_slave,  # Alg 1/2 real wall-clock + the
     #                                      pipelined full-train-step gain
     "kernels": bench_kernels,        # Pallas kernel rooflines + backends
+    "serve": bench_serve,            # continuous-batching serving lane:
+    #                                  req/s + tail latency over the cluster
 }
+
+
+def _rows_attr(mods: dict, attr: str) -> tuple:
+    """Union (order-preserving) of a row-name tuple (TRAJECTORY_ROWS /
+    GAIN_ROWS) across the SELECTED modules — a --only subset never
+    demands rows its modules cannot produce."""
+    names = []
+    for mod in mods.values():
+        names.extend(getattr(mod, attr, ()))
+    return tuple(dict.fromkeys(names))
 
 
 def main() -> None:
@@ -115,7 +129,7 @@ def main() -> None:
             json.dump({"smoke": args.smoke, "rows": records}, f, indent=2)
         print(f"# wrote {len(records)} rows to {args.json}", file=sys.stderr)
     if args.trajectory:
-        wanted = set(bench_master_slave.TRAJECTORY_ROWS)
+        wanted = set(_rows_attr(mods, "TRAJECTORY_ROWS"))
         traj = [r for r in records if r["name"] in wanted]
         missing = sorted(wanted - {r["name"] for r in traj})
         with open(args.trajectory, "w") as f:
@@ -127,19 +141,22 @@ def main() -> None:
             failed += 1
     if args.check_against:
         failed += check_against(
-            records, args.check_against, args.regression_tolerance
+            records, args.check_against, args.regression_tolerance,
+            gain_rows=_rows_attr(mods, "GAIN_ROWS"),
         )
     if failed:
         raise SystemExit(1)
 
 
-def check_against(records, baseline_path: str, tolerance: float) -> int:
+def check_against(records, baseline_path: str, tolerance: float,
+                  gain_rows=None) -> int:
     """The bench-regression gate: every gain row present in BOTH the
     fresh records and the committed baseline must satisfy
     ``fresh >= baseline * (1 - tolerance)``.  Returns the number of
     failures (regressions, or an empty comparison — a gate that
     compares nothing must not pass green)."""
-    from benchmarks.bench_master_slave import GAIN_ROWS
+    if gain_rows is None:
+        gain_rows = _rows_attr(MODULES, "GAIN_ROWS")
 
     with open(baseline_path) as f:
         base_rows = {
@@ -149,7 +166,7 @@ def check_against(records, baseline_path: str, tolerance: float) -> int:
     fresh_rows = {r["name"]: float(r["us_per_call"]) for r in records}
     compared = 0
     regressions = []
-    for name in GAIN_ROWS:
+    for name in gain_rows:
         if name not in base_rows:
             print(f"# gate: {name} has no baseline yet (new row); skipped",
                   file=sys.stderr)

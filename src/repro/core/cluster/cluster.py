@@ -824,6 +824,19 @@ class HeteroCluster:
     def predict_partition_seconds(
         self, x_shape, w_shape, op: str = "conv"
     ) -> Dict[str, float]:
+        """Predicted wall-clock per partition mode for one layer —
+        the Eq. 1(+comm) model over this cluster's probe times and
+        link bandwidths (see ``plans.predict_partition_seconds``).
+
+        Args:
+            x_shape: input activation shape ``(B, H, W, Cin)``.
+            w_shape: kernel shape ``(kh, kw, Cin, Cout)``.
+            op: ``"conv"`` | ``"bwd"`` | ``"train"`` — which sweep(s)
+                the prediction weighs.
+
+        Returns:
+            dict mode -> predicted seconds, for every eligible mode.
+        """
         return plans.predict_partition_seconds(self, x_shape, w_shape, op)
 
     def _resolve_mode(
@@ -835,6 +848,21 @@ class HeteroCluster:
         self, x_shape, w: np.ndarray, op: str = "conv",
         partition: Optional[str] = None,
     ) -> plans.LayerPlan:
+        """Build the partition plan one conv layer rides: resolve the
+        split axis, cut the Eq. 1(+comm) shares over the CURRENT
+        membership, and pre-split kernels/rows/halos.
+
+        Args:
+            x_shape: input activation shape ``(B, H, W, Cin)``.
+            w: the layer's full kernel ``(kh, kw, Cin, Cout)``.
+            op: ``"conv"`` | ``"bwd"`` | ``"train"`` — what the plan
+                will be used for (weighs the auto-axis choice).
+            partition: per-call override of the cluster's axis
+                (``"kernel"`` | ``"spatial"`` | ``"auto"``).
+
+        Returns:
+            A ``plans.LayerPlan`` naming members by stable slave id.
+        """
         return plans.plan_conv(self, x_shape, w, op, partition)
 
     # -- async scatter/gather halves -------------------------------------
@@ -931,6 +959,19 @@ class HeteroCluster:
         self, x: np.ndarray, w: np.ndarray, g: np.ndarray,
         *, partition: Optional[str] = None,
     ) -> scheduler.Pending:
+        """Issue the backward (VJP) halves: plan, ship each member its
+        input + kernel shard + grad slice, defer the master's own
+        shard.  Pair with ``gather_bwd``.
+
+        Args:
+            x: the layer's forward input ``(B, H, W, Cin)``.
+            w: the layer's full kernel.
+            g: upstream gradient wrt the layer output.
+            partition: per-call partition-axis override.
+
+        Returns:
+            The in-flight ``Pending`` (op ``"bwd"``) to gather.
+        """
         x = np.asarray(x, np.float32)
         g = np.asarray(g, np.float32)
         plan = self.plan_conv(x.shape, w, "bwd", partition)
@@ -1123,22 +1164,39 @@ class HeteroCluster:
         return max(1, min(self.microbatches, batch))
 
     def microbatch_slices(self, batch: int) -> List[slice]:
+        """The batch-axis slices the pipelined schedules will cut —
+        drivers split labels/targets identically (see
+        ``scheduler.microbatch_slices``)."""
         return scheduler.microbatch_slices(self, batch)
 
     def conv_forward(self, x, w, *, partition: Optional[str] = None):
+        """Distributed convolution of one layer; microbatches are
+        double-buffered when the cluster is pipelined.  See
+        ``scheduler.conv_forward``."""
         return scheduler.conv_forward(self, x, w, partition=partition)
 
     def conv_backward(self, x, w, g, *, partition: Optional[str] = None):
+        """Distributed VJP of one layer: returns ``(dx, dw)``.  See
+        ``scheduler.conv_backward``."""
         return scheduler.conv_backward(self, x, w, g, partition=partition)
 
     def conv_forward_chain(self, x, layer_weights, between=None):
+        """Forward pass of consecutive conv layers with master-only
+        ``between`` stages pipelined against slave compute.  See
+        ``scheduler.conv_forward_chain``."""
         return scheduler.conv_forward_chain(self, x, layer_weights, between)
 
     def conv_train_chain(self, x, layer_weights, between=None, head=None):
+        """One fully-pipelined distributed training step (forward +
+        backward) over consecutive conv layers; returns a
+        ``TrainStepResult``.  See ``scheduler.conv_train_chain``."""
         return scheduler.conv_train_chain(self, x, layer_weights, between, head)
 
     def conv_train_step(self, x, layer_weights, between=None, head=None, *,
                         update=None):
+        """``conv_train_chain`` plus the optimizer step on the conv
+        kernels: returns ``(new_weights, TrainStepResult)``.  See
+        ``scheduler.conv_train_step``."""
         return scheduler.conv_train_step(
             self, x, layer_weights, between, head, update=update
         )
@@ -1146,15 +1204,22 @@ class HeteroCluster:
     # ---------------------------------------------------------------------
     @property
     def comm_bytes(self) -> int:
+        """Total bytes crossed master<->slave links since the last
+        ``reset_stats`` (canonical codec accounting, both ways)."""
         return sum(s.total_bytes for s in self.sockets)
 
     def reset_stats(self):
+        """Zero the timing breakdown, the comp-duty marks, and every
+        link's byte counters (benchmarks call this between phases)."""
         self.timing = scheduler.LayerTiming()
         self._duty_mark = (0.0, 0.0)
         for s in self.sockets:
             s.reset_counters()
 
     def shutdown(self):
+        """Tear the cluster down: every live slave is told to exit
+        (``TRAIN_OVER``), joined/reaped, and every link closed.
+        Idempotent; also runs at interpreter exit via ``atexit``."""
         if self._shut:
             return
         self._shut = True

@@ -38,6 +38,9 @@ from repro.core.cluster.plans import LayerPlan, plan_conv
 
 @dataclasses.dataclass
 class LayerTiming:
+    """Wall-clock breakdown of the cluster's work, accumulated across
+    ops until ``reset_stats``; every field is seconds."""
+
     comm_s: float = 0.0         # scatter writes (master -> slave links)
     conv_s: float = 0.0         # conv phase: master's shard + gather
     comp_s: float = 0.0         # non-conv layers (master only)
@@ -351,6 +354,105 @@ def conv_train_chain(
         dw=[d for d in dw],
         dx=np.concatenate(dxs, axis=0) if n > 1 else dxs[0],
     )
+
+
+class ServeChain:
+    """Cross-batch pipelined forward chain for the serving lane.
+
+    ``conv_forward_chain`` pipelines microbatches WITHIN one batch;
+    a request server instead sees a stream of small, irregular batches
+    and wants batch k+1's layer-0 scatter on the wire while batch k's
+    final layer is still computing on the slaves.  ``push(x)`` issues
+    exactly that overlap and keeps ONE batch in flight:
+
+        push(x_k+1):  scatter L0(x_k+1)      # rides the links while ...
+                      gather  L-1(x_k)       # ... batch k finishes
+                      gather/scatter L1..L-1(x_k+1), leave L-1 pending
+                      -> returns batch k's output (None on first push)
+
+    Gathers stay in global scatter order, so the transport FIFO
+    contract holds across batch boundaries.  Plans are rebuilt per
+    push from the batch's actual shape and the CURRENT membership, so
+    an ``admit()``/``evict()`` between pushes is picked up at the next
+    batch — and a ``SlaveLost`` mid-batch drains on the survivors via
+    the ``Pending`` recovery path, invisible here.
+
+    Args:
+        cluster: the ``HeteroCluster`` to serve through.
+        layer_weights: conv kernel per layer, ``(kh, kw, cin, cout)``.
+        between: optional master-only stage after each layer,
+            ``f(y) -> z`` (None = identity); ``between[k]`` runs after
+            layer k, including the final layer (applied at the NEXT
+            push, or at ``flush()``).
+    """
+
+    def __init__(
+        self,
+        cluster,
+        layer_weights: Sequence[np.ndarray],
+        between: Optional[Sequence[Optional[Callable[[np.ndarray], np.ndarray]]]] = None,
+    ):
+        if between is None:
+            between = [None] * len(layer_weights)
+        assert len(layer_weights) >= 1 and len(between) == len(layer_weights)
+        self.cluster = cluster
+        self.weights = [np.asarray(w, np.float32) for w in layer_weights]
+        self.between = list(between)
+        self._tail: Optional[Pending] = None  # previous batch's final layer
+
+    def _finish_tail(self) -> Optional[np.ndarray]:
+        """Gather the previous batch's final layer and run its between
+        stage.  Returns None when no batch is in flight."""
+        if self._tail is None:
+            return None
+        y = self.cluster.gather_conv(self._tail)
+        self._tail = None
+        f = self.between[-1]
+        out = self.cluster._master_comp(f, y) if f else y
+        self.cluster._update_comp_duty()
+        return out
+
+    def push(self, x: np.ndarray) -> Optional[np.ndarray]:
+        """Feed one batch into the pipeline.
+
+        Args:
+            x: batch input ``(B, H, W, Cin)``, any float dtype.
+
+        Returns:
+            The PREVIOUS pushed batch's chain output (its final-layer
+            between stage applied), or None on the first push.
+
+        Raises:
+            SlaveError: a slave raised while computing a shard (the
+                batch cannot be recovered; membership faults are NOT
+                errors — those drain on the survivors).
+        """
+        cluster, weights, between = self.cluster, self.weights, self.between
+        x = np.asarray(x, np.float32)
+        # batch k+1's first scatter goes out BEFORE batch k's last
+        # gather: its bytes ride the links while the slaves still
+        # compute batch k's final layer
+        plan = plan_conv(cluster, x.shape, weights[0], "conv")
+        p = cluster._scatter_conv_planned(x, plan, True)
+        prev_out = self._finish_tail()
+        for k in range(1, len(weights)):
+            y = cluster.gather_conv(p)
+            f = between[k - 1]
+            y = cluster._master_comp(f, y) if f else y
+            plan = plan_conv(cluster, y.shape, weights[k], "conv")
+            p = cluster._scatter_conv_planned(y, plan, True)
+        self._tail = p
+        return prev_out
+
+    def flush(self) -> Optional[np.ndarray]:
+        """Drain the pipeline: finish the in-flight batch (if any) and
+        return its output, or None when the pipeline is empty."""
+        return self._finish_tail()
+
+    @property
+    def in_flight(self) -> bool:
+        """Whether a pushed batch is still awaiting its final gather."""
+        return self._tail is not None
 
 
 def conv_train_step(

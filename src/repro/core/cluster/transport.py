@@ -68,6 +68,8 @@ HEARTBEAT = "hb"  # liveness frame tag: (HEARTBEAT, seq), never an op
 
 
 def is_heartbeat(obj) -> bool:
+    """Whether a received frame is a liveness beat (``(HEARTBEAT,
+    seq)``) rather than an op result."""
     # the first-element type check matters: op results are tuples too,
     # and ``ndarray == str`` compares elementwise
     return (
@@ -100,22 +102,31 @@ class Transport(abc.ABC):
 
     @abc.abstractmethod
     def write_to_slave(self, obj) -> None:
+        """Queue one message toward the slave; must return without
+        blocking on delivery (comm overlaps compute).  Raises
+        SlaveLost/RuntimeError when the link is known down."""
         ...
 
     @abc.abstractmethod
     def read_on_master(self):
+        """Block for the slave's next op result (heartbeats are
+        filtered out).  Raises SlaveLost on EOF, writer failure, or a
+        missed heartbeat deadline."""
         ...
 
     @property
     def total_bytes(self) -> int:
+        """Bytes crossed in both directions since the last reset
+        (encoded wire size, not in-memory size)."""
         return self.bytes_to_slave + self.bytes_to_master
 
     def reset_counters(self) -> None:
+        """Zero both directions' byte counters."""
         self.bytes_to_slave = 0
         self.bytes_to_master = 0
 
     def close(self) -> None:
-        ...
+        """Release link resources; default is a no-op."""
 
     def measure_bandwidth_mbps(self, **_kw) -> Optional[float]:
         """Measured link speed in Mbps, or None when the link has no
@@ -206,6 +217,8 @@ class InProcTransport(Transport):
         return codec.decode(obj, self.wire_dtype)
 
     def write_to_slave(self, obj):
+        """Count + (optionally) encode, then queue toward the slave —
+        through the bandwidth-emulating stage when the link is finite."""
         if self.wire_dtype is not None:
             obj = self._encode(obj)
         n = self._nbytes(obj)
@@ -217,6 +230,7 @@ class InProcTransport(Transport):
             self.to_slave.put(obj)
 
     def write_to_master(self, obj):
+        """Slave-side mirror of ``write_to_slave``."""
         if self.wire_dtype is not None:
             obj = self._encode(obj)
         n = self._nbytes(obj)
@@ -228,18 +242,21 @@ class InProcTransport(Transport):
             self.to_master.put(obj)
 
     def read_on_slave(self):
+        """Block for the master's next message (slave side)."""
         obj = self.to_slave.get()
         return self._decode(obj) if self.wire_dtype is not None else obj
 
     def read_on_master(self):
+        """Block for the slave's next result, decoding the wire dtype."""
         obj = self.to_master.get()
         return self._decode(obj) if self.wire_dtype is not None else obj
 
     def slave_endpoint(self) -> _InProcSlaveEndpoint:
+        """The send/recv pair the slave thread drives."""
         return _InProcSlaveEndpoint(self)
 
     def measure_bandwidth_mbps(self, **_kw) -> Optional[float]:
-        # the emulated knob IS the link speed; None = infinitely fast
+        """The emulated knob IS the link speed; None = infinitely fast."""
         return self.bandwidth_mbps
 
 
@@ -291,11 +308,20 @@ class TCPListener:
         self.host, self.port = self._sock.getsockname()[:2]
 
     def accept(self, timeout_s: float = 60.0) -> socket.socket:
+        """Block for one inbound slave connection.
+
+        Args:
+            timeout_s: seconds before ``socket.timeout`` is raised.
+
+        Returns:
+            The accepted (pre-handshake) connection socket.
+        """
         self._sock.settimeout(timeout_s)
         conn, _addr = self._sock.accept()
         return conn
 
     def close(self) -> None:
+        """Close the listening socket (accepted links live on)."""
         try:
             self._sock.close()
         except OSError:  # pragma: no cover - already closed
@@ -373,6 +399,9 @@ class TCPTransport(Transport):
             raise SlaveLost("TCP link already marked lost")
 
     def write_to_slave(self, obj):
+        """Encode + frame ``obj`` and queue it to the writer thread;
+        returns immediately.  Raises SlaveLost when the link is marked
+        lost or the writer already failed."""
         self._check_lost()
         self._check_writer()
         if self.wire_dtype is not None:
@@ -444,6 +473,7 @@ class TCPTransport(Transport):
             )
 
     def reset_counters(self) -> None:
+        """Zero the canonical AND the on-the-wire frame byte counters."""
         super().reset_counters()
         self.frame_bytes_to_slave = 0
         self.frame_bytes_to_master = 0
@@ -485,6 +515,8 @@ class TCPTransport(Transport):
         return best
 
     def close(self) -> None:
+        """Stop the writer thread and shut the socket down both ways;
+        idempotent."""
         if self._closed:
             return
         self._closed = True
@@ -549,6 +581,8 @@ class TCPSlaveEndpoint:
             self._conn.sendall(auth_token)
 
     def send(self, obj) -> None:
+        """Encode + frame ``obj`` to the master, serialized under the
+        send lock (results and heartbeats share the socket)."""
         if self.wire_dtype is not None:
             obj = codec.encode(obj, self.wire_dtype)
         payload = _dumps(obj)
@@ -556,6 +590,7 @@ class TCPSlaveEndpoint:
             _send_frame(self._conn, payload)
 
     def recv(self):
+        """Block for the master's next frame, decoded."""
         obj = pickle.loads(_recv_frame(self._conn))
         return codec.decode(obj, self.wire_dtype) if self.wire_dtype is not None else obj
 
@@ -579,6 +614,7 @@ class TCPSlaveEndpoint:
         return t
 
     def close(self) -> None:
+        """Close the slave-side socket."""
         try:
             self._conn.close()
         except OSError:  # pragma: no cover - already closed

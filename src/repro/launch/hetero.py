@@ -211,6 +211,113 @@ def run_hetero(
         cluster.shutdown()
 
 
+def run_serve(
+    slowdowns,
+    backends=None,
+    *,
+    microbatches: int = 4,
+    c1: int = 8,
+    c2: int = 16,
+    requests: int = 20,
+    deadline_s=30.0,
+    max_batch: int = 4,
+    image_size: int = 16,
+    partition: str = "kernel",
+    wire_dtype=None,
+    bandwidth_mbps=None,
+    transport: str = "inproc",
+    expected_slaves=None,
+    listen_host: str = "127.0.0.1",
+    listen_port: int = 0,
+    heartbeat_s=None,
+    seed: int = 0,
+) -> dict:
+    """Serve ``requests`` synthetic conv-chain requests through a
+    ``ClusterServer`` (continuous batching over the pipelined cluster)
+    and report throughput + tail latency.  Doubles as the CI
+    serve-smoke: the returned record carries ``all_ok`` and the CLI
+    exits nonzero unless every request completed under its deadline."""
+    from repro.serve.server import ClusterServer
+
+    rng = np.random.default_rng(seed)
+    k = 5
+    weights = [
+        rng.standard_normal((k, k, 3, c1)).astype(np.float32) * 0.1,
+        rng.standard_normal((k, k, c1, c2)).astype(np.float32) * 0.1,
+    ]
+
+    def _relu_pool(y):
+        """Master-only stage after each conv: ReLU + 2x2 max-pool
+        (numpy — the serve loop drives the cluster directly)."""
+        y = np.maximum(y, 0.0)
+        b, h, w, c = y.shape
+        return y.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+    feat = image_size // 4
+    fc = rng.standard_normal((feat * feat * c2, 10)).astype(np.float32) * 0.01
+
+    def _head(z):
+        return z.reshape(z.shape[0], -1) @ fc
+
+    cluster = HeteroCluster(
+        slowdowns, backends,
+        pipeline=True, microbatches=microbatches,
+        partition=partition, wire_dtype=wire_dtype,
+        bandwidth_mbps=bandwidth_mbps, transport=transport,
+        expected_slaves=expected_slaves,
+        listen_host=listen_host, listen_port=listen_port,
+        heartbeat_s=heartbeat_s,
+    )
+    try:
+        cluster.probe(image_size=image_size, in_channels=3, kernel_size=k,
+                      num_kernels=max(8, c1), batch=max_batch)
+        print(f"serving: slowdowns={list(cluster.slowdowns)} "
+              f"backends={cluster.backends} transport={transport} "
+              f"max_batch={max_batch} deadline_s={deadline_s}")
+        server = ClusterServer(
+            cluster, weights, between=[_relu_pool, _relu_pool], head=_head,
+            max_batch=max_batch, max_queue=max(2 * requests, 16),
+            default_deadline_s=deadline_s,
+        )
+        t0 = time.perf_counter()
+        with server:
+            futs = [
+                server.submit(
+                    rng.standard_normal((image_size, image_size, 3))
+                    .astype(np.float32)
+                )
+                for _ in range(requests)
+            ]
+            resps = [f.result(timeout=600.0) for f in futs]
+        wall = time.perf_counter() - t0
+        stats = server.stats()
+        statuses = sorted({r.status for r in resps})
+        all_ok = all(r.status == "ok" for r in resps)
+        rec = {
+            "mode": "serve",
+            "transport": transport,
+            "requests": requests,
+            "max_batch": max_batch,
+            "deadline_s": deadline_s,
+            "statuses": statuses,
+            "all_ok": all_ok,
+            "retries": sum(r.retries for r in resps),
+            "failures": list(cluster.failures),
+            "wall_s": wall,
+            "throughput_rps": requests / wall,
+            "p50_ms": stats["p50_ms"],
+            "p99_ms": stats["p99_ms"],
+            "comm_mb": cluster.comm_bytes / 2 ** 20,
+        }
+        print(f"{requests} requests in {wall:.2f}s -> "
+              f"{rec['throughput_rps']:.1f} req/s  "
+              f"p50={stats['p50_ms']:.1f}ms p99={stats['p99_ms']:.1f}ms  "
+              f"statuses={statuses} retries={rec['retries']}")
+        return rec
+    finally:
+        cluster.shutdown()
+
+
 def _clean_exit(code: int) -> None:
     """Flush and leave through ``os._exit``: the ROADMAP pre-existing
     hang — an ``xla`` slave completes its steps, prints results, then
@@ -276,6 +383,19 @@ def main():
                          "declares a silent link dead after 3x (tcp "
                          "only); hand-launched slaves must pass the "
                          "same --heartbeat-s themselves")
+    ap.add_argument("--serve", action="store_true",
+                    help="serve a stream of forward-pass requests through "
+                         "the continuous-batching ClusterServer instead of "
+                         "training (see docs/serving.md); exits nonzero "
+                         "unless every request completes under deadline")
+    ap.add_argument("--requests", type=int, default=20,
+                    help="synthetic requests to serve with --serve")
+    ap.add_argument("--deadline-s", type=float, default=30.0,
+                    help="per-request deadline for --serve")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="dynamic-batching slot count for --serve")
+    ap.add_argument("--image-size", type=int, default=16,
+                    help="request image height/width for --serve")
     ap.add_argument("--microbatches", type=int, default=4)
     ap.add_argument("--c1", type=int, default=8)
     ap.add_argument("--c2", type=int, default=16)
@@ -290,6 +410,22 @@ def main():
     if args.expected_slaves is not None:
         transport = "tcp"  # external joins only exist on the real wire
     try:
+        if args.serve:
+            rec = run_serve(
+                slowdowns, backends,
+                microbatches=args.microbatches, c1=args.c1, c2=args.c2,
+                requests=args.requests, deadline_s=args.deadline_s,
+                max_batch=args.max_batch, image_size=args.image_size,
+                partition=args.partition, wire_dtype=args.wire_dtype,
+                bandwidth_mbps=args.bandwidth_mbps, transport=transport,
+                expected_slaves=args.expected_slaves,
+                listen_host=args.listen_host, listen_port=args.listen_port,
+                heartbeat_s=args.heartbeat_s,
+            )
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+            _clean_exit(0 if rec["all_ok"] else 1)
         rec = run_hetero(
             slowdowns, backends, pipeline=args.pipeline,
             train_pipeline=args.train_pipeline,

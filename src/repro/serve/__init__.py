@@ -1,1 +1,20 @@
-from repro.serve.engine import ServeEngine, make_serve_step, make_prefill_step  # noqa: F401
+"""The serving lane: ``engine.py`` (LLM prefill + step-wise decode over
+a KV/SSM cache) and ``server.py`` (the continuous-batching request
+server over an elastic ``HeteroCluster``).  Attribute access is lazy so
+importing the cluster server never pays for jax."""
+from repro.lazy import lazy_exports
+
+_EXPORTS = {
+    "ServeEngine": ".engine",
+    "make_serve_step": ".engine",
+    "make_prefill_step": ".engine",
+    "ClusterServer": ".server",
+    "AutoScaler": ".server",
+    "RequestQueue": ".server",
+    "ServeFuture": ".server",
+    "ServeResponse": ".server",
+}
+
+__all__ = sorted(_EXPORTS)
+
+__getattr__, __dir__ = lazy_exports(__name__, globals(), _EXPORTS)

@@ -55,7 +55,12 @@ def make_prefill_step(api: ModelApi, run: RunConfig, *, mesh=None,
 
 @dataclasses.dataclass
 class ServeEngine:
-    """Eager convenience wrapper used by the examples: batched generate."""
+    """Eager convenience wrapper around prefill + decode: batched
+    ``generate``.  Exercised by ``examples/serve_batched.py`` (the
+    three cache regimes), ``launch/serve.py`` (the CLI), and
+    ``tests/test_serve.py``; the cluster-backed request server is
+    separate — ``serve/server.py``, demoed by
+    ``examples/serve_cluster.py``."""
 
     api: ModelApi
     run: RunConfig

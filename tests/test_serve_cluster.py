@@ -1,0 +1,368 @@
+"""The continuous-batching serving lane (serve/server.py + ServeChain):
+
+- ServeChain's cross-batch pipeline must match the per-batch forward
+  chain exactly (FIFO holds across batch boundaries),
+- deadlines expire queued requests instead of computing them,
+- admission control rejects beyond max_queue,
+- requests joining a partially-filled batch between decode steps keep
+  solo-run numerics,
+- a SlaveLost mid-request completes on the survivors and surfaces as a
+  retry count, not an error,
+- the autoscaler admits/evicts at its thresholds (fake clock, no
+  sleeps).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.backends import get_backend
+from repro.core.cluster.scheduler import ServeChain
+from repro.core.master_slave import HeteroCluster
+from repro.serve.server import (
+    AutoScaler,
+    ClusterServer,
+    RequestQueue,
+    ServeFuture,
+)
+from repro.serve.server import _Request
+
+
+def _relu(y):
+    return np.maximum(y, 0.0)
+
+
+def _ref_chain(x, weights, between):
+    """Single-host reference: numpy conv + the between stages.  Accepts
+    one (H, W, Cin) image or a (B, H, W, Cin) batch."""
+    nb = get_backend("numpy")
+    y = np.asarray(x, np.float32)
+    single = y.ndim == 3
+    if single:
+        y = y[None]
+    for w, f in zip(weights, between):
+        y = nb.conv(y, w)
+        if f is not None:
+            y = f(y)
+    return y[0] if single else y
+
+
+def _weights(rng, chans):
+    return [rng.standard_normal((3, 3, cin, cout)).astype(np.float32) * 0.1
+            for cin, cout in zip(chans, chans[1:])]
+
+
+class FakeClock:
+    """Deterministic monotonic clock for queue/deadline/scaler tests."""
+
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _req(rid, clock, deadline_s=None, steps=1):
+    x = np.zeros((4, 4, 3), np.float32)
+    deadline = None if deadline_s is None else clock() + deadline_s
+    return _Request(rid, x, deadline, steps, 0, ServeFuture(), clock())
+
+
+# ---------------------------------------------------------------- chain
+
+
+def test_serve_chain_matches_forward_chain():
+    """Pushing a stream of differently-sized batches through the
+    cross-batch pipeline must reproduce conv_forward_chain exactly —
+    outputs come back one push late, in order."""
+    rng = np.random.default_rng(0)
+    weights = _weights(rng, [3, 8, 8])
+    between = [_relu, _relu]
+    batches = [rng.standard_normal((b, 8, 8, 3)).astype(np.float32)
+               for b in (3, 1, 4, 2)]
+    c = HeteroCluster([1.0, 1.0, 1.5], pipeline=True, microbatches=2)
+    try:
+        c.probe_times = [1.0, 1.0, 1.5]
+        chain = ServeChain(c, weights, between)
+        outs = []
+        for x in batches:
+            y = chain.push(x)
+            if y is not None:
+                outs.append(y)
+        assert chain.in_flight
+        outs.append(chain.flush())
+        assert not chain.in_flight and chain.flush() is None
+        assert len(outs) == len(batches)
+        for x, y in zip(batches, outs):
+            np.testing.assert_allclose(
+                y, _ref_chain(x, weights, between), rtol=1e-5, atol=1e-5
+            )
+    finally:
+        c.shutdown()
+
+
+# ------------------------------------------------- queue and admission
+
+
+def test_request_queue_expires_stale_heads_fake_clock():
+    clock = FakeClock()
+    q = RequestQueue(max_depth=8, clock=clock)
+    assert q.offer(_req(0, clock, deadline_s=1.0))
+    assert q.offer(_req(1, clock, deadline_s=None))
+    assert q.offer(_req(2, clock, deadline_s=5.0))
+    clock.advance(2.0)  # request 0 is now past deadline
+    ready, expired = q.take(max_n=2)
+    assert [r.request_id for r in expired] == [0]
+    # the stale head never blocks live traffic and costs no slot
+    assert [r.request_id for r in ready] == [1, 2]
+    assert len(q) == 0
+
+
+def test_request_queue_admission_control():
+    clock = FakeClock()
+    q = RequestQueue(max_depth=2, clock=clock)
+    assert q.offer(_req(0, clock))
+    assert q.offer(_req(1, clock))
+    assert not q.offer(_req(2, clock))  # full: admission-control reject
+    ready, _ = q.take(max_n=10)
+    assert len(ready) == 2 and q.offer(_req(3, clock))
+
+
+def test_server_rejects_when_queue_full_and_expires_dead_requests():
+    """End-to-end admission control + deadline expiry: requests beyond
+    max_queue resolve 'rejected' immediately; a request whose deadline
+    already passed resolves 'expired' without being computed."""
+    rng = np.random.default_rng(1)
+    weights = _weights(rng, [3, 8])
+    c = HeteroCluster([1.0, 1.0], pipeline=True, microbatches=2)
+    try:
+        c.probe_times = [1.0, 1.0]
+        server = ClusterServer(c, weights, max_batch=2, max_queue=2)
+        x = rng.standard_normal((6, 6, 3)).astype(np.float32)
+        # not started yet: the queue fills and the third submit bounces
+        f1 = server.submit(x)
+        f2 = server.submit(x, deadline_s=-1.0)  # already past deadline
+        f3 = server.submit(x)
+        r3 = f3.result(timeout=1.0)
+        assert r3.status == "rejected" and "queue full" in r3.detail
+        with server:
+            assert f1.result(timeout=30.0).status == "ok"
+            r2 = f2.result(timeout=30.0)
+        assert r2.status == "expired" and r2.output is None
+        s = server.stats()
+        assert (s["completed"], s["rejected"], s["expired"]) == (1, 1, 1)
+    finally:
+        c.shutdown()
+
+
+def test_submit_validates_input():
+    rng = np.random.default_rng(2)
+    c = HeteroCluster([1.0, 1.0], pipeline=True, microbatches=2)
+    try:
+        c.probe_times = [1.0, 1.0]
+        server = ClusterServer(c, _weights(rng, [3, 8]), max_batch=2)
+        with pytest.raises(ValueError, match="H, W, Cin"):
+            server.submit(np.zeros((2, 6, 6, 3), np.float32))
+        with pytest.raises(ValueError, match="step_fn"):
+            server.submit(np.zeros((6, 6, 3), np.float32), steps=3)
+    finally:
+        c.shutdown()
+
+
+# --------------------------------------------------- continuous batching
+
+
+def test_batch_join_between_steps_preserves_solo_numerics():
+    """Multi-step requests re-enter the ready set between decode steps
+    and join whatever partially-filled batch forms next; every
+    request's outputs must match a solo (one-at-a-time) run."""
+    rng = np.random.default_rng(3)
+    weights = _weights(rng, [8, 8])  # cin == cout: outputs feed back
+    between = [_relu]
+
+    def step_fn(x, y, step):
+        return 0.5 * y + 0.25 * x  # next decode input mixes state + output
+
+    reqs = [(rng.standard_normal((6, 6, 8)).astype(np.float32), steps)
+            for steps in (3, 1, 2, 3, 2)]
+
+    def solo(x, steps):
+        y = None
+        for s in range(steps):
+            y = _ref_chain(x, weights, between)
+            if s + 1 < steps:
+                x = step_fn(x, y, s + 1)
+        return y
+
+    c = HeteroCluster([1.0, 1.0, 1.5], pipeline=True, microbatches=2)
+    try:
+        c.probe_times = [1.0, 1.0, 1.5]
+        server = ClusterServer(
+            c, weights, between=between, step_fn=step_fn, max_batch=3,
+        )
+        with server:
+            futs = [server.submit(x, steps=s) for x, s in reqs]
+            resps = [f.result(timeout=60.0) for f in futs]
+        assert [r.status for r in resps] == ["ok"] * len(reqs)
+        assert [r.steps for r in resps] == [s for _, s in reqs]
+        for (x, s), r in zip(reqs, resps):
+            np.testing.assert_allclose(
+                r.output, solo(x, s), rtol=1e-4, atol=1e-5,
+                err_msg=f"request with {s} steps diverged from solo run",
+            )
+    finally:
+        c.shutdown()
+
+
+def test_head_applied_per_finished_request():
+    rng = np.random.default_rng(4)
+    weights = _weights(rng, [3, 8])
+    fc = rng.standard_normal((6 * 6 * 8, 5)).astype(np.float32)
+
+    def head(z):
+        return z.reshape(z.shape[0], -1) @ fc
+
+    c = HeteroCluster([1.0, 1.0], pipeline=True, microbatches=2)
+    try:
+        c.probe_times = [1.0, 1.0]
+        xs = [rng.standard_normal((6, 6, 3)).astype(np.float32)
+              for _ in range(3)]
+        with ClusterServer(c, weights, head=head, max_batch=2) as server:
+            resps = [f.result(timeout=30.0)
+                     for f in [server.submit(x) for x in xs]]
+        for x, r in zip(xs, resps):
+            want = head(_ref_chain(x, weights, [None])[None])[0]
+            np.testing.assert_allclose(r.output, want, rtol=1e-4, atol=1e-5)
+    finally:
+        c.shutdown()
+
+
+# ------------------------------------------------------- fault handling
+
+
+def test_slave_lost_mid_request_completes_on_survivors():
+    """SIGKILL a TCP slave while requests are in flight: the affected
+    batches drain on the survivors, every response is 'ok' with the
+    loss surfaced as a retry count, and numerics still match."""
+    rng = np.random.default_rng(5)
+    weights = _weights(rng, [3, 8, 8])
+    killed = threading.Event()
+    c = HeteroCluster(
+        [1.0, 1.0, 2.0], transport="tcp", pipeline=True, microbatches=2,
+        heartbeat_s=2.0,  # a SIGKILL EOF lands far sooner
+    )
+    try:
+        c.probe_times = [1.0, 1.0, 2.0]
+        victim = c.procs[-1]
+
+        def kill_after_layer0(y):
+            if not killed.is_set():
+                killed.set()
+                victim.kill()
+            return _relu(y)
+
+        between = [kill_after_layer0, _relu]
+        xs = [rng.standard_normal((6, 6, 3)).astype(np.float32)
+              for _ in range(6)]
+        with ClusterServer(c, weights, between=between,
+                           max_batch=2) as server:
+            resps = [f.result(timeout=120.0)
+                     for f in [server.submit(x) for x in xs]]
+        assert [r.status for r in resps] == ["ok"] * len(xs)
+        assert len(c.failures) == 1 and victim.returncode is not None
+        assert sum(r.retries for r in resps) >= 1  # surfaced, not raised
+        for x, r in zip(xs, resps):
+            np.testing.assert_allclose(
+                r.output, _ref_chain(x, weights, [_relu, _relu]),
+                rtol=1e-4, atol=1e-5,
+            )
+    finally:
+        c.shutdown()
+
+
+# ------------------------------------------------------------ autoscaler
+
+
+class FakeCluster:
+    """Membership-only cluster stand-in for scaler unit tests."""
+
+    def __init__(self, n=1):
+        self.slave_ids = list(range(1, n + 1))
+        self.calls = []
+        self._next = n + 1
+
+    @property
+    def n_slaves(self):
+        return len(self.slave_ids)
+
+    def admit(self, **kw):
+        dev = self._next
+        self._next += 1
+        self.slave_ids.append(dev)
+        self.calls.append(("admit", dev))
+        return dev
+
+    def evict(self, device):
+        self.slave_ids.remove(device)
+        self.calls.append(("evict", device))
+
+
+def test_autoscaler_thresholds_and_cooldown_fake_clock():
+    clock = FakeClock()
+    fc = FakeCluster(n=1)
+    scaler = AutoScaler(
+        fc, scale_up_depth=4, scale_down_depth=0, min_slaves=1,
+        max_slaves=3, cooldown_s=2.0, clock=clock,
+    )
+    assert scaler.observe(3) is None          # below threshold: no-op
+    assert scaler.observe(4) == "admit"       # at threshold: admit
+    assert scaler.observe(9) is None          # cooling down
+    clock.advance(2.0)
+    assert scaler.observe(9) == "admit"       # cooldown over: admit again
+    clock.advance(2.0)
+    assert scaler.observe(9) is None          # at max_slaves: bounded
+    assert fc.n_slaves == 3
+    assert scaler.observe(0) == "evict"       # youngest goes first
+    assert scaler.observe(0) is None          # evicts share the cooldown
+    clock.advance(2.0)
+    assert scaler.observe(0) == "evict"
+    clock.advance(2.0)
+    assert scaler.observe(0) is None          # at min_slaves: bounded
+    assert fc.calls == [("admit", 2), ("admit", 3), ("evict", 3),
+                        ("evict", 2)]
+    assert [e[1] for e in scaler.events] == ["admit", "admit", "evict",
+                                             "evict"]
+
+
+def test_autoscaler_drives_real_admit_evict_from_load():
+    """Integration: a burst queued before start() makes the serve loop
+    admit a slave; the drained queue then evicts back to min."""
+    rng = np.random.default_rng(6)
+    weights = _weights(rng, [3, 8])
+    c = HeteroCluster([1.0, 1.0], pipeline=True, microbatches=2)
+    try:
+        c.probe_times = [1.0, 1.0]
+        scaler = AutoScaler(
+            c, scale_up_depth=6, scale_down_depth=0, min_slaves=1,
+            max_slaves=2, cooldown_s=0.0,
+        )
+        server = ClusterServer(
+            c, weights, max_batch=2, max_queue=16, autoscaler=scaler,
+        )
+        futs = [server.submit(rng.standard_normal((6, 6, 3))
+                              .astype(np.float32)) for _ in range(8)]
+        with server:
+            resps = [f.result(timeout=60.0) for f in futs]
+            deadline = time.monotonic() + 30.0
+            while c.n_slaves > 1 and time.monotonic() < deadline:
+                time.sleep(0.01)  # idle loop iterations evict to min
+        assert [r.status for r in resps] == ["ok"] * len(futs)
+        actions = [e[1] for e in scaler.events]
+        assert "admit" in actions and "evict" in actions
+        assert c.n_slaves == 1
+    finally:
+        c.shutdown()

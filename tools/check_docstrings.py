@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Docstring-coverage gate for the public cluster + serving API.
+
+Walks the given roots (default: ``src/repro/core/cluster`` and
+``src/repro/serve``) and fails when any PUBLIC symbol — a module, a
+module-level function or class, or a method of a public class whose
+name does not start with ``_`` — lacks a docstring.  Dunder methods
+are exempt except ``__init__`` on classes whose class docstring does
+not document construction is NOT enforced separately: the class
+docstring owns the constructor contract.
+
+Pure stdlib (ast), no third-party linter needed:
+
+    python tools/check_docstrings.py [ROOT ...]
+
+Exit status 0 = fully documented, 1 = violations (one per line).
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+DEFAULT_ROOTS = ("src/repro/core/cluster", "src/repro/serve")
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _missing_in_module(path: Path) -> list:
+    """Return ``(lineno, qualname)`` for every undocumented public
+    symbol in one file."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    missing = []
+    if ast.get_docstring(tree) is None:
+        missing.append((1, "<module>"))
+    for node in tree.body:
+        if isinstance(node, _FUNC_NODES) and _public(node.name):
+            if ast.get_docstring(node) is None:
+                missing.append((node.lineno, node.name))
+        elif isinstance(node, ast.ClassDef) and _public(node.name):
+            if ast.get_docstring(node) is None:
+                missing.append((node.lineno, node.name))
+            for sub in node.body:
+                if (isinstance(sub, _FUNC_NODES) and _public(sub.name)
+                        and ast.get_docstring(sub) is None):
+                    missing.append((sub.lineno, f"{node.name}.{sub.name}"))
+    return missing
+
+
+def main(roots=None) -> int:
+    """Check every ``.py`` under each root; print violations as
+    ``path:line: symbol`` and return the violation count."""
+    repo = Path(__file__).resolve().parent.parent
+    roots = [Path(r) for r in (roots or DEFAULT_ROOTS)]
+    count = 0
+    files = 0
+    for root in roots:
+        root = root if root.is_absolute() else repo / root
+        if not root.exists():
+            print(f"docstring gate: missing root {root}", file=sys.stderr)
+            return 1
+        for path in sorted(root.rglob("*.py")):
+            files += 1
+            for lineno, name in _missing_in_module(path):
+                try:
+                    rel = path.relative_to(repo)
+                except ValueError:   # explicit root outside the repo
+                    rel = path
+                print(f"{rel}:{lineno}: undocumented public symbol: {name}")
+                count += 1
+    if files == 0:
+        print("docstring gate: matched ZERO files — refusing to pass",
+              file=sys.stderr)
+        return 1
+    status = "FAILED" if count else "ok"
+    print(f"# docstring gate: {files} files, {count} undocumented public "
+          f"symbols -> {status}", file=sys.stderr)
+    return count
+
+
+if __name__ == "__main__":
+    sys.exit(1 if main(sys.argv[1:] or None) else 0)
