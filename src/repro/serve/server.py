@@ -24,8 +24,12 @@ A ``SlaveLost`` mid-request is NOT an error: the cluster's ``Pending``
 recovery drains the batch on the survivors and the master recomputes
 the dead slave's shard; the server surfaces it as ``retries`` on the
 affected responses.  A ``SlaveError`` (a slave's backend raised) IS an
-error: the pipeline state is unrecoverable, so the server fails all
-in-flight requests and stops.
+error — and so is any exception out of a user ``head``/``step_fn``:
+the pipeline state is unrecoverable, so the server fails every
+in-flight request with ``"error"``, rejects what is still queued, and
+stops.  Once the loop has exited (error or ``stop()``), the queue is
+closed atomically, so a late ``submit`` resolves ``"rejected"``
+instead of stranding a future no thread will ever read.
 """
 from __future__ import annotations
 
@@ -133,6 +137,7 @@ class RequestQueue:
         self.max_depth = int(max_depth)
         self.clock = clock
         self._items: deque = deque()
+        self._closed = False
         self._lock = threading.Lock()
         self._nonempty = threading.Condition(self._lock)
 
@@ -141,11 +146,18 @@ class RequestQueue:
         with self._lock:
             return len(self._items)
 
-    def offer(self, req: "_Request") -> bool:
-        """Enqueue unless full.  Returns False when admission-control
-        rejects (depth already at ``max_depth``)."""
+    @property
+    def closed(self) -> bool:
+        """Whether ``close()`` ran — all further offers are refused."""
         with self._lock:
-            if len(self._items) >= self.max_depth:
+            return self._closed
+
+    def offer(self, req: "_Request") -> bool:
+        """Enqueue unless full or closed.  Returns False when
+        admission-control rejects (depth already at ``max_depth``) or
+        the queue was closed by shutdown."""
+        with self._lock:
+            if self._closed or len(self._items) >= self.max_depth:
                 return False
             self._items.append(req)
             self._nonempty.notify()
@@ -160,26 +172,38 @@ class RequestQueue:
             now: clock value for deadline checks (defaults to ``clock()``).
 
         Returns:
-            ``(ready, expired)`` — expired entries do not count against
-            ``max_n`` and are popped regardless, so a stale head never
-            blocks live traffic behind it.
+            ``(ready, expired)`` — the whole queue is scanned, so
+            expired entries are culled wherever they sit (not just
+            ahead of the live window), never count against ``max_n``,
+            and a stale head never blocks live traffic behind it.
         """
         if now is None:
             now = self.clock()
         ready: List[_Request] = []
         expired: List[_Request] = []
         with self._lock:
-            while self._items and len(ready) < max_n:
-                req = self._items[0]
+            keep: deque = deque()
+            while self._items:
+                req = self._items.popleft()
                 if req.deadline is not None and now >= req.deadline:
-                    expired.append(self._items.popleft())
-                    continue
-                ready.append(self._items.popleft())
+                    expired.append(req)
+                elif len(ready) < max_n:
+                    ready.append(req)
+                else:
+                    keep.append(req)
+            self._items = keep
             return ready, expired
 
-    def drain(self) -> List["_Request"]:
-        """Pop everything (shutdown path)."""
+    def close(self) -> List["_Request"]:
+        """Mark the queue closed and pop everything still queued, in
+        one critical section (shutdown path).
+
+        Closing under the same lock as ``offer`` means no request can
+        slip in between the final drain and the close and be silently
+        stranded: after this returns, every ``offer`` fails.
+        """
         with self._lock:
+            self._closed = True
             items = list(self._items)
             self._items.clear()
             return items
@@ -261,8 +285,13 @@ class AutoScaler:
 
 @dataclasses.dataclass
 class _BatchRec:
-    """One in-flight slab: its requests + the failure-count watermark
-    (so completed responses can report slave losses as retries)."""
+    """One in-flight slab: its requests + the failure-count watermark.
+
+    ``failures_mark`` is ``len(cluster.failures)`` taken right AFTER
+    this slab's own push returned; completion reads the count again
+    after the push/flush that drains the slab.  Consecutive slabs'
+    windows are therefore disjoint — a loss is attributed to exactly
+    one slab, never double-counted."""
 
     reqs: List[_Request]
     failures_mark: int
@@ -368,8 +397,12 @@ class ClusterServer:
             self._next_id += 1
         req = _Request(rid, x, deadline, steps, 0, fut, now)
         if self._fatal is not None or not self._queue.offer(req):
-            detail = ("server stopped on error" if self._fatal is not None
-                      else f"queue full (max_queue={self._queue.max_depth})")
+            if self._fatal is not None:
+                detail = "server stopped on error"
+            elif self._queue.closed:
+                detail = "server stopped"
+            else:
+                detail = f"queue full (max_queue={self._queue.max_depth})"
             with self._lock:
                 self._rejected += 1
             fut._resolve(ServeResponse(rid, STATUS_REJECTED, detail=detail))
@@ -433,7 +466,12 @@ class ClusterServer:
         """Pack up to ``max_batch`` requests: continuing decode-step
         requests first (they already hold pipeline state), then fresh
         prefill requests from the queue — expiring stale entries from
-        both sources without computing them."""
+        both sources without computing them.
+
+        A slab is one ``np.stack``, so every request in it must share
+        a shape: the oldest candidate's shape wins this slab, and
+        differently-shaped candidates wait at the front of the ready
+        set for the next slab (shapes alternate, nobody starves)."""
         batch: List[_Request] = []
         still_ready: List[_Request] = []
         for req in self._ready:
@@ -448,6 +486,12 @@ class ClusterServer:
         for req in expired:
             self._expire(req, now)
         batch.extend(fresh)
+        if batch:
+            shape = batch[0].x.shape
+            deferred = [r for r in batch if r.x.shape != shape]
+            if deferred:
+                batch = [r for r in batch if r.x.shape == shape]
+                self._ready = deferred + self._ready
         for req in batch:
             if req.t_admitted is None:
                 req.t_admitted = now
@@ -462,12 +506,15 @@ class ClusterServer:
             detail="deadline passed before compute",
         ))
 
-    def _complete(self, rec: _BatchRec, out: np.ndarray) -> None:
+    def _complete(self, rec: _BatchRec, out: np.ndarray,
+                  failures_end: int) -> None:
         """Resolve a finished slab: slave losses during its flight
-        become per-request retry counts; finishing requests get the
-        head applied, continuing ones step and rejoin the ready set."""
+        (``failures_end`` is the failure count snapshotted right after
+        the push/flush that drained it) become per-request retry
+        counts; finishing requests get the head applied, continuing
+        ones step and rejoin the ready set."""
         now = self._clock()
-        retries = len(self.cluster.failures) - rec.failures_mark
+        retries = failures_end - rec.failures_mark
         finishing = [i for i, r in enumerate(rec.reqs) if r.steps_left == 1]
         z = self.head(out) if (self.head is not None and finishing) else out
         for i, req in enumerate(rec.reqs):
@@ -493,13 +540,11 @@ class ClusterServer:
                 latency_s=now - req.t_submit,
             ))
 
-    def _fail(self, recs: Sequence[Optional[_BatchRec]], err: BaseException) -> None:
+    def _fail(self, recs: Sequence[_BatchRec], err: BaseException) -> None:
         """Unrecoverable pipeline failure: resolve every affected
         request with ``"error"`` and poison the server."""
         self._fatal = err
         for rec in recs:
-            if rec is None:
-                continue
             for req in rec.reqs:
                 if not req.future.done():
                     req.future._resolve(ServeResponse(
@@ -508,7 +553,9 @@ class ClusterServer:
                     ))
 
     def _reject_leftovers(self) -> None:
-        for req in self._queue.drain() + self._ready:
+        """Close the queue (late submits now bounce atomically) and
+        reject everything still unserved."""
+        for req in self._queue.close() + self._ready:
             if not req.future.done():
                 with self._lock:
                     self._rejected += 1
@@ -519,38 +566,45 @@ class ClusterServer:
         self._ready = []
 
     def _loop(self) -> None:
-        pending: Optional[_BatchRec] = None
-        while True:
-            now = self._clock()
-            if self.autoscaler is not None:
-                try:
-                    self.autoscaler.observe(len(self._queue) + len(self._ready))
-                except Exception:
-                    pass  # a failed admit() must not take the loop down
-            batch = self._form_batch(now)
-            if batch:
-                rec = _BatchRec(batch, len(self.cluster.failures), now)
-                x = np.stack([r.x for r in batch], axis=0)
-                try:
+        # slabs whose futures may still be unresolved, oldest first;
+        # the catch-all below fails them on ANY escape (SlaveError,
+        # a user head/step_fn raising in _complete, ...) so no future
+        # is ever stranded by the loop thread dying
+        inflight: List[_BatchRec] = []
+        try:
+            while True:
+                now = self._clock()
+                if self.autoscaler is not None:
+                    try:
+                        self.autoscaler.observe(
+                            len(self._queue) + len(self._ready))
+                    except Exception:
+                        pass  # a failed admit() must not take the loop down
+                batch = self._form_batch(now)
+                if batch:
+                    rec = _BatchRec(batch, 0, now)
+                    inflight.append(rec)
+                    x = np.stack([r.x for r in batch], axis=0)
                     prev_out = self._chain.push(x)
-                except Exception as err:  # SlaveError etc: state is gone
-                    self._fail((pending, rec), err)
-                    break
-                if prev_out is not None and pending is not None:
-                    self._complete(pending, prev_out)
-                pending = rec
-            elif pending is not None:
-                # nothing waiting: drain the in-flight slab rather than
-                # hold its latency hostage to the next arrival
-                try:
+                    # the slab's retry window opens here, after its own
+                    # push: the previous slab owns everything earlier
+                    rec.failures_mark = len(self.cluster.failures)
+                    if prev_out is not None:
+                        self._complete(inflight[0], prev_out,
+                                       rec.failures_mark)
+                        inflight.pop(0)
+                elif inflight:
+                    # nothing waiting: drain the in-flight slab rather
+                    # than hold its latency hostage to the next arrival
                     out = self._chain.flush()
-                except Exception as err:
-                    self._fail((pending,), err)
+                    mark = len(self.cluster.failures)
+                    self._complete(inflight[0], out, mark)
+                    inflight.pop(0)
+                elif not self._running:
                     break
-                self._complete(pending, out)
-                pending = None
-            elif not self._running:
-                break
-            else:
-                self._queue.wait_nonempty(0.005)
-        self._reject_leftovers()
+                else:
+                    self._queue.wait_nonempty(0.005)
+        except BaseException as err:
+            self._fail(inflight, err)
+        finally:
+            self._reject_leftovers()

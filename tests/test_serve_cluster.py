@@ -122,6 +122,34 @@ def test_request_queue_expires_stale_heads_fake_clock():
     assert len(q) == 0
 
 
+def test_request_queue_culls_expired_behind_live_window():
+    """Expired entries are culled wherever they sit in the queue — not
+    just ahead of the first max_n live requests (the take docstring's
+    contract)."""
+    clock = FakeClock()
+    q = RequestQueue(max_depth=8, clock=clock)
+    assert q.offer(_req(0, clock))
+    assert q.offer(_req(1, clock))
+    assert q.offer(_req(2, clock, deadline_s=1.0))  # behind the window
+    assert q.offer(_req(3, clock))
+    clock.advance(2.0)  # request 2 is now past deadline
+    ready, expired = q.take(max_n=2)
+    assert [r.request_id for r in ready] == [0, 1]
+    assert [r.request_id for r in expired] == [2]
+    assert len(q) == 1  # request 3 kept its place
+    ready, expired = q.take(max_n=2)
+    assert [r.request_id for r in ready] == [3] and not expired
+
+
+def test_request_queue_close_refuses_late_offers():
+    clock = FakeClock()
+    q = RequestQueue(max_depth=8, clock=clock)
+    assert q.offer(_req(0, clock))
+    leftovers = q.close()
+    assert [r.request_id for r in leftovers] == [0]
+    assert q.closed and not q.offer(_req(1, clock))
+
+
 def test_request_queue_admission_control():
     clock = FakeClock()
     q = RequestQueue(max_depth=2, clock=clock)
@@ -241,6 +269,47 @@ def test_head_applied_per_finished_request():
         c.shutdown()
 
 
+def test_mixed_shape_requests_form_separate_slabs():
+    """submit only checks rank, so requests of different spatial sizes
+    can coexist; the server must group a slab by shape (one np.stack)
+    instead of crashing the loop, and every request still completes."""
+    rng = np.random.default_rng(7)
+    weights = _weights(rng, [3, 8])
+    c = HeteroCluster([1.0, 1.0], pipeline=True, microbatches=2)
+    try:
+        c.probe_times = [1.0, 1.0]
+        xs = [rng.standard_normal(shape).astype(np.float32)
+              for shape in ((6, 6, 3), (8, 8, 3), (6, 6, 3), (8, 8, 3))]
+        server = ClusterServer(c, weights, max_batch=4)
+        futs = [server.submit(x) for x in xs]  # one queue, two shapes
+        with server:
+            resps = [f.result(timeout=60.0) for f in futs]
+        assert [r.status for r in resps] == ["ok"] * len(xs)
+        for x, r in zip(xs, resps):
+            np.testing.assert_allclose(
+                r.output, _ref_chain(x, weights, [None]), rtol=1e-4, atol=1e-5
+            )
+    finally:
+        c.shutdown()
+
+
+def test_submit_after_stop_is_rejected_not_stranded():
+    """A submit that lands after stop() must resolve 'rejected'
+    immediately — never enqueue into a queue no thread will read."""
+    rng = np.random.default_rng(8)
+    c = HeteroCluster([1.0, 1.0], pipeline=True, microbatches=2)
+    try:
+        c.probe_times = [1.0, 1.0]
+        server = ClusterServer(c, _weights(rng, [3, 8]), max_batch=2)
+        x = rng.standard_normal((6, 6, 3)).astype(np.float32)
+        with server:
+            assert server.submit(x).result(timeout=30.0).status == "ok"
+        late = server.submit(x).result(timeout=1.0)  # must not hang
+        assert late.status == "rejected" and late.detail == "server stopped"
+    finally:
+        c.shutdown()
+
+
 # ------------------------------------------------------- fault handling
 
 
@@ -280,6 +349,36 @@ def test_slave_lost_mid_request_completes_on_survivors():
                 r.output, _ref_chain(x, weights, [_relu, _relu]),
                 rtol=1e-4, atol=1e-5,
             )
+    finally:
+        c.shutdown()
+
+
+def test_head_exception_fails_inflight_and_poisons_server():
+    """An exception out of a user head must not strand any future: the
+    in-flight slabs resolve 'error', the still-queued requests resolve
+    'rejected', the loop thread exits, and later submits bounce with
+    'server stopped on error'."""
+    rng = np.random.default_rng(9)
+    weights = _weights(rng, [3, 8])
+
+    def bad_head(z):
+        raise RuntimeError("head blew up")
+
+    c = HeteroCluster([1.0, 1.0], pipeline=True, microbatches=2)
+    try:
+        c.probe_times = [1.0, 1.0]
+        server = ClusterServer(c, weights, head=bad_head, max_batch=1)
+        x = rng.standard_normal((6, 6, 3)).astype(np.float32)
+        futs = [server.submit(x) for _ in range(4)]
+        with server:
+            resps = [f.result(timeout=30.0) for f in futs]  # none may hang
+        statuses = [r.status for r in resps]
+        assert "error" in statuses and set(statuses) <= {"error", "rejected"}
+        errs = [r for r in resps if r.status == "error"]
+        assert all("RuntimeError" in r.detail for r in errs)
+        late = server.submit(x).result(timeout=1.0)
+        assert late.status == "rejected"
+        assert late.detail == "server stopped on error"
     finally:
         c.shutdown()
 
