@@ -61,7 +61,7 @@ import subprocess
 import sys
 import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -144,6 +144,12 @@ class HeteroCluster:
     ``evict()`` change membership at runtime; a slave that dies is
     detected within the deadline, auto-evicted and its in-flight work
     recomputed by the master, and ``failures`` records the event.
+
+    ``clock`` injects the time source behind every master-side deadline
+    (joins, heartbeat expiry, shutdown waits) so tests can drive them
+    without real waiting; defaults to ``time.monotonic`` and is passed
+    through to each ``TCPTransport``.  Emulation sleeps (slowdown /
+    bandwidth stretching) intentionally stay on the real clock.
     """
 
     def __init__(
@@ -164,7 +170,9 @@ class HeteroCluster:
         heartbeat_s: Optional[float] = None,
         heartbeat_timeout_s: Optional[float] = None,
         join_timeout_s: float = 300.0,
+        clock: Callable[[], float] = time.monotonic,
     ):
+        self._clock = clock  # first: deadline math below and in helpers uses it
         assert len(slowdowns) >= 1
         if any(sd < 1.0 for sd in slowdowns):
             # the op-level emulation can only SLEEP (slowdown-1)x the
@@ -407,9 +415,9 @@ class HeteroCluster:
         and the joiner's backend/slowdown metadata; the master replies
         ("welcome", dev) — it owns device numbering, and ids are never
         reused so live plans can keep naming dead members."""
-        deadline = time.monotonic() + timeout_s
+        deadline = self._clock() + timeout_s
         while True:
-            remaining = deadline - time.monotonic()
+            remaining = deadline - self._clock()
             if remaining <= 0:
                 raise TimeoutError(
                     f"no valid slave joined within {timeout_s:.0f}s"
@@ -430,6 +438,7 @@ class HeteroCluster:
                 chan = TCPTransport(
                     conn, self._wire_np_dtype,
                     heartbeat_timeout_s=self.heartbeat_timeout_s,
+                    clock=self._clock,
                 )
                 requested, meta = protocol.parse_hello(chan.read_on_master())
             except (OSError, EOFError, RuntimeError) as e:
@@ -496,10 +505,10 @@ class HeteroCluster:
             f"(auth: REPRO_CLUSTER_AUTH)",
             file=sys.stderr, flush=True,
         )
-        deadline = time.monotonic() + timeout_s
+        deadline = self._clock() + timeout_s
         for _ in range(n):
             chan, dev, meta = self._accept_slave(
-                timeout_s=max(1.0, deadline - time.monotonic())
+                timeout_s=max(1.0, deadline - self._clock())
             )
             self.slowdowns.append(float(meta.get("slowdown", 1.0)))
             self.backends.append(str(meta.get("backend", "numpy")))
@@ -697,7 +706,7 @@ class HeteroCluster:
         pos = self.sockets.index(sock)
         self.failures.append({
             "device": self.slave_ids[pos],
-            "t_detected": time.monotonic(),
+            "t_detected": self._clock(),
             "error": str(err),
         })
         self._remove_slot(pos, kill=True)
@@ -1118,6 +1127,7 @@ class HeteroCluster:
                 )
         el = time.perf_counter() - t0
         if self.slowdowns[0] > 1.0:
+            # reprolint: allow=clock-injection -- slowdown emulation IS a real delay: it stretches measured compute to the emulated device's speed
             time.sleep(el * (self.slowdowns[0] - 1.0))
         self.timing.recompute_s += time.perf_counter() - t0
         return out
@@ -1140,6 +1150,7 @@ class HeteroCluster:
         out = fn()
         el = time.perf_counter() - t0
         if self.slowdowns[0] > 1.0:
+            # reprolint: allow=clock-injection -- slowdown emulation IS a real delay: it stretches measured compute to the emulated device's speed
             time.sleep(el * (self.slowdowns[0] - 1.0))
         self.timing.master_conv_s += time.perf_counter() - t0
         return out
@@ -1231,12 +1242,12 @@ class HeteroCluster:
         for t in self.threads:
             if t is not None:
                 t.join(timeout=10)
-        deadline = time.monotonic() + 10
+        deadline = self._clock() + 10
         for p in self.procs:
             if p is None:  # external join: its operator owns the process
                 continue
             try:
-                p.wait(timeout=max(0.1, deadline - time.monotonic()))
+                p.wait(timeout=max(0.1, deadline - self._clock()))
             except subprocess.TimeoutExpired:
                 p.kill()
                 p.wait(timeout=5)

@@ -139,6 +139,7 @@ def slave_loop(endpoint, slowdown: float, backend_name: str, device: int):
                 raise ValueError(f"unknown op {op}")
             elapsed = time.perf_counter() - t0
             if slowdown > 1.0:
+                # reprolint: allow=clock-injection -- slowdown emulation IS a real delay: it stretches measured compute to the emulated device's speed
                 time.sleep(elapsed * (slowdown - 1.0))
         except Exception:
             endpoint.send(SlaveError(device, traceback.format_exc()))

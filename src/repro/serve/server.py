@@ -213,6 +213,7 @@ class RequestQueue:
         with self._lock:
             if self._items:
                 return True
+            # reprolint: allow=blocking-under-lock -- Condition.wait RELEASES the lock while blocked; holding it here is the condition-variable protocol, not a stall
             return self._nonempty.wait(timeout)
 
 
@@ -356,6 +357,8 @@ class ClusterServer:
         self._completed = 0
         self._rejected = 0
         self._expired = 0
+        self._scaler_failures = 0
+        self._scaler_last_error: Optional[str] = None
         self._latencies: deque = deque(maxlen=512)
         self._t_first_done: Optional[float] = None
         self._t_last_done: Optional[float] = None
@@ -413,8 +416,10 @@ class ClusterServer:
 
         Returns:
             dict with ``completed/rejected/expired`` counts, queue
-            depth, ``p50_ms``/``p99_ms`` over the last completions, and
-            ``throughput_rps`` across the completion window.
+            depth, ``p50_ms``/``p99_ms`` over the last completions,
+            ``throughput_rps`` across the completion window, and
+            ``scaler_failures``/``scaler_last_error`` — autoscaler
+            ``observe()`` exceptions the loop absorbed.
         """
         with self._lock:
             lat = np.array(self._latencies, np.float64)
@@ -425,6 +430,8 @@ class ClusterServer:
                 "queue_depth": len(self._queue) + len(self._ready),
                 "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else None,
                 "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else None,
+                "scaler_failures": self._scaler_failures,
+                "scaler_last_error": self._scaler_last_error,
             }
             span = ((self._t_last_done or 0.0) - (self._t_first_done or 0.0))
             out["throughput_rps"] = (
@@ -578,8 +585,14 @@ class ClusterServer:
                     try:
                         self.autoscaler.observe(
                             len(self._queue) + len(self._ready))
-                    except Exception:
-                        pass  # a failed admit() must not take the loop down
+                    except Exception as e:
+                        # a failed admit() must not take the loop down,
+                        # but it must not vanish either: surface it in
+                        # stats() so operators see a scaler that can't
+                        # scale
+                        with self._lock:
+                            self._scaler_failures += 1
+                            self._scaler_last_error = repr(e)
                 batch = self._form_batch(now)
                 if batch:
                     rec = _BatchRec(batch, 0, now)

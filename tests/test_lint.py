@@ -1,0 +1,375 @@
+"""The reprolint suite (tools/lint/) must hold on the repo AND bite:
+every checker passes the live tree, every checker fails its negative
+fixture, the waiver grammar works, and the lock-order sanitizer
+detects a seeded AB/BA inversion.  Mirrors test_docstring_gate.py's
+positive/negative structure."""
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+import threading
+from pathlib import Path
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.abspath(REPO))
+
+from tools.lint.checkers import (  # noqa: E402
+    auth_unpickle,
+    blocking_lock,
+    clock_injection,
+    future_resolution,
+    import_graph,
+    thread_hygiene,
+)
+from tools.lint.core import Violation, apply_waivers, parse_waivers  # noqa: E402
+from tools.lint import lockorder  # noqa: E402
+
+
+def _names(violations):
+    return sorted({v.checker for v in violations})
+
+
+def _write_tree(root, files):
+    for relpath, src in files.items():
+        p = Path(root, relpath)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return Path(root)
+
+
+# ---- positive: the live repo passes the whole suite -------------------
+
+def test_repo_passes_reprolint():
+    r = subprocess.run(
+        [sys.executable, "-m", "tools.lint"], cwd=REPO,
+        capture_output=True, text=True, timeout=120,
+    )
+    assert r.returncode == 0, (
+        f"reprolint violations in the repo:\n{r.stdout}{r.stderr}"
+    )
+
+
+def test_cli_flags():
+    for flags, rc in [(["--list"], 0), (["--explain"], 0),
+                      (["--only", "no-such-checker"], 2)]:
+        r = subprocess.run(
+            [sys.executable, "-m", "tools.lint", *flags], cwd=REPO,
+            capture_output=True, text=True, timeout=120,
+        )
+        assert r.returncode == rc, f"{flags}: {r.stdout}{r.stderr}"
+    r = subprocess.run(
+        [sys.executable, "-m", "tools.lint", "--list"], cwd=REPO,
+        capture_output=True, text=True, timeout=120,
+    )
+    for name in ("import-graph", "auth-before-unpickle", "clock-injection",
+                 "blocking-under-lock", "future-resolution",
+                 "thread-hygiene", "docstrings"):
+        assert name in r.stdout
+
+
+# ---- negative fixtures: one per checker -------------------------------
+
+def test_import_graph_catches_eager_jax():
+    """An `import jax` anywhere on the entry's module-level import
+    chain must fail, with the chain in the message; a lazy
+    (function-level) import must pass."""
+    with tempfile.TemporaryDirectory() as d:
+        src = _write_tree(d, {
+            "src/pkg/__init__.py": "",
+            "src/pkg/entry.py": "import pkg.helper\n",
+            "src/pkg/helper.py": "import jax\n",
+        }) / "src"
+        bad = import_graph.check(src, "pkg.entry", ("jax",), Path(d))
+        assert len(bad) == 1 and "pkg.entry -> pkg.helper" in bad[0].message
+    with tempfile.TemporaryDirectory() as d:
+        src = _write_tree(d, {
+            "src/pkg/__init__.py": "",
+            "src/pkg/entry.py": "import pkg.helper\n",
+            "src/pkg/helper.py": "def f():\n    import jax\n",
+        }) / "src"
+        assert import_graph.check(src, "pkg.entry", ("jax",), Path(d)) == []
+
+
+def test_auth_unpickle_catches_unauthenticated_read():
+    bad_src = '''\
+        import hmac, pickle
+        def handshake(listener, token):
+            conn = listener.accept()
+            hello = pickle.loads(conn.recv(4096))
+            return hello
+    '''
+    good_src = '''\
+        import hmac, pickle
+        def handshake(listener, token):
+            conn = listener.accept()
+            presented = conn.recv(32)
+            if not hmac.compare_digest(presented, token):
+                raise RuntimeError("bad token")
+            return pickle.loads(conn.recv(4096))
+    '''
+    p = Path("fixture.py")
+    bad = auth_unpickle.check_source(p, textwrap.dedent(bad_src), Path("."))
+    assert bad and all(v.checker == "auth-before-unpickle" for v in bad)
+    assert auth_unpickle.check_source(p, textwrap.dedent(good_src), Path(".")) == []
+
+
+def test_clock_injection_catches_direct_calls():
+    bad_src = '''\
+        import time
+        def wait_for(deadline_s):
+            deadline = time.monotonic() + deadline_s
+            while time.monotonic() < deadline:
+                time.sleep(0.1)
+    '''
+    good_src = '''\
+        import time
+        def wait_for(deadline_s, clock=time.monotonic):
+            deadline = clock() + deadline_s
+            while clock() < deadline:
+                pass
+    '''
+    aliased = '''\
+        from time import monotonic as now
+        def f():
+            return now()
+    '''
+    p = Path("fixture.py")
+    bad = clock_injection.check_source(p, textwrap.dedent(bad_src), Path("."))
+    assert len(bad) == 3
+    assert clock_injection.check_source(p, textwrap.dedent(good_src), Path(".")) == []
+    assert clock_injection.check_source(p, textwrap.dedent(aliased), Path("."))
+
+
+def test_blocking_lock_catches_blocking_calls_under_lock():
+    bad_src = '''\
+        import threading
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+            def f(self, sock, q):
+                with self._lock:
+                    data = sock.recv(4096)
+                    item = q.get()
+                return data, item
+    '''
+    good_src = '''\
+        import threading
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+            def f(self, sock, q):
+                with self._lock:
+                    n = self.count = getattr(self, "count", 0) + 1
+                data = sock.recv(4096)
+                return n, data
+    '''
+    p = Path("fixture.py")
+    bad = blocking_lock.check_source(p, textwrap.dedent(bad_src), Path("."))
+    assert len(bad) == 2
+    assert blocking_lock.check_source(p, textwrap.dedent(good_src), Path(".")) == []
+
+
+def test_future_resolution_catches_loop_without_catchall():
+    bad_src = '''\
+        import threading
+        class Server:
+            def start(self):
+                self._thread = threading.Thread(target=self._loop)
+                self._thread.start()
+            def _loop(self):
+                while True:
+                    fut = self.inflight.pop()
+                    fut._resolve(self.step())
+    '''
+    good_src = '''\
+        import threading
+        class Server:
+            def start(self):
+                self._thread = threading.Thread(target=self._loop)
+                self._thread.start()
+            def _loop(self):
+                try:
+                    while True:
+                        fut = self.inflight.pop()
+                        fut._resolve(self.step())
+                except BaseException as e:
+                    self._fatal = e
+                finally:
+                    self._fail_inflight()
+    '''
+    p = Path("fixture.py")
+    bad = future_resolution.check_source(p, textwrap.dedent(bad_src), Path("."))
+    assert bad and "catch-all" in bad[0].message
+    assert future_resolution.check_source(p, textwrap.dedent(good_src), Path(".")) == []
+
+
+def test_future_resolution_catches_orphaned_future():
+    bad_src = '''\
+        def submit(self, x):
+            fut = ServeFuture()
+            self.log(x)
+    '''
+    good_src = '''\
+        def submit(self, x):
+            fut = ServeFuture()
+            self.log(x)
+            return fut
+    '''
+    p = Path("fixture.py")
+    bad = future_resolution.check_source(p, textwrap.dedent(bad_src), Path("."))
+    assert bad and "ServeFuture" in bad[0].message
+    assert future_resolution.check_source(p, textwrap.dedent(good_src), Path(".")) == []
+
+
+def test_thread_hygiene_catches_leaks_and_swallows():
+    bad_src = '''\
+        import threading
+        def go():
+            t = threading.Thread(target=work)
+            t.start()
+            try:
+                risky()
+            except Exception:
+                pass
+    '''
+    good_src = '''\
+        import threading
+        def go():
+            t = threading.Thread(target=work, daemon=True)
+            t.start()
+            try:
+                risky()
+            except OSError:
+                pass
+    '''
+    joined_src = '''\
+        import threading
+        def go():
+            t = threading.Thread(target=work)
+            t.start()
+            t.join()
+    '''
+    p = Path("fixture.py")
+    bad = thread_hygiene.check_source(p, textwrap.dedent(bad_src), Path("."))
+    assert len(bad) == 2  # non-daemon unjoined thread + silent swallow
+    assert thread_hygiene.check_source(p, textwrap.dedent(good_src), Path(".")) == []
+    assert thread_hygiene.check_source(p, textwrap.dedent(joined_src), Path(".")) == []
+
+
+# ---- waivers ----------------------------------------------------------
+
+def test_waiver_needs_reason_and_matching_checker(tmp_path):
+    src = textwrap.dedent('''\
+        x = 1  # reprolint: allow=clock-injection -- fixture reason
+        pad = 0
+        pad = 0
+        y = 2  # reprolint: allow=clock-injection
+    ''')
+    f = tmp_path / "w.py"
+    f.write_text(src)
+    waivers = parse_waivers(src)
+    assert 1 in waivers
+    assert 4 not in waivers  # no `-- reason` => not a waiver at all
+    vs = [
+        Violation("clock-injection", "w.py", 1, "waived (has reason)"),
+        Violation("clock-injection", "w.py", 4, "NOT waived (no reason)"),
+        Violation("thread-hygiene", "w.py", 1, "NOT waived (other checker)"),
+    ]
+    kept, waived = apply_waivers(vs, tmp_path)
+    assert waived == 1
+    assert sorted(v.message for v in kept) == [
+        "NOT waived (no reason)", "NOT waived (other checker)",
+    ]
+
+
+def test_waiver_covers_next_line(tmp_path):
+    src = textwrap.dedent('''\
+        # reprolint: allow=clock-injection -- next-line fixture
+        x = 1
+    ''')
+    (tmp_path / "w.py").write_text(src)
+    kept, waived = apply_waivers(
+        [Violation("clock-injection", "w.py", 2, "m")], tmp_path)
+    assert kept == [] and waived == 1
+
+
+# ---- lock-order sanitizer ---------------------------------------------
+
+def test_lockorder_detects_seeded_ab_ba_cycle():
+    monitor = lockorder.LockOrderMonitor()
+    a = lockorder._SanitizedLock(monitor, "site:A")
+    b = lockorder._SanitizedLock(monitor, "site:B")
+
+    def ab():
+        with a:
+            with b:
+                pass
+
+    def ba():
+        with b:
+            with a:
+                pass
+
+    t1 = threading.Thread(target=ab)
+    t2 = threading.Thread(target=ba)
+    t1.start(); t1.join()  # sequential: the ORDER is the bug, not the timing
+    t2.start(); t2.join()
+    cycles = monitor.cycles()
+    assert cycles == [["site:A", "site:B"]]
+
+
+def test_lockorder_consistent_order_is_clean():
+    monitor = lockorder.LockOrderMonitor()
+    a = lockorder._SanitizedLock(monitor, "site:A")
+    b = lockorder._SanitizedLock(monitor, "site:B")
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert monitor.cycles() == []
+    rep = monitor.report()
+    assert ("site:A", "site:B") in [tuple(e) for e in rep["ordered_edges"]]
+
+
+def test_lockorder_condition_wait_releases_held_stack():
+    """Condition.wait over a sanitized RLock must pop the lock from the
+    monitor's held stack (it really is released while waiting) — else
+    every wait-then-acquire would fabricate false edges."""
+    monitor = lockorder.LockOrderMonitor()
+    rl = lockorder._SanitizedRLock(monitor, "site:R")
+    other = lockorder._SanitizedLock(monitor, "site:O")
+    cond = threading.Condition(rl)
+    woke = []
+
+    def waiter():
+        with cond:
+            woke.append(cond.wait(timeout=5))
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    # while the waiter sleeps inside wait(), this thread takes the
+    # OTHER lock then the rlock: if wait() had not released site:R
+    # from the waiter's stack, notify could never be delivered at all
+    import time as _time
+    _time.sleep(0.05)
+    with other:
+        with cond:
+            cond.notify()
+    t.join(5)
+    assert woke == [True]
+    assert monitor.cycles() == []
+
+
+def test_lockorder_install_uninstall_roundtrip():
+    real_lock = threading.Lock
+    monitor = lockorder.install()
+    try:
+        assert lockorder.install() is monitor  # idempotent
+        lk = threading.Lock()
+        assert isinstance(lk, lockorder._SanitizedLock)
+        with lk:
+            pass
+    finally:
+        lockorder.uninstall()
+    assert threading.Lock is real_lock

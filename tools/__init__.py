@@ -1,0 +1,3 @@
+"""Repo tooling: the docstring-coverage gate (``check_docstrings.py``)
+and the reprolint static-analysis + concurrency-sanitizer suite
+(``tools/lint``, run as ``python -m tools.lint``)."""

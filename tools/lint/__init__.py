@@ -1,0 +1,27 @@
+"""reprolint — the repo-specific static-analysis + concurrency suite.
+
+The cluster grew from a single-master conv protocol into a threaded,
+elastic, authenticated distributed system, and every safety property
+it relies on was enforced only by convention.  This package turns
+those conventions into machine-checked invariants:
+
+    import-graph          slave entrypoint never reaches jax eagerly
+    auth-before-unpickle  accept paths authenticate before pickle.loads
+    clock-injection       cluster/serve time flows through the clock
+    blocking-under-lock   no blocking call while holding a lock
+    future-resolution     futures resolve on every path, incl. errors
+    thread-hygiene        threads daemon-or-joined; no silent swallows
+    docstrings            public cluster/serve API stays documented
+
+Run the static suite with ``python -m tools.lint`` (``--explain``
+prints each invariant's rationale); run tests under the runtime
+lock-order sanitizer with ``python -m tools.lint.lockorder -- <pytest
+args>``.  Waive a finding with an inline ``# reprolint:
+allow=<checker> -- <reason>`` comment (the reason is mandatory); see
+docs/development.md for the policy.
+"""
+from __future__ import annotations
+
+from tools.lint.core import Violation, apply_waivers, parse_waivers
+
+__all__ = ["Violation", "apply_waivers", "parse_waivers"]

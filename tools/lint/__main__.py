@@ -1,0 +1,6 @@
+"""``python -m tools.lint`` — run the reprolint suite (driver.py)."""
+import sys
+
+from tools.lint.driver import main
+
+sys.exit(main())

@@ -1,0 +1,23 @@
+"""The reprolint checker registry: one module per repo invariant."""
+from __future__ import annotations
+
+from tools.lint.checkers import (
+    auth_unpickle,
+    blocking_lock,
+    clock_injection,
+    docstrings,
+    future_resolution,
+    import_graph,
+    thread_hygiene,
+)
+
+#: registry order = report order; names are what waivers reference
+ALL_CHECKERS = (
+    import_graph,
+    auth_unpickle,
+    clock_injection,
+    blocking_lock,
+    future_resolution,
+    thread_hygiene,
+    docstrings,
+)

@@ -1,0 +1,82 @@
+"""auth-before-unpickle: accept/handshake paths must authenticate a
+connection before unpickling anything it sent.
+
+The cluster wire is pickle, so ``pickle.loads`` on attacker-supplied
+bytes is arbitrary code execution in the master.  PR 4 introduced the
+invariant: a freshly ``accept()``-ed connection must present the raw
+per-cluster token — checked with ``hmac.compare_digest`` — before the
+first frame is read, and a connection that fails is closed without
+ever being unpickled.  An exposed listener (``listen_host="0.0.0.0"``)
+makes this the repo's single most security-critical convention, and
+it lived only in a docstring.
+
+The checker finds every function that calls ``.accept(...)`` (a
+handshake function) and requires that any DESERIALIZING call in it —
+``pickle.loads`` or ``.read_on_master()`` — is preceded (by source
+position) by a ``compare_digest`` call.  A raw ``.recv()`` is exempt:
+it returns inert bytes, and reading the presented token is exactly how
+authentication starts.  Line dominance is an
+approximation of control-flow dominance, which is exactly right for
+the straight-line handshake shape this repo uses; anything cleverer
+belongs behind a waiver with a written justification.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List
+
+from tools.lint.core import Violation, func_defs, iter_py, rel, terminal_name
+
+NAME = "auth-before-unpickle"
+INVARIANT = __doc__
+
+ROOTS = ("src/repro/core/cluster",)
+
+_UNPICKLING = {"read_on_master", "loads"}
+
+
+def check_source(path: Path, text: str, repo: Path) -> List[Violation]:
+    """Violations for one file (see module docstring for the rule)."""
+    tree = ast.parse(text, filename=str(path))
+    out: List[Violation] = []
+    for fn in func_defs(tree):
+        calls = [n for n in ast.walk(fn) if isinstance(n, ast.Call)]
+        if not any(terminal_name(c.func) == "accept" for c in calls):
+            continue
+        digest_lines = [
+            c.lineno for c in calls if terminal_name(c.func) == "compare_digest"
+        ]
+        first_digest = min(digest_lines) if digest_lines else None
+        for c in calls:
+            name = terminal_name(c.func)
+            if name not in _UNPICKLING:
+                continue
+            # pickle.loads specifically, not any .loads
+            if name == "loads" and isinstance(c.func, ast.Attribute):
+                if terminal_name(c.func.value) not in ("pickle", "cPickle"):
+                    continue
+            if first_digest is None:
+                out.append(Violation(
+                    NAME, rel(path, repo), c.lineno,
+                    f"{fn.name}() accepts connections and unpickles "
+                    f"({name}) without any compare_digest auth check: the "
+                    f"wire is pickle — authenticate before deserializing",
+                ))
+            elif c.lineno < first_digest:
+                out.append(Violation(
+                    NAME, rel(path, repo), c.lineno,
+                    f"{fn.name}() unpickles ({name}, line {c.lineno}) "
+                    f"BEFORE the compare_digest check (line {first_digest}): "
+                    f"authenticate first",
+                ))
+    return out
+
+
+def run(repo: Path) -> List[Violation]:
+    """Gate every handshake path under ``core/cluster``."""
+    out: List[Violation] = []
+    for root in ROOTS:
+        for path in iter_py(repo / root):
+            out.extend(check_source(path, path.read_text(), repo))
+    return out

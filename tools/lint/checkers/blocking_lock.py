@@ -1,0 +1,112 @@
+"""blocking-under-lock: no blocking call while holding a lock.
+
+Every deadlock and latency cliff this codebase has flirted with starts
+the same way: a thread takes a lock and then blocks on something whose
+progress needs another thread — a socket send/recv, a blocking
+``Queue.get``/``put``, a ``.join()``, a ``subprocess.wait()``.  The
+convention (visible all over ``transport.py`` and ``server.py``) is
+lock-for-bookkeeping-only: mutate the counter or the deque under the
+lock, do the blocking work outside it.
+
+The checker scans ``with <lock>:`` bodies (any context manager whose
+name contains "lock") in the concurrency-bearing modules and flags
+calls that can block: socket ``recv``/``sendall``/``accept``/
+``select``, the framing helpers built on them (``_send_frame``/
+``_recv_frame``/``_recv_exact``), ``.join``/``.wait``, blocking
+``.get``/``.put`` on queue-shaped receivers, and ``read_on_master``/
+``read_on_slave``.  The two deliberate exceptions in the tree — a
+send lock that EXISTS to serialize whole frames onto a shared socket,
+and a ``Condition.wait`` that releases its lock while blocked — carry
+waivers explaining exactly that.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import List
+
+from tools.lint.core import Violation, rel, terminal_name
+
+NAME = "blocking-under-lock"
+INVARIANT = __doc__
+
+FILES = (
+    "src/repro/core/cluster/transport.py",
+    "src/repro/core/cluster/cluster.py",
+    "src/repro/serve/server.py",
+)
+
+_LOCKISH = re.compile(r"lock", re.IGNORECASE)
+_BLOCKING_ATTRS = {
+    "recv", "sendall", "accept", "select", "join", "wait",
+    "read_on_master", "read_on_slave",
+}
+_BLOCKING_FUNCS = {"_send_frame", "_recv_frame", "_recv_exact"}
+_QUEUEISH = re.compile(
+    r"(^|_)(q|wq|queue|stage|dest|items|to_slave|to_master)s?$"
+)
+
+
+def _is_nonblocking_qcall(call: ast.Call) -> bool:
+    """``q.get(block=False)`` / ``q.put_nowait`` style calls are fine."""
+    for kw in call.keywords:
+        if kw.arg == "block" and isinstance(kw.value, ast.Constant) \
+                and kw.value.value is False:
+            return True
+    return False
+
+
+def _scan_body(stmts, path: Path, repo: Path, out: List[Violation]) -> None:
+    for node in stmts:
+        for sub in ast.walk(node):
+            # nested defs run later, outside the lock
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                continue
+            if not isinstance(sub, ast.Call):
+                continue
+            name = terminal_name(sub.func)
+            blocked = None
+            if name in _BLOCKING_ATTRS and isinstance(sub.func, ast.Attribute):
+                blocked = f".{name}()"
+            elif name in _BLOCKING_FUNCS and isinstance(sub.func, ast.Name):
+                blocked = f"{name}()"
+            elif (
+                name in ("get", "put")
+                and isinstance(sub.func, ast.Attribute)
+                and _QUEUEISH.search(terminal_name(sub.func.value) or "")
+                and not _is_nonblocking_qcall(sub)
+            ):
+                blocked = f"queue .{name}()"
+            if blocked:
+                out.append(Violation(
+                    NAME, rel(path, repo), sub.lineno,
+                    f"blocking call {blocked} inside a `with <lock>:` body: "
+                    f"take the lock for bookkeeping only and block outside "
+                    f"it (a blocked holder stalls every other thread)",
+                ))
+
+
+def check_source(path: Path, text: str, repo: Path) -> List[Violation]:
+    """Violations for one file (see module docstring for the rule)."""
+    tree = ast.parse(text, filename=str(path))
+    out: List[Violation] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.With):
+            continue
+        if any(
+            _LOCKISH.search(terminal_name(item.context_expr) or "")
+            for item in node.items
+        ):
+            _scan_body(node.body, path, repo, out)
+    return out
+
+
+def run(repo: Path) -> List[Violation]:
+    """Gate the concurrency-bearing transport/cluster/server modules."""
+    out: List[Violation] = []
+    for f in FILES:
+        path = repo / f
+        if path.is_file():
+            out.extend(check_source(path, path.read_text(), repo))
+    return out

@@ -1,0 +1,84 @@
+"""clock-injection: cluster and serve code reads time through the
+injectable clock, never the wall directly.
+
+Deadlines, heartbeats, admission control, and autoscaling all hinge on
+time, and their tests only stay fast and deterministic because the
+clock is a constructor parameter (``RequestQueue(clock=...)``,
+``AutoScaler(clock=...)``, ``HeteroCluster(clock=...)``,
+``TCPTransport(clock=...)``).  A bare ``time.monotonic()`` /
+``time.time()`` / ``time.sleep()`` call re-couples the logic to the
+wall clock: the fake-clock tests silently stop covering that branch
+and the only way to test a timeout becomes actually waiting it out.
+
+The checker flags every CALL of ``time.monotonic``/``time.time``/
+``time.sleep`` (through any import alias) in ``core/cluster`` and
+``serve``.  Default-argument *references* (``clock: Callable =
+time.monotonic``) are not calls and pass — that is the sanctioned
+injection idiom.  ``time.perf_counter`` is exempt: it measures
+durations for accounting, never gates behavior.  Legitimate wall
+interactions — bandwidth/slowdown emulation, whose entire job is to
+really sleep, and slave-subprocess code with no test seam — carry
+inline waivers with justifications.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List
+
+from tools.lint.core import Violation, iter_py, rel
+
+NAME = "clock-injection"
+INVARIANT = __doc__
+
+ROOTS = ("src/repro/core/cluster", "src/repro/serve")
+
+_FORBIDDEN = {"monotonic", "time", "sleep"}
+
+
+def check_source(path: Path, text: str, repo: Path) -> List[Violation]:
+    """Violations for one file (see module docstring for the rule)."""
+    tree = ast.parse(text, filename=str(path))
+    time_aliases = set()
+    direct = {}  # local name -> time.* function it binds
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "time":
+                    time_aliases.add(alias.asname or "time")
+        elif isinstance(node, ast.ImportFrom) and node.module == "time":
+            for alias in node.names:
+                if alias.name in _FORBIDDEN:
+                    direct[alias.asname or alias.name] = alias.name
+    out: List[Violation] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        hit = None
+        if (
+            isinstance(func, ast.Attribute)
+            and func.attr in _FORBIDDEN
+            and isinstance(func.value, ast.Name)
+            and func.value.id in time_aliases
+        ):
+            hit = f"time.{func.attr}"
+        elif isinstance(func, ast.Name) and func.id in direct:
+            hit = f"time.{direct[func.id]}"
+        if hit:
+            out.append(Violation(
+                NAME, rel(path, repo), node.lineno,
+                f"direct {hit}() call: route through the injectable clock "
+                f"(self._clock / the clock parameter) so deadline and "
+                f"timeout logic stays testable without real waiting",
+            ))
+    return out
+
+
+def run(repo: Path) -> List[Violation]:
+    """Gate ``core/cluster`` and ``serve`` against wall-clock calls."""
+    out: List[Violation] = []
+    for root in ROOTS:
+        for path in iter_py(repo / root):
+            out.extend(check_source(path, path.read_text(), repo))
+    return out

@@ -1,0 +1,52 @@
+"""docstrings: every public symbol of the cluster + serving API stays
+documented.
+
+This is ``tools/check_docstrings.py`` — the PR 6 docstring-coverage
+gate — folded into the unified driver as its seventh checker.  The
+original script keeps its own CLI (``python tools/check_docstrings.py``,
+the invocation CI and ``tests/test_docstring_gate.py`` already use);
+this module reuses its walker so the two can never disagree about
+what "documented" means.
+
+Why it exists: ``core/cluster`` and ``serve`` are the repo's public
+machinery — the pieces the launch CLI, the benches, and external
+operators program against — and an undocumented public symbol there
+is an API nobody can use without reading the implementation.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+from typing import List
+
+from tools.lint.core import Violation, iter_py, rel
+
+NAME = "docstrings"
+INVARIANT = __doc__
+
+
+def run(repo: Path) -> List[Violation]:
+    """Walk the docstring gate's default roots through its own
+    ``_missing_in_module`` walker."""
+    from tools import check_docstrings as cd
+
+    out: List[Violation] = []
+    files = 0
+    for root in cd.DEFAULT_ROOTS:
+        rootp = repo / root
+        if not rootp.exists():
+            out.append(Violation(NAME, root, 1,
+                                 "docstring-gate root missing — refusing to pass"))
+            continue
+        for path in iter_py(rootp):
+            files += 1
+            for lineno, name in cd._missing_in_module(path):
+                out.append(Violation(
+                    NAME, rel(path, repo), lineno,
+                    f"undocumented public symbol: {name}",
+                ))
+    if files == 0 and not out:  # pragma: no cover - defensive, like the CLI
+        print("docstring gate: matched ZERO files", file=sys.stderr)
+        out.append(Violation(NAME, ".", 1,
+                             "docstring gate matched zero files — refusing to pass"))
+    return out

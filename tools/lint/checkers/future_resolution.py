@@ -1,0 +1,151 @@
+"""future-resolution: a future, once created, must be resolved on
+every path — including the exception paths.
+
+PR 6's review found exactly this bug class: a ``ServeFuture`` handed
+to a client, then stranded forever because the serve loop thread died
+on an exception path that never resolved it — the client blocks in
+``result()`` until its own timeout, with no error to show.  The same
+shape applies to ``Pending`` (an in-flight scatter): one dropped on
+the floor desynchronizes the FIFO gather order for the whole link.
+
+Two rules make the class un-reintroducible:
+
+1. Any function used as a ``threading.Thread`` target that touches
+   future/pipeline state (``ServeFuture``/``Pending``/``_resolve``/
+   ``inflight``/``_chain``) must consist of bookkeeping plus ONE
+   ``try`` whose handlers include a catch-all (bare ``except`` or
+   ``except BaseException``) and which has a ``finally`` — the shape
+   of ``ClusterServer._loop``, where the catch-all fails every
+   in-flight future and the ``finally`` rejects the leftovers.  A
+   statement that can raise OUTSIDE that try is a path where the
+   thread dies with futures unresolved.
+
+2. Every ``ServeFuture()`` / ``Pending(...)`` construction must be
+   returned by its enclosing function (directly or via a name that is
+   returned): constructing one and dropping it strands the consumer
+   by definition.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import List, Optional
+
+from tools.lint.core import Violation, func_defs, iter_py, rel, terminal_name
+
+NAME = "future-resolution"
+INVARIANT = __doc__
+
+ROOTS = ("src/repro/serve", "src/repro/core/cluster")
+
+_FUTUREISH = re.compile(r"ServeFuture|Pending|_resolve|inflight|_chain\b")
+_CONSTRUCTORS = {"ServeFuture", "Pending"}
+
+
+def _has_call(node: ast.stmt) -> bool:
+    return any(isinstance(n, ast.Call) for n in ast.walk(node))
+
+
+def _is_catchall_try(node: ast.stmt) -> bool:
+    if not isinstance(node, ast.Try):
+        return False
+    catchall = any(
+        h.type is None
+        or terminal_name(h.type) in ("BaseException",)
+        for h in node.handlers
+    )
+    return catchall and bool(node.finalbody)
+
+
+def _thread_targets(tree: ast.Module) -> List[str]:
+    """Terminal names of in-module ``threading.Thread(target=...)``
+    callables."""
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and terminal_name(node.func) == "Thread":
+            for kw in node.keywords:
+                if kw.arg == "target":
+                    out.append(terminal_name(kw.value))
+    return out
+
+
+def _check_loop_shape(fn, path: Path, repo: Path, out: List[Violation]) -> None:
+    body = fn.body
+    if body and isinstance(body[0], ast.Expr) \
+            and isinstance(body[0].value, ast.Constant):
+        body = body[1:]  # docstring
+    for stmt in body:
+        if _is_catchall_try(stmt):
+            continue
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.Pass, ast.Import,
+                             ast.ImportFrom)) and not _has_call(stmt):
+            continue
+        out.append(Violation(
+            NAME, rel(path, repo), stmt.lineno,
+            f"thread target {fn.name}() owns futures/pipeline state but "
+            f"this statement is outside a catch-all try/finally: an "
+            f"exception here kills the thread with futures unresolved "
+            f"(the PR 6 stranded-ServeFuture bug class)",
+        ))
+
+
+def _returned_names(fn) -> set:
+    names = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Name):
+            names.add(node.value.id)
+    return names
+
+
+def check_source(path: Path, text: str, repo: Path) -> List[Violation]:
+    """Violations for one file (see module docstring for the rules)."""
+    tree = ast.parse(text, filename=str(path))
+    out: List[Violation] = []
+    targets = set(_thread_targets(tree))
+    for fn in func_defs(tree):
+        src_seg = ast.get_source_segment(text, fn) or ""
+        if fn.name in targets and _FUTUREISH.search(src_seg):
+            _check_loop_shape(fn, path, repo, out)
+        returned = _returned_names(fn)
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and terminal_name(node.func) in _CONSTRUCTORS):
+                continue
+            owner = _owner_stmt(fn, node)
+            if owner is None:
+                continue  # not a statement-level construction we track
+            if isinstance(owner, ast.Return):
+                continue
+            if isinstance(owner, ast.Assign) and all(
+                isinstance(t, ast.Name) and t.id in returned
+                for t in owner.targets
+            ):
+                continue
+            out.append(Violation(
+                NAME, rel(path, repo), node.lineno,
+                f"{terminal_name(node.func)} constructed here is neither "
+                f"returned nor assigned to a returned name: an unreturned "
+                f"future/pending is stranded by construction",
+            ))
+    return out
+
+
+def _owner_stmt(fn, call: ast.Call) -> Optional[ast.stmt]:
+    """The Return/Assign statement whose value IS ``call`` (not merely
+    contains it), or None."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and node.value is call:
+            return node
+        if isinstance(node, ast.Assign) and node.value is call:
+            return node
+    return None
+
+
+def run(repo: Path) -> List[Violation]:
+    """Gate ``serve`` and ``core/cluster`` future/pending lifecycles."""
+    out: List[Violation] = []
+    for root in ROOTS:
+        for path in iter_py(repo / root):
+            out.extend(check_source(path, path.read_text(), repo))
+    return out

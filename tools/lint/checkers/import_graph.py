@@ -1,0 +1,193 @@
+"""import-graph: the TCP slave entrypoint must never transitively
+import jax at module level.
+
+Slave subprocesses are spawned as ``python -m
+repro.core.cluster.protocol`` — one per device, sometimes on hosts
+with no accelerator stack at all — and the whole elastic design
+assumes they come up in tens of milliseconds.  The PEP 562 lazy
+``__init__`` scheme (``repro/lazy.py``) exists to guarantee that, but
+until this checker nothing enforced it: one eager ``import jax`` added
+anywhere on the entrypoint's module-level import chain would silently
+cost every spawn seconds and break jax-less slave hosts.
+
+The checker builds the static module-level import graph from the
+entry module (imports inside function bodies are LAZY by definition
+and excluded; ``if TYPE_CHECKING:`` blocks never execute and are
+excluded; package ``__init__`` modules along every import path are
+included, because importing a submodule executes them) and fails if
+any forbidden top-level distribution is reachable, printing the chain
+that reaches it.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from tools.lint.core import Violation, rel
+
+NAME = "import-graph"
+INVARIANT = __doc__
+
+ENTRY = "repro.core.cluster.protocol"
+FORBIDDEN = ("jax", "jaxlib")
+
+
+def module_path(src: Path, modname: str) -> Optional[Path]:
+    """The file implementing ``modname`` under ``src``: ``mod.py`` or a
+    package's ``__init__.py``; None for namespace packages (no file
+    executes) and external modules."""
+    base = src.joinpath(*modname.split("."))
+    if base.with_suffix(".py").is_file():
+        return base.with_suffix(".py")
+    if (base / "__init__.py").is_file():
+        return base / "__init__.py"
+    return None
+
+
+def _is_type_checking(test: ast.expr) -> bool:
+    name = test.attr if isinstance(test, ast.Attribute) else getattr(test, "id", "")
+    return name == "TYPE_CHECKING"
+
+
+def toplevel_imports(tree: ast.Module) -> List[Tuple[ast.stmt, int]]:
+    """Import statements that execute at module import time: module
+    body plus class bodies and top-level ``if``/``try``/``with`` blocks
+    — but NOT function bodies (lazy) or TYPE_CHECKING guards (never
+    executed)."""
+    out: List[Tuple[ast.stmt, int]] = []
+
+    def walk(stmts):
+        for node in stmts:
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                out.append((node, node.lineno))
+            elif isinstance(node, ast.If):
+                if not _is_type_checking(node.test):
+                    walk(node.body)
+                walk(node.orelse)
+            elif isinstance(node, ast.Try):
+                walk(node.body)
+                for h in node.handlers:
+                    walk(h.body)
+                walk(node.orelse)
+                walk(node.finalbody)
+            elif isinstance(node, (ast.With, ast.ClassDef)):
+                walk(node.body)
+
+    walk(tree.body)
+    return out
+
+
+def _deps_of(src: Path, modname: str) -> List[Tuple[str, int]]:
+    """(imported module name, line) pairs for ``modname``'s module-level
+    imports, relative imports resolved against its package."""
+    path = module_path(src, modname)
+    if path is None:
+        return []
+    tree = ast.parse(path.read_text(), filename=str(path))
+    pkg_parts = modname.split(".")
+    if path.name != "__init__.py":
+        pkg_parts = pkg_parts[:-1]
+    deps: List[Tuple[str, int]] = []
+    for node, line in toplevel_imports(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                deps.append((alias.name, line))
+        else:  # ImportFrom
+            if node.level:
+                base_parts = pkg_parts[: len(pkg_parts) - (node.level - 1)]
+                base = ".".join(base_parts + ([node.module] if node.module else []))
+            else:
+                base = node.module or ""
+            if base:
+                deps.append((base, line))
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                cand = f"{base}.{alias.name}" if base else alias.name
+                # only a real submodule is an import edge; an attribute
+                # pulled from the base module is covered by the base edge
+                if module_path(src, cand) is not None:
+                    deps.append((cand, line))
+    return deps
+
+
+def _expand(src: Path, dep: str) -> List[str]:
+    """A dependency plus every ancestor package whose ``__init__``
+    executes on the way to it."""
+    parts = dep.split(".")
+    out = []
+    for i in range(1, len(parts) + 1):
+        prefix = ".".join(parts[:i])
+        if i == len(parts) or module_path(src, prefix) is not None:
+            out.append(prefix)
+    return out
+
+
+def reachable_from(
+    src: Path, entry: str
+) -> Tuple[Dict[str, List[Tuple[str, int]]], Dict[str, Tuple[str, int]]]:
+    """BFS the module-level import graph from ``entry``.
+
+    Returns ``(externals, parent)``: ``externals`` maps each reachable
+    internal module to its non-repo imports ``(name, line)``;
+    ``parent`` maps each reached module to ``(importer, line)`` for
+    chain reconstruction."""
+    externals: Dict[str, List[Tuple[str, int]]] = {}
+    parent: Dict[str, Tuple[str, int]] = {}
+    queue = [entry]
+    seen = {entry}
+    while queue:
+        mod = queue.pop(0)
+        externals[mod] = []
+        for dep, line in _deps_of(src, mod):
+            internal = False
+            for d in _expand(src, dep):
+                if module_path(src, d) is not None:
+                    internal = True
+                    if d not in seen:
+                        seen.add(d)
+                        parent[d] = (mod, line)
+                        queue.append(d)
+            if not internal:
+                externals[mod].append((dep.split(".")[0], line))
+    return externals, parent
+
+
+def chain_to(parent: Dict[str, Tuple[str, int]], mod: str, entry: str) -> str:
+    """Human-readable import chain ``entry -> ... -> mod``."""
+    hops = [mod]
+    while mod != entry and mod in parent:
+        mod = parent[mod][0]
+        hops.append(mod)
+    return " -> ".join(reversed(hops))
+
+
+def check(
+    src: Path, entry: str, forbidden: Sequence[str], repo: Path
+) -> List[Violation]:
+    """Violations for every forbidden top-level import reachable from
+    ``entry`` at module import time."""
+    if module_path(src, entry) is None:
+        return [Violation(NAME, rel(src, repo), 1,
+                          f"entry module {entry!r} not found — refusing to pass")]
+    externals, parent = reachable_from(src, entry)
+    out: List[Violation] = []
+    for mod, ext in sorted(externals.items()):
+        for name, line in ext:
+            if name in forbidden:
+                path = module_path(src, mod)
+                out.append(Violation(
+                    NAME, rel(path, repo), line,
+                    f"module-level import of {name!r} is reachable from the "
+                    f"slave entrypoint ({chain_to(parent, mod, entry)}): slave "
+                    f"subprocesses must stay {'/'.join(forbidden)}-free — make "
+                    f"it lazy (function-level or PEP 562, see repro/lazy.py)",
+                ))
+    return out
+
+
+def run(repo: Path) -> List[Violation]:
+    """Gate the repo: ``repro.core.cluster.protocol`` must not reach
+    jax/jaxlib through module-level imports."""
+    return check(repo / "src", ENTRY, FORBIDDEN, repo)

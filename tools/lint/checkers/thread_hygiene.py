@@ -1,0 +1,95 @@
+"""thread-hygiene: threads must be daemon-or-joined, and exceptions
+must never be silently swallowed.
+
+A non-daemon thread that nobody joins keeps the interpreter alive
+after ``main`` returns — on a slave subprocess that means a zombie
+holding the port; on the master it means a test suite that hangs at
+exit (the reason ``protocol.main`` leaves via ``os._exit``).  Every
+loop thread in the tree is therefore either ``daemon=True`` or joined
+on a shutdown path, and this checker keeps it that way: a
+``threading.Thread(...)`` without ``daemon=True`` is flagged unless a
+``.join(`` on the receiving name appears in the same file.
+
+Separately, a handler whose entire body is ``pass`` for a broad type
+(bare ``except:``, ``except Exception:``, ``except BaseException:``)
+erases errors the operator needed to see — a wedged cluster with an
+empty log.  Narrow best-effort handlers (``except OSError: pass`` on
+a double-close) are idiomatic and allowed; broad ones must either
+record the error somewhere observable or carry a waiver saying why
+silence is correct.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List
+
+from tools.lint.core import Violation, iter_py, rel, terminal_name
+
+NAME = "thread-hygiene"
+INVARIANT = __doc__
+
+ROOTS = ("src/repro/core/cluster", "src/repro/serve")
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def check_source(path: Path, text: str, repo: Path) -> List[Violation]:
+    """Violations for one file (see module docstring for the rules)."""
+    tree = ast.parse(text, filename=str(path))
+    out: List[Violation] = []
+    joined = {
+        terminal_name(n.func.value)
+        for n in ast.walk(tree)
+        if isinstance(n, ast.Call)
+        and isinstance(n.func, ast.Attribute)
+        and n.func.attr == "join"
+    }
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and terminal_name(node.func) == "Thread":
+            daemon = any(
+                kw.arg == "daemon"
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value is True
+                for kw in node.keywords
+            )
+            if daemon:
+                continue
+            # joined via the name it is assigned to?  (t = Thread(...);
+            # ... t.join()) — same-file search, the shutdown-path idiom
+            assigned = {
+                terminal_name(t)
+                for p in ast.walk(tree)
+                if isinstance(p, ast.Assign) and p.value is node
+                for t in p.targets
+            }
+            if assigned & joined:
+                continue
+            out.append(Violation(
+                NAME, rel(path, repo), node.lineno,
+                "Thread created without daemon=True and never joined in "
+                "this file: it can outlive shutdown and hang interpreter "
+                "exit — make it a daemon or join it on the shutdown path",
+            ))
+        elif isinstance(node, ast.ExceptHandler):
+            body_is_pass = all(isinstance(s, ast.Pass) for s in node.body)
+            broad = node.type is None or terminal_name(node.type) in _BROAD
+            if body_is_pass and broad:
+                what = "bare except" if node.type is None else \
+                    f"except {terminal_name(node.type)}"
+                out.append(Violation(
+                    NAME, rel(path, repo), node.lineno,
+                    f"{what}: pass swallows every error silently — record "
+                    f"the failure somewhere observable, narrow the type, "
+                    f"or waive with a reason why silence is correct here",
+                ))
+    return out
+
+
+def run(repo: Path) -> List[Violation]:
+    """Gate thread lifecycle + swallowed exceptions in cluster/serve."""
+    out: List[Violation] = []
+    for root in ROOTS:
+        for path in iter_py(repo / root):
+            out.extend(check_source(path, path.read_text(), repo))
+    return out

@@ -1,0 +1,126 @@
+"""Shared plumbing for the reprolint checkers.
+
+A checker is a module exposing ``NAME`` (the id violations and waivers
+use), ``INVARIANT`` (the ``--explain`` text: what the rule is and why
+the repo needs it), and ``run(repo) -> list[Violation]``.
+
+Allowlisting is inline and per-checker: a violation is waived by a
+
+    # reprolint: allow=<checker>[,<checker>...] -- <justification>
+
+comment on the flagged line or the line directly above it.  The
+justification is MANDATORY — a reasonless waiver suppresses nothing —
+so every exemption in the tree documents why the invariant legally
+does not apply at that site (see docs/development.md, allowlist
+policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+WAIVER_RE = re.compile(
+    r"#\s*reprolint:\s*allow=([A-Za-z0-9_,-]+)\s*(?:--+|—)\s*(.*)"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One broken invariant at one source location."""
+
+    checker: str
+    path: str  # repo-relative, posix separators
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        """``path:line: [checker] message`` — the CI-greppable form."""
+        return f"{self.path}:{self.line}: [{self.checker}] {self.message}"
+
+
+def rel(path: Path, repo: Path) -> str:
+    """``path`` relative to ``repo`` as a posix string (or absolute when
+    outside the repo, e.g. a test fixture directory)."""
+    try:
+        return path.resolve().relative_to(repo.resolve()).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def iter_py(root: Path) -> List[Path]:
+    """Every ``.py`` under ``root`` (sorted), skipping ``__pycache__``."""
+    return sorted(
+        p for p in root.rglob("*.py") if "__pycache__" not in p.parts
+    )
+
+
+def parse_waivers(text: str) -> Dict[int, List[Tuple[set, str]]]:
+    """Map line -> [(checker names, justification)] for every
+    ``# reprolint: allow=...`` comment, via the tokenizer (so waivers
+    inside string literals are not misread as live)."""
+    waivers: Dict[int, List[Tuple[set, str]]] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(text).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = WAIVER_RE.search(tok.string)
+            if m is None:
+                continue
+            names = {n.strip() for n in m.group(1).split(",") if n.strip()}
+            reason = m.group(2).strip()
+            waivers.setdefault(tok.start[0], []).append((names, reason))
+    except tokenize.TokenError:  # pragma: no cover - unparsable file
+        pass
+    return waivers
+
+
+def apply_waivers(
+    violations: Sequence[Violation], repo: Path
+) -> Tuple[List[Violation], int]:
+    """Drop violations covered by an inline waiver WITH a justification.
+
+    A waiver on line L covers violations on L (trailing comment) and
+    L+1 (own-line comment above the flagged statement).  Returns the
+    surviving violations and the count waived."""
+    survivors: List[Violation] = []
+    cache: Dict[str, Dict[int, List[Tuple[set, str]]]] = {}
+    waived = 0
+    for v in violations:
+        path = repo / v.path if not Path(v.path).is_absolute() else Path(v.path)
+        if v.path not in cache:
+            try:
+                cache[v.path] = parse_waivers(path.read_text())
+            except OSError:
+                cache[v.path] = {}
+        entries = cache[v.path].get(v.line, []) + cache[v.path].get(v.line - 1, [])
+        if any(v.checker in names and reason for names, reason in entries):
+            waived += 1
+        else:
+            survivors.append(v)
+    return survivors, waived
+
+
+def terminal_name(node) -> str:
+    """The rightmost identifier of a ``Name``/``Attribute`` chain
+    (``self._send_lock`` -> ``_send_lock``), or ``""``."""
+    import ast
+
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def func_defs(tree) -> Iterable:
+    """Every (Async)FunctionDef in ``tree``, nested ones included."""
+    import ast
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node

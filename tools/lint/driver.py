@@ -1,0 +1,108 @@
+"""The ``python -m tools.lint`` driver: run every checker, apply the
+inline waivers, report, and gate.
+
+Exit status: 0 = every invariant holds (waivers included), 1 =
+violations, 2 = usage error (unknown checker name).  ``--explain``
+prints each checker's invariant and why the repo enforces it —
+the text a developer staring at a red CI lane needs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import textwrap
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from tools.lint.checkers import ALL_CHECKERS
+from tools.lint.core import Violation, apply_waivers
+
+
+def repo_root() -> Path:
+    """The repository root (two levels above this package)."""
+    return Path(__file__).resolve().parent.parent.parent
+
+
+def _select(only: Optional[str]):
+    if only is None:
+        return list(ALL_CHECKERS), None
+    names = {n.strip() for n in only.split(",") if n.strip()}
+    known = {c.NAME for c in ALL_CHECKERS}
+    unknown = names - known
+    if unknown:
+        return None, (
+            f"unknown checker(s) {sorted(unknown)}; known: {sorted(known)}"
+        )
+    return [c for c in ALL_CHECKERS if c.NAME in names], None
+
+
+def explain(checkers) -> None:
+    """Print every selected checker's invariant rationale."""
+    for c in checkers:
+        print(f"== {c.NAME} " + "=" * max(1, 66 - len(c.NAME)))
+        print(textwrap.dedent(c.INVARIANT).strip())
+        print()
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI entry — see module docstring."""
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="reprolint: repo-specific invariant checkers "
+                    "(see docs/development.md)",
+    )
+    ap.add_argument("--only", default=None, metavar="NAME[,NAME...]",
+                    help="run only these checkers")
+    ap.add_argument("--explain", action="store_true",
+                    help="print each checker's invariant and rationale, "
+                         "then exit")
+    ap.add_argument("--list", action="store_true", dest="list_checkers",
+                    help="list checker names and exit")
+    ap.add_argument("--root", default=None,
+                    help="repo root to lint (default: this checkout)")
+    args = ap.parse_args(argv)
+
+    checkers, err = _select(args.only)
+    if err:
+        print(err, file=sys.stderr)
+        return 2
+    if args.list_checkers:
+        for c in checkers:
+            first = textwrap.dedent(c.INVARIANT).strip().splitlines()[0]
+            print(f"{c.NAME:22s} {first}")
+        return 0
+    if args.explain:
+        explain(checkers)
+        return 0
+
+    repo = Path(args.root).resolve() if args.root else repo_root()
+    all_violations: List[Violation] = []
+    summary = []
+    total_waived = 0
+    for c in checkers:
+        found = c.run(repo)
+        kept, waived = apply_waivers(found, repo)
+        total_waived += waived
+        all_violations.extend(kept)
+        summary.append((c.NAME, len(kept), waived))
+    for v in sorted(all_violations, key=lambda v: (v.path, v.line)):
+        print(v)
+    bad = len(all_violations)
+    for name, kept, waived in summary:
+        state = "FAILED" if kept else "ok"
+        extra = f" ({waived} waived)" if waived else ""
+        print(f"# {name}: {kept} violation(s){extra} -> {state}",
+              file=sys.stderr)
+    print(
+        f"# reprolint: {len(checkers)} checkers, {bad} violation(s), "
+        f"{total_waived} waived -> {'FAILED' if bad else 'ok'}",
+        file=sys.stderr,
+    )
+    if bad:
+        print("# run `python -m tools.lint --explain` for each invariant's "
+              "rationale and the waiver policy", file=sys.stderr)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via __main__
+    sys.exit(main())

@@ -1,0 +1,324 @@
+"""Runtime lock-order sanitizer: record every lock-acquisition order,
+build the global lock-order graph, fail on cycles.
+
+A deadlock needs two threads taking the same pair of locks in opposite
+orders — and the cluster now has plenty of candidates: transport byte
+counters, writer queues, the serve loop's stats lock, the request
+queue's condition.  Rather than hoping the chaos lane happens to
+interleave the fatal schedule, the sanitizer makes ORDER itself the
+observable: ``install()`` wraps ``threading.Lock``/``RLock`` so every
+acquisition records "held X while acquiring Y" edges keyed by lock
+ALLOCATION SITE (file:line — the TSan convention: two queue mutexes
+born at the same line are one node, so an AB/BA inversion between
+instances is still a cycle).  Any cycle in the aggregated graph is a
+potential deadlock, regardless of whether this run's timing ever
+wedged.
+
+Run a test lane under the sanitizer:
+
+    python -m tools.lint.lockorder --report lockorder.json -- \
+        -q tests/test_fault_tolerance.py tests/test_elastic.py
+
+The report JSON carries the node table, every ordered edge, and the
+detected cycles; exit status is pytest's, or 3 when the tests passed
+but a lock-order cycle was detected.  Edges are recorded at acquire
+ENTRY (before blocking), so a run that actually deadlocks still has
+the inverted edge on record when the lane times out.
+
+Limitations (by design, documented in docs/development.md): locks
+created before ``install()`` are invisible; same-site self-edges are
+ignored (two instances of one class locked in sequence); C-extension
+internal locks are not wrapped.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+from collections import defaultdict
+from typing import Dict, List, Optional, Set, Tuple
+
+_REAL_LOCK = threading.Lock
+_REAL_RLOCK = threading.RLock
+
+
+class LockOrderMonitor:
+    """Aggregates per-thread acquisition order into a site-level graph.
+
+    ``edges[a]`` is the set of sites acquired while a lock born at
+    site ``a`` was held; ``cycles()`` returns every elementary cycle
+    found by DFS over that graph (each one a potential deadlock)."""
+
+    def __init__(self):
+        self._mu = _REAL_LOCK()  # the monitor's own lock is never wrapped
+        self.edges: Dict[str, Set[str]] = defaultdict(set)
+        self.sites: Dict[str, int] = defaultdict(int)  # site -> locks born
+        self.acquisitions = 0
+        self._tls = threading.local()
+
+    # -- per-thread held stack -----------------------------------------
+    def _held(self) -> List[str]:
+        held = getattr(self._tls, "held", None)
+        if held is None:
+            held = self._tls.held = []
+        return held
+
+    def note_alloc(self, site: str) -> None:
+        """Record one lock allocated at ``site``."""
+        with self._mu:
+            self.sites[site] += 1
+
+    def note_acquire(self, site: str) -> None:
+        """Record edges held-site -> ``site`` and push it; called at
+        acquire ENTRY so a real deadlock still records its edge."""
+        held = self._held()
+        if held:
+            with self._mu:
+                self.acquisitions += 1
+                for h in held:
+                    if h != site:  # same-site self-edges: see module doc
+                        self.edges[h].add(site)
+        else:
+            with self._mu:
+                self.acquisitions += 1
+        held.append(site)
+
+    def note_release(self, site: str) -> None:
+        """Pop the most recent acquisition of ``site`` for this thread."""
+        held = self._held()
+        for i in range(len(held) - 1, -1, -1):
+            if held[i] == site:
+                del held[i]
+                return
+
+    def note_failed(self, site: str) -> None:
+        """A non-blocking acquire returned False: undo the push."""
+        self.note_release(site)
+
+    # -- analysis ------------------------------------------------------
+    def cycles(self) -> List[List[str]]:
+        """Every elementary cycle in the site-level order graph."""
+        with self._mu:
+            graph = {a: sorted(bs) for a, bs in self.edges.items()}
+        found: List[List[str]] = []
+        seen_keys: Set[Tuple[str, ...]] = set()
+
+        def dfs(start: str, node: str, path: List[str], onpath: Set[str]):
+            for nxt in graph.get(node, ()):
+                if nxt == start:
+                    cyc = path[:]
+                    key = tuple(sorted(cyc))
+                    if key not in seen_keys:
+                        seen_keys.add(key)
+                        found.append(cyc)
+                elif nxt not in onpath and nxt > start:
+                    # only expand nodes > start: each cycle found once,
+                    # rooted at its smallest node
+                    onpath.add(nxt)
+                    dfs(start, nxt, path + [nxt], onpath)
+                    onpath.discard(nxt)
+
+        for start in sorted(graph):
+            dfs(start, start, [start], {start})
+        return found
+
+    def report(self) -> dict:
+        """JSON-serializable summary: sites, edges, cycles, counters."""
+        with self._mu:
+            edges = sorted((a, b) for a, bs in self.edges.items() for b in bs)
+            sites = dict(sorted(self.sites.items()))
+            acq = self.acquisitions
+        return {
+            "locks_by_site": sites,
+            "ordered_edges": edges,
+            "cycles": self.cycles(),
+            "nested_acquisitions": acq,
+        }
+
+
+def _alloc_site(depth: int = 2) -> str:
+    f = sys._getframe(depth)
+    return f"{f.f_code.co_filename}:{f.f_lineno}"
+
+
+class _SanitizedLock:
+    """A ``threading.Lock`` stand-in that reports to the monitor.
+
+    Duck-types the full lock protocol (``acquire``/``release``/
+    ``locked``/context manager), so ``queue.Queue`` mutexes and
+    ``threading.Condition(lock)`` work unchanged — ``Condition.wait``
+    releases through ``release()``, which keeps the held-stack honest."""
+
+    def __init__(self, monitor: LockOrderMonitor, site: str):
+        self._inner = _REAL_LOCK()
+        self._monitor = monitor
+        self._site = site
+        monitor.note_alloc(site)
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        self._monitor.note_acquire(self._site)
+        ok = self._inner.acquire(blocking, timeout)
+        if not ok:
+            self._monitor.note_failed(self._site)
+        return ok
+
+    def release(self) -> None:
+        self._inner.release()
+        self._monitor.note_release(self._site)
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<SanitizedLock {self._site} {self._inner!r}>"
+
+
+class _SanitizedRLock:
+    """``threading.RLock`` stand-in: reentrant acquisitions are counted
+    but only the FIRST records an edge (a lock cannot deadlock against
+    itself by reentering).  Exposes ``_is_owned``/``_release_save``/
+    ``_acquire_restore`` so ``threading.Condition`` wait semantics stay
+    correct AND keep the monitor's held-stack in sync."""
+
+    def __init__(self, monitor: LockOrderMonitor, site: str):
+        self._inner = _REAL_RLOCK()
+        self._monitor = monitor
+        self._site = site
+        self._tls = threading.local()
+        monitor.note_alloc(site)
+
+    def _depth(self) -> int:
+        return getattr(self._tls, "depth", 0)
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        first = self._depth() == 0
+        if first:
+            self._monitor.note_acquire(self._site)
+        ok = self._inner.acquire(blocking, timeout)
+        if ok:
+            self._tls.depth = self._depth() + 1
+        elif first:
+            self._monitor.note_failed(self._site)
+        return ok
+
+    def release(self) -> None:
+        self._inner.release()
+        self._tls.depth = self._depth() - 1
+        if self._depth() == 0:
+            self._monitor.note_release(self._site)
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    # Condition protocol (threading.Condition getattr-probes for these)
+    def _is_owned(self) -> bool:
+        return self._inner._is_owned()
+
+    def _release_save(self):
+        state = self._inner._release_save()
+        depth, self._tls.depth = self._depth(), 0
+        self._monitor.note_release(self._site)
+        return (state, depth)
+
+    def _acquire_restore(self, saved) -> None:
+        state, depth = saved
+        self._monitor.note_acquire(self._site)
+        self._inner._acquire_restore(state)
+        self._tls.depth = depth
+
+
+_installed: Optional[LockOrderMonitor] = None
+
+
+def install() -> LockOrderMonitor:
+    """Patch ``threading.Lock``/``RLock`` with monitored wrappers and
+    return the monitor.  Locks created BEFORE install are untouched.
+    Idempotent: a second install returns the active monitor."""
+    global _installed
+    if _installed is not None:
+        return _installed
+    monitor = LockOrderMonitor()
+
+    def make_lock():
+        return _SanitizedLock(monitor, _alloc_site())
+
+    def make_rlock():
+        return _SanitizedRLock(monitor, _alloc_site())
+
+    threading.Lock = make_lock
+    threading.RLock = make_rlock
+    _installed = monitor
+    return monitor
+
+
+def uninstall() -> None:
+    """Restore the real lock factories (existing wrappers live on)."""
+    global _installed
+    threading.Lock = _REAL_LOCK
+    threading.RLock = _REAL_RLOCK
+    _installed = None
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    """Run pytest under the sanitizer — see module docstring.
+
+    Everything after ``--`` is passed to pytest verbatim.  Exit code:
+    pytest's when nonzero, else 3 when a lock-order cycle was found,
+    else 0."""
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint.lockorder",
+        description="run pytest under the lock-order sanitizer",
+    )
+    ap.add_argument("--report", default=None, metavar="FILE",
+                    help="write the JSON lock-order report here")
+    ap.add_argument("pytest_args", nargs="*",
+                    help="arguments after -- go to pytest")
+    if argv is None:
+        argv = sys.argv[1:]
+    if "--" in argv:
+        split = argv.index("--")
+        own, rest = argv[:split], argv[split + 1:]
+    else:
+        own, rest = argv, []
+    args = ap.parse_args(own)
+    pytest_args = args.pytest_args + rest
+
+    monitor = install()
+    try:
+        import pytest
+
+        rc = pytest.main(pytest_args)
+    finally:
+        uninstall()
+    rep = monitor.report()
+    cycles = rep["cycles"]
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(rep, f, indent=2, sort_keys=True)
+    print(
+        f"# lockorder: {sum(rep['locks_by_site'].values())} locks at "
+        f"{len(rep['locks_by_site'])} sites, "
+        f"{len(rep['ordered_edges'])} ordered edges, "
+        f"{len(cycles)} cycle(s) -> {'FAILED' if cycles else 'ok'}",
+        file=sys.stderr,
+    )
+    for cyc in cycles:
+        print("#   potential deadlock: " + " -> ".join(cyc + [cyc[0]]),
+              file=sys.stderr)
+    if int(rc) != 0:
+        return int(rc)
+    return 3 if cycles else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
