@@ -16,15 +16,20 @@ devices.  Four comparisons:
      cluster, the host's actual wall-clock,
   5. the wire itself: per-layer scatter+gather BYTES of kernel vs
      spatial partitioning (``comm_bytes_kernel_vs_spatial``), the fp16
-     codec's byte reduction (``codec_gain``), and the train-step
-     wall-clock of ``partition="auto"`` vs the paper's kernel axis under
-     a 25 Mbps link (``auto_partition_trainstep_gain``) — all exact byte
-     counts or deterministic sim compute,
+     codec's byte reduction (``codec_gain``), the int8 absmax stage's
+     ~4x cut (``int8_codec_bytes_gain``), the top-k sparsifier's
+     per-gradient-slice cut (``topk_grad_bytes_gain``), and the
+     train-step wall-clock of ``partition="auto"`` vs the paper's
+     kernel axis under a 25 Mbps link
+     (``auto_partition_trainstep_gain``) — all exact byte counts or
+     deterministic sim compute,
   6. the transport seam: the SAME deterministic sim cluster driven over
      real localhost TCP subprocess slaves vs the in-process queue
      emulation (``tcp_vs_inproc_overhead``) — what serialization +
      kernel sockets + real process scheduling cost on top of the
-     emulated wire.
+     emulated wire — and the zero-copy shared-memory rings vs tcp on a
+     wire-dominated co-located train step (``shm_vs_tcp_gain``), where
+     skipping pickle + kernel socket copies is the whole point.
 
 Rows 1-3 and 5-6 run the ``sim`` backend (deterministic sleep-for-flops
 virtual devices), so the protocol effects are not drowned by host CPU
@@ -48,9 +53,12 @@ SLOWDOWNS = [1.0, 1.5, 3.0]  # master + 1.5x slave + 3x-slow slave
 TRAJECTORY_ROWS = (
     "comm_bytes_kernel_vs_spatial",
     "codec_gain",
+    "int8_codec_bytes_gain",
+    "topk_grad_bytes_gain",
     "auto_partition_trainstep_gain",
     "trainstep_pipeline_gain",
     "tcp_vs_inproc_overhead",
+    "shm_vs_tcp_gain",
     "repartition_overhead",
 )
 
@@ -62,8 +70,11 @@ TRAJECTORY_ROWS = (
 GAIN_ROWS = (
     "comm_bytes_kernel_vs_spatial",
     "codec_gain",
+    "int8_codec_bytes_gain",
+    "topk_grad_bytes_gain",
     "auto_partition_trainstep_gain",
     "trainstep_pipeline_gain",
+    "shm_vs_tcp_gain",
 )
 
 
@@ -299,6 +310,43 @@ def run(smoke: bool = False):
          f"(~2 means the codec halves the wire; ratio, not us)")
     )
 
+    # (b2) the int8 stage quarters the SAME traffic (each float tensor
+    # ships 1 B/element plus one 8 B scale).
+    wire_int8 = {}
+    for spec in (None, "int8"):
+        cluster = HeteroCluster(slow4, ["sim"] * 4, wire_codec=spec)
+        try:
+            cluster.probe_times = list(slow4)
+            cluster.conv_forward(xw, ww)
+            cluster.conv_backward(xw, ww, gw)
+            wire_int8[spec or "fp32"] = cluster.comm_bytes
+        finally:
+            cluster.shutdown()
+    ratio = wire_int8["fp32"] / wire_int8["int8"]
+    rows.append(
+        ("int8_codec_bytes_gain", ratio,
+         f"fp32={wire_int8['fp32']}B int8={wire_int8['int8']}B "
+         f"(~4 means absmax int8 quarters the wire; ratio, not us)")
+    )
+
+    # (b3) top-k sparsified gradients: the GRADIENT-SLICE bytes of a
+    # bwd message at topk:0.05 vs the dense fp32 slice (indices+values
+    # = 8 B per surviving entry, so ~frac*8/4 of dense).  Codec-level
+    # and exact — the grads class is the only slot topk touches.
+    from repro.core.cluster import codec as codec_mod
+
+    ck = codec_mod.WireCodec.from_spec("grads=topk:0.05")
+    _, (_, _, enc_g) = ck.encode_down(("bwd", (xw, ww, gw)))
+    dense_b = gw.nbytes
+    sparse_b = codec_mod.wire_nbytes(enc_g)
+    ratio = dense_b / sparse_b
+    rows.append(
+        ("topk_grad_bytes_gain", ratio,
+         f"dense={dense_b}B topk:0.05={sparse_b}B per gradient slice "
+         f"(~10 means only the largest 5% of entries ship at 8B each; "
+         f"ratio, not us)")
+    )
+
     # (c) wall-clock: the comm-aware auto axis vs the paper's kernel axis
     # on a 2-layer pipelined train step over 25 Mbps links (the paper's
     # regime is ~5 Mbps; 25 keeps the bench fast while comm still
@@ -369,6 +417,47 @@ def run(smoke: bool = False):
         ("tcp_vs_inproc_overhead", ratio,
          f"tcp/inproc={ratio:.2f}x wall-clock on the same sim cluster "
          f"(~1 means the real wire adds little; ratio, not us)")
+    )
+
+    # -- 6b. zero-copy shm rings vs tcp on a WIRE-DOMINATED step ---------
+    # Co-located 2-slave train step where the transport IS the cost:
+    # ~17 MB activations through 1x1 kernels on fast sim devices, so tcp
+    # pays pickle serialization + two kernel socket copies per hop while
+    # shm writes each array once into the ring and copies it out once.
+    # Deterministic compute (sim sleeps), real transport wall-clock.
+    xb = rng.normal(size=(16, 128, 128, 16)).astype(np.float32)
+    wb1 = rng.normal(size=(1, 1, 16, 16)).astype(np.float32)
+    wb2 = rng.normal(size=(1, 1, 16, 16)).astype(np.float32)
+
+    def _head_zero(z, i):
+        return 0.0, np.zeros_like(z)
+
+    results = {}
+    for kind in ("tcp", "shm"):
+        cluster = HeteroCluster(
+            [1.0, 1.0, 1.0], ["sim:1e11"] * 3, transport=kind,
+            pipeline=True, microbatches=micro,
+        )
+        try:
+            cluster.probe_times = [1.0, 1.0, 1.0]
+            cluster.conv_train_chain(
+                xb, [wb1, wb2], [None, None], _head_zero)  # warm
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                cluster.conv_train_chain(
+                    xb, [wb1, wb2], [None, None], _head_zero)
+            results[kind] = (time.perf_counter() - t0) / reps
+        finally:
+            cluster.shutdown()
+        rows.append(
+            (f"trainstep_wirebound_{kind}", results[kind] * 1e6,
+             "wire-dominated 2-slave train step, deterministic sim compute")
+        )
+    gain = results["tcp"] / results["shm"]
+    rows.append(
+        ("shm_vs_tcp_gain", gain,
+         f"gain={gain:.2f}x (>=1.5 means the zero-copy shm rings beat tcp "
+         f"on a wire-dominated co-located train step; ratio, not us)")
     )
 
     # -- 7. elasticity: one evict + admit + re-plan cycle ----------------

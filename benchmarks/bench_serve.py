@@ -4,18 +4,27 @@ the SAME deterministic sim cluster and finite emulated links.
 The cluster cost of serving one batch is (weight broadcast + input
 scatter + output gather) on the wire plus the slaves' conv compute.
 The sim backend's compute scales with the batch, so the lever dynamic
-batching pulls is the FIXED per-batch wire cost: every ``ServeChain``
-push re-broadcasts the layer kernels (each request stream re-plans per
-batch; the layers alternate so the slave cache never holds the right
-shard anyway), and with weight-heavy layers over a finite link that
-broadcast dominates.  Serving N requests one-at-a-time pays it N
+batching pulls is the FIXED per-batch wire cost: with the versioned
+weight-broadcast cache OFF, every ``ServeChain`` push re-broadcasts
+the layer kernels, and with weight-heavy layers over a finite link
+that broadcast dominates.  Serving N requests one-at-a-time pays it N
 times; packing ``max_batch`` slots pays it N/max_batch times — that
 ratio (wall-clock, sim compute + emulated wire, deterministic) is
 ``serve_dynamic_batching_gain``, the acceptance gate's >= 1.5x row.
+It is measured with ``weight_cache=False`` so the row stays comparable
+with its pre-cache baselines.
+
+The cache itself is the OTHER lever and gets its own gated row:
+``weight_cache_serve_gain`` is continuous-batching req/s with the
+versioned cache on (pushes ship ~24-byte version tokens after the
+first) over req/s with it off (every push re-broadcasts), measured on
+a WEIGHT-DOMINATED workload — heavier kernels over a slower link, so
+the broadcast is the cost the cache removes — the direct attack on
+the serve lane's wire bottleneck.
 
 The throughput and p50/p99 tail-latency rows are the first
 requests/s-denominated entries in the BENCH_PR*.json trajectory:
-tracked across commits; only the gain ratio is gated.
+tracked across commits; only the gain ratios are gated.
 """
 from __future__ import annotations
 
@@ -28,10 +37,12 @@ from repro.serve.server import ClusterServer
 
 SLOWDOWNS = [1.0, 1.5, 2.0]  # master + 1.5x slave + 2x-slow slave
 BANDWIDTH_MBPS = 200.0       # finite links: the weight broadcast costs
+WEIGHT_BW_MBPS = 15.0        # the weight-dominated link for the cache row
 
 # Deterministic rows the CI bench-smoke lane extracts into BENCH_PR*.json.
 TRAJECTORY_ROWS = (
     "serve_dynamic_batching_gain",
+    "weight_cache_serve_gain",
     "serve_throughput_rps",
     "serve_p50_latency_us",
     "serve_p99_latency_us",
@@ -39,18 +50,22 @@ TRAJECTORY_ROWS = (
 
 # Higher-is-better subset the bench-regression gate guards.  Latency
 # rows trend the other way and are tracked, not gated.
-GAIN_ROWS = ("serve_dynamic_batching_gain",)
+GAIN_ROWS = ("serve_dynamic_batching_gain", "weight_cache_serve_gain")
 
 
-def _serve(requests, weights, *, max_batch: int, sequential: bool) -> dict:
+def _serve(requests, weights, *, max_batch: int, sequential: bool,
+           weight_cache: bool = False,
+           bandwidth_mbps: float = BANDWIDTH_MBPS) -> dict:
     """Serve ``requests`` through a fresh sim cluster; returns wall
     seconds + the server's latency percentiles.  ``sequential`` waits
     for each response before submitting the next (the one-request-at-
     a-time baseline); otherwise everything is submitted upfront and
-    the server packs slots."""
+    the server packs slots.  ``weight_cache`` toggles the versioned
+    weight-broadcast cache (off for the pre-cache-comparable rows)."""
     cluster = HeteroCluster(
         SLOWDOWNS, ["sim"] * len(SLOWDOWNS),
-        pipeline=True, microbatches=2, bandwidth_mbps=BANDWIDTH_MBPS,
+        pipeline=True, microbatches=2, bandwidth_mbps=bandwidth_mbps,
+        weight_cache=weight_cache,
     )
     try:
         cluster.probe_times = list(SLOWDOWNS)  # exact Eq. 1 for sim
@@ -100,6 +115,29 @@ def run(smoke: bool = False):
          f"sequential={seq['wall_s']:.3f}s batched={bat['wall_s']:.3f}s at "
          f"{n_req} reqs/max_batch={max_batch} (>=1.5 means packing slots "
          f"amortizes the per-batch weight broadcast; ratio, not us)")
+    )
+
+    # the versioned weight-broadcast cache, on a weight-dominated serve
+    # workload: heavier kernels over a {WEIGHT_BW_MBPS} Mbps link, SAME
+    # settings cache-on vs cache-off, continuous batching both sides.
+    cw = [
+        rng.normal(size=(3, 3, 64, 128)).astype(np.float32) * 0.1,
+        rng.normal(size=(3, 3, 128, 128)).astype(np.float32) * 0.1,
+    ]
+    creq = [rng.normal(size=(8, 8, 64)).astype(np.float32)
+            for _ in range(n_req)]
+    coff = _serve(creq, cw, max_batch=max_batch, sequential=False,
+                  weight_cache=False, bandwidth_mbps=WEIGHT_BW_MBPS)
+    con = _serve(creq, cw, max_batch=max_batch, sequential=False,
+                 weight_cache=True, bandwidth_mbps=WEIGHT_BW_MBPS)
+    cache_gain = coff["wall_s"] / con["wall_s"]
+    rows.append(
+        ("weight_cache_serve_gain", cache_gain,
+         f"cache_off={n_req / coff['wall_s']:.1f}req/s "
+         f"cache_on={n_req / con['wall_s']:.1f}req/s at "
+         f"{WEIGHT_BW_MBPS:.0f} Mbps (>1 means the versioned cache ships "
+         f"~24-byte tokens instead of re-broadcasting static serve "
+         f"kernels; ratio, not us)")
     )
     rows.append(
         ("serve_throughput_rps", rps,

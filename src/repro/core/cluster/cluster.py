@@ -25,6 +25,14 @@ computes every non-convolutional layer alone.
         (``bandwidth_mbps`` then only serves as an explicit override for
         the planning terms; nothing is delayed artificially).
 
+    "shm" — tcp's process model, but bulk arrays ride zero-copy
+        shared-memory ring buffers (``ShmTransport``); only tiny
+        skeleton/control frames cross the socket.  Co-located slaves
+        only (the rings are host-local).  Everything else — auth,
+        heartbeats, elasticity, byte accounting, bandwidth probing
+        (which then times the ring, what the plans will actually see)
+        — behaves exactly like tcp.
+
 Heterogeneity is emulated with per-slave *slowdown factors*: after
 computing, a slave sleeps (slowdown-1) x the measured compute time,
 appearing exactly like a proportionally slower machine to both the
@@ -75,6 +83,8 @@ from repro.core.cluster import codec, plans, protocol, scheduler
 from repro.core.cluster.transport import (
     TRANSPORT_KINDS,
     InProcTransport,
+    ShmListener,
+    ShmTransport,
     SlaveLost,
     TCPListener,
     TCPTransport,
@@ -131,7 +141,18 @@ class HeteroCluster:
     gets only its rows instead of the full activation), or ``"auto"``
     (per layer, the axis with the smaller predicted wall-clock over the
     measured links).  ``wire_dtype`` ("fp16"/"bf16") turns on the
-    compact wire codec on either transport.
+    compact wire codec on any transport; ``wire_codec`` is the full
+    compressor stack — a single stage name ("fp16", "int8") for every
+    message class, or per-class ``"weights=fp16,acts=int8,
+    grads=topk:0.05"`` (top-k applies to gradients only, with
+    master-side error feedback).  Pass one or the other, not both.
+
+    ``weight_cache=True`` (default) turns on the versioned
+    weight-broadcast cache for the chain drivers and the serve lane:
+    slaves cache kernels under a stable per-layer key and the master
+    ships a ~24-byte version token instead of re-broadcasting a kernel
+    it already shipped — static serve weights cross the wire once per
+    slave instead of once per slab.
 
     Elastic / fault-tolerance knobs (see the module docstring):
     ``expected_slaves`` waits for hand-launched tcp joiners instead of
@@ -163,6 +184,8 @@ class HeteroCluster:
         comp_aware: bool = True,
         partition: str = "kernel",
         wire_dtype: Optional[str] = None,
+        wire_codec: Optional[str] = None,
+        weight_cache: bool = True,
         transport: str = "inproc",
         expected_slaves: Optional[int] = None,
         listen_host: str = "127.0.0.1",
@@ -222,11 +245,28 @@ class HeteroCluster:
             )
         self.partition = partition
         self.partition_choices: Dict[tuple, str] = {}  # auto's per-layer picks
+        if wire_codec is not None and wire_dtype is not None:
+            raise ValueError(
+                "pass wire_codec OR wire_dtype, not both: wire_codec "
+                "subsumes the single-dtype knob (wire_codec='fp16' is "
+                "the same stack)"
+            )
         self.wire_dtype = wire_dtype
+        self.wire_codec = wire_codec
         self._wire_np_dtype = codec.resolve_wire_dtype(wire_dtype)
-        self._wire_itemsize = (
-            self._wire_np_dtype.itemsize if self._wire_np_dtype is not None else 4
-        )
+        # the codec TEMPLATE prices the wire for the Eq. 1(+comm) byte
+        # predictions; every link gets its own instance from the same
+        # spec (top-k error-feedback state is per destination)
+        self._codec_cfg = codec.WireCodec.from_spec(wire_codec, wire_dtype)
+        self._wire_itemsize = self._codec_cfg.itemsize("acts")
+        self._wire_itemsize_w = self._codec_cfg.itemsize("weights")
+        self._wire_itemsize_g = self._codec_cfg.itemsize("grads")
+        self.weight_cache = bool(weight_cache)
+        # versioned weight-broadcast cache, master side: what version of
+        # each keyed kernel is current, and which (version, geometry)
+        # token each live link last received for it
+        self._wstore: Dict[object, Tuple[int, np.ndarray]] = {}
+        self._wshipped: Dict[Transport, dict] = {}
         if transport not in TRANSPORT_KINDS:
             raise ValueError(
                 f"transport must be one of {TRANSPORT_KINDS}, got {transport!r}"
@@ -284,8 +324,9 @@ class HeteroCluster:
         self._seq_issued = 0
         self._seq_gathered = 0
         self._shut = False
-        if transport == "tcp":
-            self._listener = TCPListener(listen_host, listen_port)
+        if transport in ("tcp", "shm"):
+            listener_cls = ShmListener if transport == "shm" else TCPListener
+            self._listener = listener_cls(listen_host, listen_port)
             if expected_slaves is None:
                 self._token = secrets.token_bytes(self._AUTH_BYTES)
                 self._spawn_tcp_slaves()
@@ -348,10 +389,17 @@ class HeteroCluster:
         self.threads.append(thread)
         self.n_slaves = len(self.sockets)
 
+    def _link_codec(self) -> codec.WireCodec:
+        """A fresh codec instance for ONE link — never shared: top-k
+        error-feedback residuals accumulate per destination."""
+        return codec.WireCodec.from_spec(self.wire_codec, self.wire_dtype)
+
     def _start_inproc_slave(
         self, slowdown: float, backend: str, bandwidth: Optional[float]
     ) -> int:
-        link = InProcTransport(bandwidth, self._wire_np_dtype)
+        link = InProcTransport(
+            bandwidth, self._wire_np_dtype, wire_codec=self._link_codec()
+        )
         dev = self._next_slave_id
         self._next_slave_id += 1
         t = threading.Thread(
@@ -392,8 +440,12 @@ class HeteroCluster:
             "--slowdown", str(slowdown),
             "--backend", backend,
         ]
+        if self.transport == "shm":
+            cmd += ["--transport", "shm"]
         if self.wire_dtype is not None:
             cmd += ["--wire-dtype", self.wire_dtype]
+        if self.wire_codec is not None:
+            cmd += ["--wire-codec", self.wire_codec]
         if self.heartbeat_s is not None:
             cmd += ["--heartbeat-s", str(self.heartbeat_s)]
         return subprocess.Popen(cmd, env=env)
@@ -435,10 +487,14 @@ class HeteroCluster:
                     )
                 # the 10s timeout stays armed through the hello so a
                 # peer that authenticates then stalls cannot hang us
-                chan = TCPTransport(
+                chan_cls = (
+                    ShmTransport if self.transport == "shm" else TCPTransport
+                )
+                chan = chan_cls(
                     conn, self._wire_np_dtype,
                     heartbeat_timeout_s=self.heartbeat_timeout_s,
                     clock=self._clock,
+                    wire_codec=self._link_codec(),
                 )
                 requested, meta = protocol.parse_hello(chan.read_on_master())
             except (OSError, EOFError, RuntimeError) as e:
@@ -618,7 +674,7 @@ class HeteroCluster:
         self._bandwidth_overrides.append(bandwidth_mbps)
         self.measured_bandwidths.append(None)
         sock, dev = self.sockets[-1], self.slave_ids[-1]
-        if self.transport == "tcp":
+        if self.transport in ("tcp", "shm"):
             try:
                 meas = sock.measure_bandwidth_mbps()
             except SlaveLost as e:
@@ -681,6 +737,7 @@ class HeteroCluster:
                 proc.wait(timeout=5)
             self.reaped.append(proc)
         sock.close()
+        self._wshipped.pop(sock, None)  # its weight-cache tokens die with it
         had = self.n_slaves
         for lst in (
             self.slave_ids, self.sockets, self.procs, self.threads,
@@ -740,7 +797,7 @@ class HeteroCluster:
                 slave_ts[s] = self._check_result(s.read_on_master())
             except SlaveLost as e:
                 self._on_slave_lost(s, e)
-        if self.transport == "tcp":
+        if self.transport in ("tcp", "shm"):
             measured: Dict[Transport, Optional[float]] = {}
             for s in list(self.sockets):
                 try:
@@ -828,7 +885,48 @@ class HeteroCluster:
 
     # -- partition planning (core/cluster/plans.py) -----------------------
     def _unit_bytes(self, x_shape, w_shape, mode: str, op: str) -> float:
-        return plans.unit_bytes(x_shape, w_shape, mode, op, self._wire_itemsize)
+        return plans.unit_bytes(
+            x_shape, w_shape, mode, op, self._wire_itemsize,
+            w_itemsize=self._wire_itemsize_w,
+            g_itemsize=self._wire_itemsize_g,
+        )
+
+    # -- versioned weight-broadcast cache ---------------------------------
+    def _weight_version(self, key, w: np.ndarray) -> Tuple[int, bool]:
+        """The cache version of kernel ``w`` under ``key``, and whether
+        the slaves may already hold it.  Identity, not equality: the
+        serve lane holds one kernel OBJECT across every request (hit),
+        a training loop makes a new array each step (miss + bump) —
+        and an elementwise compare of every kernel every microbatch
+        would eat the bytes the cache saves."""
+        cur = self._wstore.get(key)
+        if cur is not None and cur[1] is w:
+            return cur[0], True
+        version = cur[0] + 1 if cur is not None else 0
+        self._wstore[key] = (version, w)
+        return version, False
+
+    def _wire_weights(
+        self, sock: Transport, plan: plans.LayerPlan, pos: int,
+        shard: Optional[np.ndarray], send_weights: bool,
+    ):
+        """The weight slot for plan position ``pos``'s scatter to
+        ``sock``.  Legacy path (no ``plan.wkey``): the raw shard, or
+        ``None`` for "reuse your per-op cache".  Versioned path: a
+        ``WeightRef`` — bare token when this link already received this
+        exact (version, geometry, position), kernel attached otherwise,
+        so an unchanged serve kernel crosses each link once."""
+        if plan.wkey is None:
+            return shard if send_weights else None
+        token = (
+            plan.wversion, plan.mode,
+            tuple(int(c) for c in plan.counts), pos,
+        )
+        shipped = self._wshipped.setdefault(sock, {})
+        if shipped.get(plan.wkey) == token:
+            return codec.WeightRef(plan.wkey, plan.wversion, None)
+        shipped[plan.wkey] = token
+        return codec.WeightRef(plan.wkey, plan.wversion, shard)
 
     def predict_partition_seconds(
         self, x_shape, w_shape, op: str = "conv"
@@ -855,7 +953,7 @@ class HeteroCluster:
 
     def plan_conv(
         self, x_shape, w: np.ndarray, op: str = "conv",
-        partition: Optional[str] = None,
+        partition: Optional[str] = None, weight_key=None,
     ) -> plans.LayerPlan:
         """Build the partition plan one conv layer rides: resolve the
         split axis, cut the Eq. 1(+comm) shares over the CURRENT
@@ -868,11 +966,14 @@ class HeteroCluster:
                 will be used for (weighs the auto-axis choice).
             partition: per-call override of the cluster's axis
                 (``"kernel"`` | ``"spatial"`` | ``"auto"``).
+            weight_key: stable key opting this layer into the
+                versioned weight-broadcast cache (None = legacy
+                per-op caching only).
 
         Returns:
             A ``plans.LayerPlan`` naming members by stable slave id.
         """
-        return plans.plan_conv(self, x_shape, w, op, partition)
+        return plans.plan_conv(self, x_shape, w, op, partition, weight_key)
 
     # -- async scatter/gather halves -------------------------------------
     def _split(self, w: np.ndarray, counts: np.ndarray) -> List[np.ndarray]:
@@ -906,11 +1007,11 @@ class HeteroCluster:
             return self._scatter_conv_shards(x, plan, send_weights)
         socks = self._plan_sockets(plan)
         t0 = time.perf_counter()
-        for sock, (lo, hi, pt, pb) in zip(socks, plan.halos[1:]):
-            self._write_op(
-                sock,
-                ("sconv", (x[:, lo:hi], plan.w if send_weights else None, pt, pb)),
-            )
+        for pos, (sock, (lo, hi, pt, pb)) in enumerate(
+            zip(socks, plan.halos[1:]), start=1
+        ):
+            ws = self._wire_weights(sock, plan, pos, plan.w, send_weights)
+            self._write_op(sock, ("sconv", (x[:, lo:hi], ws, pt, pb)))
         now = time.perf_counter()
         self.timing.comm_s += now - t0
         self._seq_issued += 1
@@ -927,8 +1028,11 @@ class HeteroCluster:
         shard, so pipelined microbatches pay the weight traffic once."""
         socks = self._plan_sockets(plan)
         t0 = time.perf_counter()
-        for sock, shard in zip(socks, plan.shards[1:]):
-            self._write_op(sock, ("conv", (x, shard if send_weights else None)))
+        for pos, (sock, shard) in enumerate(
+            zip(socks, plan.shards[1:]), start=1
+        ):
+            ws = self._wire_weights(sock, plan, pos, shard, send_weights)
+            self._write_op(sock, ("conv", (x, ws)))
         now = time.perf_counter()
         self.timing.comm_s += now - t0
         self._seq_issued += 1
@@ -994,15 +1098,12 @@ class HeteroCluster:
             return self._scatter_bwd_shards(x, plan, g, send_weights)
         socks = self._plan_sockets(plan)
         t0 = time.perf_counter()
-        for sock, (r0, r1), (lo, hi, pt, pb) in zip(
-            socks, plan.rows[1:], plan.halos[1:]
+        for pos, (sock, (r0, r1), (lo, hi, pt, pb)) in enumerate(
+            zip(socks, plan.rows[1:], plan.halos[1:]), start=1
         ):
+            ws = self._wire_weights(sock, plan, pos, plan.w, send_weights)
             self._write_op(
-                sock,
-                ("sbwd", (
-                    x[:, lo:hi], plan.w if send_weights else None,
-                    g[:, r0:r1], pt, pb,
-                )),
+                sock, ("sbwd", (x[:, lo:hi], ws, g[:, r0:r1], pt, pb))
             )
         now = time.perf_counter()
         self.timing.comm_s += now - t0
@@ -1021,8 +1122,11 @@ class HeteroCluster:
         socks = self._plan_sockets(plan)
         g_shards = self._split(g, plan.counts)
         t0 = time.perf_counter()
-        for sock, ws, gs in zip(socks, plan.shards[1:], g_shards[1:]):
-            self._write_op(sock, ("bwd", (x, ws if send_weights else None, gs)))
+        for pos, (sock, shard, gs) in enumerate(
+            zip(socks, plan.shards[1:], g_shards[1:]), start=1
+        ):
+            ws = self._wire_weights(sock, plan, pos, shard, send_weights)
+            self._write_op(sock, ("bwd", (x, ws, gs)))
         now = time.perf_counter()
         self.timing.comm_s += now - t0
         self._seq_issued += 1

@@ -65,6 +65,13 @@ class LayerPlan:
     rows: Optional[List[Tuple[int, int]]] = None
     halos: Optional[List[Tuple[int, int, int, int]]] = None
     member_ids: Optional[Tuple[int, ...]] = None  # slave ids behind counts[1:]
+    # versioned weight-broadcast cache: the stable key this layer's
+    # kernel is cached under on the slaves (None = legacy per-op cache)
+    # and the version frozen when the plan was built — scatters ship a
+    # WeightRef token instead of the kernel when a slave already holds
+    # (wkey, wversion) with this plan's geometry
+    wkey: Optional[object] = None
+    wversion: int = 0
 
 
 def split_kernels(w: np.ndarray, counts: np.ndarray) -> List[np.ndarray]:
@@ -73,7 +80,11 @@ def split_kernels(w: np.ndarray, counts: np.ndarray) -> List[np.ndarray]:
     return np.split(w, edges, axis=-1)
 
 
-def unit_bytes(x_shape, w_shape, mode: str, op: str, itemsize: int) -> float:
+def unit_bytes(
+    x_shape, w_shape, mode: str, op: str, itemsize: float,
+    w_itemsize: Optional[float] = None, g_itemsize: Optional[float] = None,
+    w_cached: bool = False,
+) -> float:
     """Share-proportional wire bytes per allocation unit — one KERNEL
     (w column out + feature-map column back, plus the gradient slice
     and dW column for bwd) or one ROW (x row out + y row back, plus
@@ -81,21 +92,31 @@ def unit_bytes(x_shape, w_shape, mode: str, op: str, itemsize: int) -> float:
     plus one backward, what a train-chain plan governs.  Fixed
     per-slave costs (the x broadcast, the halo, the full kernel, the
     kernel-mode backward's full-dX return) do not move the optimal
-    split and are left to the mode predictor."""
+    split and are left to the mode predictor.
+
+    Byte prediction sees the codec and the weight cache: ``itemsize``
+    prices activation elements, ``w_itemsize``/``g_itemsize`` (default:
+    same) price weight/gradient elements, and ``w_cached=True`` zeroes
+    the weight-shipping terms — a versioned-cache hit means the slaves
+    already hold this layer's kernel."""
+    w_item = itemsize if w_itemsize is None else w_itemsize
+    g_item = itemsize if g_itemsize is None else g_itemsize
     b, h, wd, cin = x_shape
     kh, kw, _, cout = w_shape
     if mode == "kernel":
-        w_col = kh * kw * cin * itemsize
-        y_col = b * h * wd * itemsize
-        conv = w_col + y_col       # w col out + y col back
+        w_col = kh * kw * cin
+        y_col = b * h * wd
+        w_ship = 0.0 if w_cached else w_col * w_item
+        conv = w_ship + y_col * itemsize   # w col out + y col back
         # bwd: w col + g col out, dW col back; the full-dX return is
         # a FIXED per-slave cost, excluded by this contract
-        bwd = 2 * w_col + y_col
+        bwd = w_ship + y_col * g_item + w_col * g_item
     else:
-        x_row = b * wd * cin * itemsize
-        y_row = b * wd * cout * itemsize
-        conv = x_row + y_row       # x row out + y row back
-        bwd = 2 * x_row + y_row    # x + g rows out, dX row back
+        x_row = b * wd * cin
+        y_row = b * wd * cout
+        conv = (x_row + y_row) * itemsize  # x row out + y row back
+        # x + g rows out, dX row back
+        bwd = x_row * itemsize + (y_row + x_row) * g_item
     if op == "conv":
         return conv
     if op == "bwd":
@@ -104,7 +125,8 @@ def unit_bytes(x_shape, w_shape, mode: str, op: str, itemsize: int) -> float:
 
 
 def predict_partition_seconds(
-    cluster, x_shape, w_shape, op: str = "conv"
+    cluster, x_shape, w_shape, op: str = "conv",
+    weights_cached: bool = False,
 ) -> Dict[str, float]:
     """Predicted per-layer wall-clock of each partition axis: every
     slave's wire bytes over its OWN link plus its balanced compute
@@ -115,13 +137,19 @@ def predict_partition_seconds(
     ``"train"`` (one forward + one backward) — the backward's wire
     differs by axis (kernel mode re-broadcasts x AND returns a
     full-size dX per slave; spatial ships strips both ways), so a
-    train-step plan must weigh both directions."""
+    train-step plan must weigh both directions.  The prediction sees
+    the codec (per-class wire itemsizes) and the versioned weight
+    cache (``weights_cached=True`` zeroes the kernel-shipping terms)."""
     b, h, wd, cin = x_shape
     kh, kw, _, cout = w_shape
     item = cluster._wire_itemsize
-    x_b = float(b * h * wd * cin * item)
-    y_b = float(b * h * wd * cout * item)
-    w_b = float(kh * kw * cin * cout * item)
+    item_w = getattr(cluster, "_wire_itemsize_w", item)
+    item_g = getattr(cluster, "_wire_itemsize_g", item)
+    x_e = float(b * h * wd * cin)    # activation elements
+    y_e = float(b * h * wd * cout)   # output / gradient-slice elements
+    w_e = float(kh * kw * cin * cout)
+    x_b, y_b, w_b = x_e * item, y_e * item, w_e * item
+    w_ship = 0.0 if weights_cached else w_e * item_w
     times = cluster._effective_times()
     layer_flops = 2.0 * b * h * wd * kh * kw * cin * cout
     # the backward (dX + dW) costs ~2x the forward's flops
@@ -132,7 +160,11 @@ def predict_partition_seconds(
         n_units = cout if mode == "kernel" else h
         counts = cluster.shares_for(
             n_units,
-            unit_bytes=unit_bytes(x_shape, w_shape, mode, op, item),
+            unit_bytes=unit_bytes(
+                x_shape, w_shape, mode, op, item,
+                w_itemsize=item_w, g_itemsize=item_g,
+                w_cached=weights_cached,
+            ),
             layer_flops=flops_mult * layer_flops,
         )
         worst = 0.0
@@ -141,16 +173,23 @@ def predict_partition_seconds(
             frac = float(c) / n_units if n_units else 0.0
             halo = min(kh - 1, h) if c > 0 else 0
             if mode == "kernel":
-                fwd_wire = x_b + frac * (w_b + y_b)
+                fwd_wire = x_b + frac * (w_ship + y_b)
                 # x re-broadcast + g slice out; full dX + dW cols back
-                bwd_wire = 2.0 * x_b + frac * (w_b + y_b)
+                bwd_wire = (
+                    x_b + x_e * item_g
+                    + frac * (w_ship + y_e * item_g)
+                )
                 comp_frac = frac
                 active = i > 0
             else:
                 hfrac = (c + halo) / h
-                fwd_wire = hfrac * x_b + w_b + frac * y_b
+                fwd_wire = hfrac * x_b + w_ship + frac * y_b
                 # x strip + g strip out; dX halo strip + full dW back
-                bwd_wire = 2.0 * hfrac * x_b + 2.0 * w_b + frac * y_b
+                bwd_wire = (
+                    hfrac * (x_b + x_e * item_g)
+                    + w_ship + w_e * item_g
+                    + frac * y_e * item_g
+                )
                 comp_frac = hfrac
                 active = i > 0 and c > 0
             wire = {
@@ -168,7 +207,8 @@ def predict_partition_seconds(
 
 
 def resolve_mode(
-    cluster, x_shape, w_shape, override: Optional[str], op: str = "conv"
+    cluster, x_shape, w_shape, override: Optional[str], op: str = "conv",
+    weights_cached: bool = False,
 ) -> str:
     """The partition axis for one layer; ``"auto"`` resolves against
     the predicted wall-clock of ``op`` and records its pick."""
@@ -183,7 +223,9 @@ def resolve_mode(
         # free links: the paper's kernel axis, no halo overhead
         choice = "kernel"
     else:
-        pred = predict_partition_seconds(cluster, x_shape, w_shape, op)
+        pred = predict_partition_seconds(
+            cluster, x_shape, w_shape, op, weights_cached=weights_cached
+        )
         choice = "spatial" if pred["spatial"] < pred["kernel"] else "kernel"
     cluster.partition_choices[(tuple(x_shape), tuple(w_shape))] = choice
     return choice
@@ -191,7 +233,7 @@ def resolve_mode(
 
 def plan_conv(
     cluster, x_shape, w: np.ndarray, op: str = "conv",
-    partition: Optional[str] = None,
+    partition: Optional[str] = None, weight_key=None,
 ) -> LayerPlan:
     """Freeze how one conv layer splits over the devices: the axis
     (resolving ``"auto"`` against what the plan will govern — ``op``
@@ -200,12 +242,32 @@ def plan_conv(
     membership snapshot (``member_ids``) the split binds to.  One
     plan serves every microbatch of the layer — the slave caches ONE
     kernel shard per op, so the split must not drift within a
-    layer."""
-    mode = resolve_mode(cluster, tuple(x_shape), tuple(w.shape), partition, op)
+    layer.
+
+    ``weight_key`` opts the layer into the versioned weight-broadcast
+    cache: the cluster's version store decides whether this kernel
+    object is ALREADY current on the slaves (same array identity as
+    the version it last shipped), and a current version both discounts
+    the weight terms in the byte prediction and lets scatters ship a
+    ~24-byte ``WeightRef`` token instead of the kernel."""
+    wkey = weight_key if getattr(cluster, "weight_cache", False) else None
+    wversion, wcached = 0, False
+    if wkey is not None:
+        wversion, wcached = cluster._weight_version(wkey, w)
+    mode = resolve_mode(
+        cluster, tuple(x_shape), tuple(w.shape), partition, op,
+        weights_cached=wcached,
+    )
     b, h, wd, cin = x_shape
     kh, kw, _, cout = w.shape
     layer_flops = 2.0 * b * h * wd * kh * kw * cin * cout
-    ub = unit_bytes(x_shape, w.shape, mode, op, cluster._wire_itemsize)
+    item = cluster._wire_itemsize
+    ub = unit_bytes(
+        x_shape, w.shape, mode, op, item,
+        w_itemsize=getattr(cluster, "_wire_itemsize_w", item),
+        g_itemsize=getattr(cluster, "_wire_itemsize_g", item),
+        w_cached=wcached,
+    )
     members = getattr(cluster, "slave_ids", None)
     members = tuple(members) if members is not None else None
     if mode == "kernel":
@@ -214,13 +276,13 @@ def plan_conv(
         )
         return LayerPlan(
             "kernel", counts, shards=split_kernels(w, counts),
-            member_ids=members,
+            member_ids=members, wkey=wkey, wversion=wversion,
         )
     counts = cluster.shares_for(h, unit_bytes=ub, layer_flops=layer_flops)
     rows, halos = strip_plan(h, kh, counts)
     return LayerPlan(
         "spatial", counts, w=np.asarray(w, np.float32), rows=rows,
-        halos=halos, member_ids=members,
+        halos=halos, member_ids=members, wkey=wkey, wversion=wversion,
     )
 
 

@@ -7,17 +7,24 @@ process.  Message grammar on the wire:
 
     ("probe", {probe_kwargs})          -> float seconds
     ("ping", payload)                  -> payload echoed (bandwidth probe)
-    ("conv", (x, w|None))              -> y
-    ("bwd",  (x, w|None, g))           -> (dx, dw)
-    ("sconv", (x_halo, w|None, pt, pb))-> y strip (spatial mode)
-    ("sbwd", (x_halo, w|None, g, pt, pb)) -> (dx_halo, dw) (spatial)
+    ("conv", (x, W))                   -> y
+    ("bwd",  (x, W, g))                -> (dx, dw)
+    ("sconv", (x_halo, W, pt, pb))     -> y strip (spatial mode)
+    ("sbwd", (x_halo, W, g, pt, pb))   -> (dx_halo, dw) (spatial)
     "trainOver"                        -> slave loop exits
 
-``w=None`` means "reuse the kernel shard you cached for this op" — the
-pipelined schedules pay the weight traffic once per layer.  A compute
-exception ships back as a ``SlaveError`` (the master re-raises it at the
-matching gather) so a broken backend fails loudly instead of hanging the
-protocol.
+The weight slot ``W`` is one of three things.  A raw kernel array is
+cached per op; ``None`` means "reuse the kernel you cached for this
+op" — the pipelined schedules pay the weight traffic once per layer.
+A ``codec.WeightRef(key, version, w)`` is the VERSIONED weight cache:
+with ``w`` attached the slave stores it under ``(key, version)``; with
+``w=None`` the slave must already hold that exact version (a miss or a
+version mismatch is a master bug and raises).  The versioned cache is
+what lets a serve master ship a ~24-byte token instead of
+re-broadcasting static kernels on every slab.  A compute exception
+ships back as a ``SlaveError`` (the master re-raises it at the
+matching gather) so a broken backend fails loudly instead of hanging
+the protocol.
 
 Run as a module, this file IS the TCP slave process — spawned by the
 master on this host, or hand-launched on ANY host that can reach the
@@ -25,7 +32,8 @@ master's listener:
 
     python -m repro.core.cluster.protocol --host H --port P \
         [--device I] [--slowdown 1.5] [--backend numpy] \
-        [--wire-dtype fp16] [--heartbeat-s 0.5] \
+        [--transport tcp|shm] [--wire-dtype fp16] [--wire-codec SPEC] \
+        [--heartbeat-s 0.5] \
         [--auth-env REPRO_CLUSTER_AUTH] [--connect-timeout-s 60]
 
 It connects back to the master's listener (retrying while the master is
@@ -49,6 +57,8 @@ import traceback
 from typing import Tuple
 
 import numpy as np
+
+from repro.core.cluster.codec import WeightRef
 
 TRAIN_OVER = "trainOver"
 
@@ -78,6 +88,34 @@ def bwd_shard(backend, x, w, g) -> Tuple[np.ndarray, np.ndarray]:
     return backend.conv_vjp(x, w, g)
 
 
+def _resolve_weights(w, op: str, cached_w: dict, wcache: dict):
+    """Resolve an op's weight slot against both slave-side caches: the
+    legacy per-op slot (raw array / ``None``) and the versioned
+    ``WeightRef`` cache (one kernel per key — memory stays bounded by
+    the number of live layers)."""
+    if isinstance(w, WeightRef):
+        if w.w is not None:
+            wcache[w.key] = (w.version, w.w)
+            return w.w
+        hit = wcache.get(w.key)
+        if hit is None:
+            raise RuntimeError(
+                f"weight-cache miss: no kernel cached for key {w.key!r} "
+                f"(master sent a bare version token first)"
+            )
+        version, kernel = hit
+        if version != w.version:
+            raise RuntimeError(
+                f"weight-cache version mismatch for key {w.key!r}: "
+                f"cached v{version}, master referenced v{w.version}"
+            )
+        return kernel
+    if w is None:
+        return cached_w[op]
+    cached_w[op] = w
+    return w
+
+
 def slave_loop(endpoint, slowdown: float, backend_name: str, device: int):
     """Algorithm 2, asynchronous: drain ops in FIFO order — read
     inputs/kernels, convolve with this device's backend, write outputs.
@@ -87,6 +125,7 @@ def slave_loop(endpoint, slowdown: float, backend_name: str, device: int):
     backend = None
     cached_w = {}  # last kernel shard per op: pipelined microbatches after
     #                the first send w=None instead of retransmitting it
+    wcache = {}  # versioned weight cache: key -> (version, kernel)
     while True:
         try:
             msg = endpoint.recv()
@@ -113,27 +152,23 @@ def slave_loop(endpoint, slowdown: float, backend_name: str, device: int):
             t0 = time.perf_counter()
             if op == "conv":
                 x, w = payload
-                w = cached_w[op] if w is None else w
-                cached_w[op] = w
+                w = _resolve_weights(w, op, cached_w, wcache)
                 out = conv_shard(backend, x, w)
             elif op == "bwd":
                 x, w, g = payload
-                w = cached_w[op] if w is None else w
-                cached_w[op] = w
+                w = _resolve_weights(w, op, cached_w, wcache)
                 out = bwd_shard(backend, x, w, g)
             elif op == "sconv":  # spatial: a height strip + halo, full kernel
                 from repro.core.backends import strip_conv
 
                 xh, w, pt, pb = payload
-                w = cached_w[op] if w is None else w
-                cached_w[op] = w
+                w = _resolve_weights(w, op, cached_w, wcache)
                 out = strip_conv(backend, xh, w, pt, pb)
             elif op == "sbwd":  # spatial backward: halo dX + full-kernel dW
                 from repro.core.backends import strip_conv_vjp
 
                 xh, w, g, pt, pb = payload
-                w = cached_w[op] if w is None else w
-                cached_w[op] = w
+                w = _resolve_weights(w, op, cached_w, wcache)
                 out = strip_conv_vjp(backend, xh, w, g, pt, pb)
             else:  # pragma: no cover
                 raise ValueError(f"unknown op {op}")
@@ -173,12 +208,16 @@ def main(argv=None):
     import argparse
     import os
 
-    from repro.core.cluster.codec import resolve_wire_dtype
-    from repro.core.cluster.transport import TCPSlaveEndpoint
+    from repro.core.cluster.codec import WireCodec
+    from repro.core.cluster.transport import ShmSlaveEndpoint, TCPSlaveEndpoint
 
     ap = argparse.ArgumentParser(description="master/slave TCP slave process")
     ap.add_argument("--host", required=True)
     ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--transport", default="tcp", choices=["tcp", "shm"],
+                    help="wire to the master: a plain TCP socket, or "
+                         "shared-memory rings with a TCP control channel "
+                         "(co-located masters only)")
     ap.add_argument("--device", type=int, default=-1,
                     help="requested device slot; -1 (default) lets the "
                          "master assign the next free one — what a "
@@ -186,6 +225,10 @@ def main(argv=None):
     ap.add_argument("--slowdown", type=float, default=1.0)
     ap.add_argument("--backend", default="numpy")
     ap.add_argument("--wire-dtype", default=None)
+    ap.add_argument("--wire-codec", default=None,
+                    help="compressor-stack spec, e.g. 'int8' or "
+                         "'weights=fp16,acts=fp16,grads=topk:0.05'; "
+                         "must match the master's")
     ap.add_argument("--heartbeat-s", type=float, default=0.0,
                     help="send a liveness frame every this many seconds "
                          "(0 = off); masters with a heartbeat deadline "
@@ -201,10 +244,14 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     token_hex = os.environ.get(args.auth_env)
-    endpoint = TCPSlaveEndpoint(
-        args.host, args.port, wire_dtype=resolve_wire_dtype(args.wire_dtype),
+    endpoint_cls = (
+        ShmSlaveEndpoint if args.transport == "shm" else TCPSlaveEndpoint
+    )
+    endpoint = endpoint_cls(
+        args.host, args.port,
         connect_timeout_s=args.connect_timeout_s,
         auth_token=bytes.fromhex(token_hex) if token_hex else None,
+        wire_codec=WireCodec.from_spec(args.wire_codec, args.wire_dtype),
     )
     code = 0
     try:

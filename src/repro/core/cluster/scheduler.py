@@ -256,9 +256,13 @@ def conv_train_chain(
     def plan_for(k: int, xi: np.ndarray) -> LayerPlan:
         if plans[k] is None:
             # op="train": the plan governs BOTH sweeps, so the auto
-            # axis and the comm-aware counts weigh fwd + bwd wire
+            # axis and the comm-aware counts weigh fwd + bwd wire.
+            # weight_key opts the layer into the versioned broadcast
+            # cache: the backward sweep (and every microbatch after
+            # the first) ships a token, never the kernel again
             plans[k] = plan_conv(
-                cluster, (x.shape[0],) + xi.shape[1:], layer_weights[k], "train"
+                cluster, (x.shape[0],) + xi.shape[1:], layer_weights[k],
+                "train", weight_key=("train", k),
             )
         return plans[k]
 
@@ -377,6 +381,15 @@ class ServeChain:
     batch — and a ``SlaveLost`` mid-batch drains on the survivors via
     the ``Pending`` recovery path, invisible here.
 
+    Serve weights are STATIC, so every layer opts into the cluster's
+    versioned weight-broadcast cache under a per-chain key: the first
+    push ships each slave its kernel shard once, and every later push
+    (same geometry, same membership) ships a ~24-byte version token
+    instead — the per-slab broadcast that dominated serve wire bytes
+    collapses to O(1) per layer.  A membership or batch-geometry
+    change invalidates the token and the affected shards re-ship
+    automatically.
+
     Args:
         cluster: the ``HeteroCluster`` to serve through.
         layer_weights: conv kernel per layer, ``(kh, kw, cin, cout)``.
@@ -432,14 +445,20 @@ class ServeChain:
         # batch k+1's first scatter goes out BEFORE batch k's last
         # gather: its bytes ride the links while the slaves still
         # compute batch k's final layer
-        plan = plan_conv(cluster, x.shape, weights[0], "conv")
+        plan = plan_conv(
+            cluster, x.shape, weights[0], "conv",
+            weight_key=(id(self), 0),
+        )
         p = cluster._scatter_conv_planned(x, plan, True)
         prev_out = self._finish_tail()
         for k in range(1, len(weights)):
             y = cluster.gather_conv(p)
             f = between[k - 1]
             y = cluster._master_comp(f, y) if f else y
-            plan = plan_conv(cluster, y.shape, weights[k], "conv")
+            plan = plan_conv(
+                cluster, y.shape, weights[k], "conv",
+                weight_key=(id(self), k),
+            )
             p = cluster._scatter_conv_planned(y, plan, True)
         self._tail = p
         return prev_out

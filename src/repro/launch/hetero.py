@@ -42,6 +42,17 @@ link's measured bandwidth to the comm-aware partitioner:
     PYTHONPATH=src python -m repro.launch.hetero \
         --transport tcp --train-pipeline --slowdowns 1.0,1.5 --steps 2
 
+``--transport shm`` keeps the OS-subprocess slaves but moves the bulk
+array bytes through zero-copy shared-memory rings (same host only;
+control frames stay on a localhost socket).  ``--wire-codec`` layers
+the pluggable compressor stack over any transport with a per-message-
+class spec, and the versioned weight-broadcast cache is on by default
+(``--no-weight-cache`` to disable):
+
+    PYTHONPATH=src python -m repro.launch.hetero \
+        --transport shm --train-pipeline --slowdowns 1.0,1.5 \
+        --wire-codec "weights=fp16,acts=int8,grads=topk:0.05" --steps 2
+
 ``--expected-slaves N`` makes the master WAIT for N hand-launched
 slaves instead of spawning them — the remote-host path.  Pass only the
 master's ``--slowdowns`` entry, bind with ``--listen-host``/
@@ -99,6 +110,8 @@ def run_hetero(
     lr: float = 0.05,
     partition: str = "kernel",
     wire_dtype=None,
+    wire_codec=None,
+    weight_cache: bool = True,
     bandwidth_mbps=None,
     transport: str = "inproc",
     expected_slaves=None,
@@ -121,6 +134,7 @@ def run_hetero(
         slowdowns, backends,
         pipeline=pipeline or train_pipeline, microbatches=microbatches,
         partition=partition, wire_dtype=wire_dtype,
+        wire_codec=wire_codec, weight_cache=weight_cache,
         bandwidth_mbps=bandwidth_mbps, transport=transport,
         expected_slaves=expected_slaves,
         listen_host=listen_host, listen_port=listen_port,
@@ -135,7 +149,7 @@ def run_hetero(
         print(f"devices: slowdowns={list(cluster.slowdowns)} "
               f"backends={cluster.backends} transport={transport}")
         print(f"probe times: {np.round(probe, 4).tolist()}")
-        if transport == "tcp":
+        if transport in ("tcp", "shm"):
             print(f"measured link bandwidth (Mbps): "
                   f"{[None if b is None else round(b, 1) for b in cluster.measured_bandwidths]}")
         print(f"Eq.1 shares: {np.round(shares, 3).tolist()} -> "
@@ -185,6 +199,8 @@ def run_hetero(
                 str(k): v for k, v in cluster.partition_choices.items()
             },
             "wire_dtype": wire_dtype or "fp32",
+            "wire_codec": cluster._codec_cfg.spec,
+            "weight_cache": weight_cache,
             "bandwidth_mbps": bandwidth_mbps,
             "heartbeat_s": heartbeat_s,
             "slave_ids": list(cluster.slave_ids),
@@ -224,6 +240,8 @@ def run_serve(
     image_size: int = 16,
     partition: str = "kernel",
     wire_dtype=None,
+    wire_codec=None,
+    weight_cache: bool = True,
     bandwidth_mbps=None,
     transport: str = "inproc",
     expected_slaves=None,
@@ -263,6 +281,7 @@ def run_serve(
         slowdowns, backends,
         pipeline=True, microbatches=microbatches,
         partition=partition, wire_dtype=wire_dtype,
+        wire_codec=wire_codec, weight_cache=weight_cache,
         bandwidth_mbps=bandwidth_mbps, transport=transport,
         expected_slaves=expected_slaves,
         listen_host=listen_host, listen_port=listen_port,
@@ -296,6 +315,8 @@ def run_serve(
         rec = {
             "mode": "serve",
             "transport": transport,
+            "wire_codec": cluster._codec_cfg.spec,
+            "weight_cache": weight_cache,
             "requests": requests,
             "max_batch": max_batch,
             "deadline_s": deadline_s,
@@ -355,16 +376,29 @@ def main():
                     choices=["fp32", "fp16", "bf16"],
                     help="compact wire codec at the socket boundary; "
                          "master-side accumulation stays float32")
+    ap.add_argument("--wire-codec", default=None,
+                    help="full compressor stack, superseding --wire-dtype: "
+                         "one stage for everything ('fp16', 'int8') or "
+                         "per message class, e.g. "
+                         "'weights=fp16,acts=int8,grads=topk:0.05' "
+                         "(top-k applies to gradients only, with "
+                         "master-side error feedback)")
+    ap.add_argument("--no-weight-cache", action="store_true",
+                    help="disable the versioned weight-broadcast cache "
+                         "(slaves then receive kernels every slab/"
+                         "microbatch — the pre-cache wire, for A/B runs)")
     ap.add_argument("--bandwidth-mbps", type=float, default=None,
                     help="emulated master<->slave link speed (the paper's "
                          "~5 Mbps Wi-Fi); default: infinitely fast links. "
                          "With --transport tcp this only overrides the "
                          "measured planning bandwidth")
     ap.add_argument("--transport", default="inproc",
-                    choices=["inproc", "tcp"],
+                    choices=["inproc", "tcp", "shm"],
                     help="the wire: in-process queue emulation (threads, "
-                         "seed behaviour) or real localhost TCP sockets "
-                         "with one OS subprocess per slave")
+                         "seed behaviour), real localhost TCP sockets "
+                         "with one OS subprocess per slave, or shm — "
+                         "subprocess slaves with bulk arrays on zero-copy "
+                         "shared-memory rings (co-located only)")
     ap.add_argument("--expected-slaves", type=int, default=None,
                     help="wait for this many HAND-LAUNCHED slaves to "
                          "join the listener instead of spawning any "
@@ -417,6 +451,8 @@ def main():
                 requests=args.requests, deadline_s=args.deadline_s,
                 max_batch=args.max_batch, image_size=args.image_size,
                 partition=args.partition, wire_dtype=args.wire_dtype,
+                wire_codec=args.wire_codec,
+                weight_cache=not args.no_weight_cache,
                 bandwidth_mbps=args.bandwidth_mbps, transport=transport,
                 expected_slaves=args.expected_slaves,
                 listen_host=args.listen_host, listen_port=args.listen_port,
@@ -432,6 +468,8 @@ def main():
             microbatches=args.microbatches, c1=args.c1, c2=args.c2,
             batch=args.batch, steps=args.steps,
             partition=args.partition, wire_dtype=args.wire_dtype,
+            wire_codec=args.wire_codec,
+            weight_cache=not args.no_weight_cache,
             bandwidth_mbps=args.bandwidth_mbps, transport=transport,
             expected_slaves=args.expected_slaves,
             listen_host=args.listen_host, listen_port=args.listen_port,

@@ -1,0 +1,120 @@
+"""Accuracy-vs-bytes for the lossy codec stages, on CIFAR-shaped work.
+
+The int8 stage must cut the wire ~4x while keeping a train step's
+gradients within 1e-2 norm-relative of the fp32 wire; top-k sparsified
+gradients ship a fraction of the bytes and — thanks to the master-side
+error feedback — multi-step training still converges like fp32 (the
+SINGLE-step gradient is deliberately wrong by construction: top-k drops
+most of the mass each step and repays it later).
+"""
+import numpy as np
+
+from repro.core.master_slave import HeteroCluster
+
+_CIFAR = (8, 32, 32, 3)
+
+
+def _data(rng):
+    """Uniform(-1, 1) keeps every tensor well inside one int8 absmax
+    step of its neighbours — gaussian outliers stretch the scale.  The
+    kernels get a 0.3 init scale so the SGD runs sit in a stable
+    regime."""
+    x = rng.uniform(-1.0, 1.0, size=_CIFAR).astype(np.float32)
+    w1 = (0.3 * rng.uniform(-1.0, 1.0, size=(3, 3, 3, 8))).astype(np.float32)
+    w2 = (0.3 * rng.uniform(-1.0, 1.0, size=(3, 3, 8, 12))).astype(np.float32)
+    return x, w1, w2
+
+
+def _relu():
+    def between(y):
+        mask = (y > 0).astype(np.float32)
+        return np.maximum(y, 0.0), lambda gz: gz * mask
+
+    return between
+
+
+def _train_step(c, x, w1, w2):
+    """One fwd+bwd of the 2-layer chain under loss 0.5*||y||^2 (head
+    gradient = the output itself); returns (res, comm_bytes)."""
+    c.reset_stats()
+    res = c.conv_train_chain(
+        x, [w1, w2], [_relu(), None], lambda z, i: (None, z)
+    )
+    return res, c.comm_bytes
+
+
+def _make(wire_codec=None):
+    c = HeteroCluster([1.0, 1.0], wire_codec=wire_codec)
+    c.probe_times = [1.0, 1.0]
+    return c
+
+
+def _rel(a, b):
+    return np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-12)
+
+
+def test_int8_train_step_grads_within_1e2_at_4x_fewer_bytes():
+    rng = np.random.default_rng(0)
+    x, w1, w2 = _data(rng)
+    c32, c8 = _make(), _make("int8")
+    try:
+        ref, bytes32 = _train_step(c32, x, w1, w2)
+        got, bytes8 = _train_step(c8, x, w1, w2)
+        # the ACCEPTANCE bound: weight gradients within 1e-2 of fp32
+        assert _rel(got.dw[0], ref.dw[0]) <= 1e-2
+        assert _rel(got.dw[1], ref.dw[1]) <= 1e-2
+        # dx crosses two quantized hops (g down, dx up): looser bound
+        assert _rel(got.dx, ref.dx) <= 5e-2
+        assert bytes32 / bytes8 > 3.5  # ~4x: arrays at 1 B + one scale each
+    finally:
+        c32.shutdown()
+        c8.shutdown()
+
+
+def _sgd_losses(c, x, w1, w2, steps=8, lr=2.0):
+    """Train the 2-layer chain against the MEAN quadratic loss
+    0.5*mean(y^2) (head gradient y/size) and record the loss
+    trajectory — computed master-side in fp32: only the WIRE is lossy,
+    the comparison metric must not be."""
+    losses, total_bytes = [], 0
+    for _ in range(steps):
+        got = {}
+
+        def head(z, i):
+            z = np.asarray(z, np.float32)
+            got.setdefault("y", []).append(z)
+            return None, z / z.size
+
+        c.reset_stats()
+        res = c.conv_train_chain(x, [w1, w2], [_relu(), None], head)
+        total_bytes += c.comm_bytes
+        y = np.concatenate(got["y"], axis=0)
+        losses.append(0.5 * float(np.mean(y * y)))
+        w1 = w1 - lr * res.dw[0]
+        w2 = w2 - lr * res.dw[1]
+    return losses, total_bytes
+
+
+def test_topk_grads_converge_like_fp32_with_fewer_bytes():
+    rng = np.random.default_rng(1)
+    x, w1, w2 = _data(rng)
+
+    c32 = _make()
+    ck = _make("grads=topk:0.05")
+    try:
+        ref_losses, ref_bytes = _sgd_losses(c32, x, w1, w2)
+        tk_losses, tk_bytes = _sgd_losses(ck, x, w1, w2)
+    finally:
+        c32.shutdown()
+        ck.shutdown()
+
+    # training moves: both trajectories decrease
+    assert ref_losses[-1] < ref_losses[0]
+    assert tk_losses[-1] < tk_losses[0]
+    # and error feedback keeps the sparsified run tracking fp32: the
+    # total loss reduction stays close to the dense wire's
+    ref_drop = ref_losses[0] - ref_losses[-1]
+    tk_drop = tk_losses[0] - tk_losses[-1]
+    assert tk_drop > 0.7 * ref_drop
+    # the sparsified wire is strictly cheaper
+    assert tk_bytes < ref_bytes

@@ -20,6 +20,7 @@ from tools.lint.checkers import (  # noqa: E402
     clock_injection,
     future_resolution,
     import_graph,
+    resource_hygiene,
     thread_hygiene,
 )
 from tools.lint.core import Violation, apply_waivers, parse_waivers  # noqa: E402
@@ -255,6 +256,39 @@ def test_thread_hygiene_catches_leaks_and_swallows():
     assert len(bad) == 2  # non-daemon unjoined thread + silent swallow
     assert thread_hygiene.check_source(p, textwrap.dedent(good_src), Path(".")) == []
     assert thread_hygiene.check_source(p, textwrap.dedent(joined_src), Path(".")) == []
+
+
+def test_resource_hygiene_catches_unreleased_segments():
+    bad_create = '''\
+        from multiprocessing import shared_memory
+        def ring():
+            shm = shared_memory.SharedMemory(create=True, size=1024)
+            return shm
+    '''
+    bad_attach = '''\
+        from multiprocessing.shared_memory import SharedMemory
+        def attach(name):
+            return SharedMemory(name=name)
+    '''
+    good_src = '''\
+        from multiprocessing import shared_memory
+        class Ring:
+            def __init__(self):
+                self._shm = shared_memory.SharedMemory(create=True, size=1024)
+            def close(self):
+                self._shm.close()
+                self._shm.unlink()
+    '''
+    p = Path("fixture.py")
+    bad = resource_hygiene.check_source(p, textwrap.dedent(bad_create), Path("."))
+    assert len(bad) == 2  # no close path AND no unlink path
+    assert "unlink" in bad[1].message
+    attach = resource_hygiene.check_source(
+        p, textwrap.dedent(bad_attach), Path("."))
+    assert len(attach) == 1  # attachers need close(), not unlink()
+    assert "close" in attach[0].message
+    assert resource_hygiene.check_source(
+        p, textwrap.dedent(good_src), Path(".")) == []
 
 
 # ---- waivers ----------------------------------------------------------

@@ -245,7 +245,8 @@ def test_codec_socket_roundtrip_is_lossless_for_fp16_representable():
     np.testing.assert_array_equal(got["b"][0], payload["b"][0])
     assert got["i"].dtype == np.int32
     # 8 + 4 + 3 floats at 2B encoded + 4 int32 at 4B + 8B for the string
-    assert s.bytes_to_slave == (8 + 4 + 3) * 2 + 4 * 4 + 8
+    # + 4 dict keys at the 8B scalar rate
+    assert s.bytes_to_slave == (8 + 4 + 3) * 2 + 4 * 4 + 8 + 4 * 8
 
 
 # ---------------------------------------------------------------------------

@@ -149,14 +149,18 @@ def test_fifo_when_conv_and_bwd_ops_interleave():
 def test_train_chain_comm_bytes_under_bandwidth():
     """Over finite links the train step's traffic is fully accounted and
     each phase's kernel shard crosses the wire ONCE (microbatches after
-    the first ride the slave's cached copy); numerics are unharmed."""
+    the first ride the slave's cached copy); numerics are unharmed.
+    The versioned weight-broadcast cache is disabled so the per-phase
+    accounting stays exact (with it on, the bwd phases re-ship their
+    unchanged shards as ~24-byte tokens — test_weight_cache.py pins
+    that side)."""
     x, w1, _ = _data(b=4, cout=6, seed=3)
     rng = np.random.default_rng(4)
     w2 = rng.normal(size=(5, 5, 6, 9)).astype(np.float32)
     g, (dx_want, dw1_want, dw2_want) = _train_chain_refs(x, w1, w2)
 
     c = HeteroCluster([1.0, 1.0], pipeline=True, microbatches=4,
-                      bandwidth_mbps=2000.0)
+                      bandwidth_mbps=2000.0, weight_cache=False)
     try:
         c.probe_times = [1.0, 1.0]
         c.reset_stats()

@@ -1,47 +1,65 @@
-"""Transport conformance: the in-proc queue emulation and the real TCP
-wire must be interchangeable behind the same contract.
+"""Transport conformance: the in-proc queue emulation, the real TCP
+wire and the shared-memory rings must be interchangeable behind the
+same contract.
 
-One suite runs against BOTH transports: payload roundtrip fidelity and
-FIFO order, canonical nbytes accounting (identical numbers on either
-wire, with and without the fp16 codec), slave-error propagation, and —
-TCP only — measured link bandwidth feeding the comm-aware partitioner,
-subprocess slave numerics vs the single-device VJP on every partition
-axis, and orderly subprocess shutdown on cluster close and after a
-master-side protocol exception.
+One suite runs against ALL THREE transports: payload roundtrip fidelity
+and FIFO order, canonical nbytes accounting (identical numbers on every
+wire, with and without each codec stage), slave-error propagation, and
+— subprocess wires — measured link bandwidth feeding the comm-aware
+partitioner, subprocess slave numerics vs the single-device VJP on
+every partition axis, and orderly subprocess shutdown on cluster close
+and after a master-side protocol exception.  Shm additionally proves
+segment hygiene (nothing leaks into /dev/shm) and the inline fallback
+for arrays larger than the ring.
 """
 import threading
 
 import numpy as np
 import pytest
 
-from repro.core.cluster.codec import resolve_wire_dtype
+from repro.core.cluster.codec import WireCodec, resolve_wire_dtype
 from repro.core.cluster.transport import (
     InProcTransport,
+    ShmSlaveEndpoint,
+    ShmTransport,
     TCPListener,
     TCPSlaveEndpoint,
     TCPTransport,
 )
 from repro.core.master_slave import HeteroCluster
 
-TRANSPORTS = ("inproc", "tcp")
+TRANSPORTS = ("inproc", "tcp", "shm")
 
 
-def _make_link(kind: str, wire_dtype=None):
-    """(master_channel, slave_endpoint, close) for either transport; the
-    TCP pair crosses a REAL localhost socket."""
+def _make_link(kind: str, wire_dtype=None, wire_codec=None, **chan_kw):
+    """(master_channel, slave_endpoint, close) for any transport; the
+    TCP/shm pairs cross a REAL localhost socket.  Each side gets its
+    own codec instance, like the cluster builds per link."""
     dtype = resolve_wire_dtype(wire_dtype)
+
+    def _codec():
+        return WireCodec.from_spec(wire_codec, wire_dtype)
+
     if kind == "inproc":
-        link = InProcTransport(None, dtype)
+        link = InProcTransport(None, dtype, wire_codec=_codec())
         return link, link.slave_endpoint(), link.close
+    chan_cls, ep_cls = (
+        (ShmTransport, ShmSlaveEndpoint) if kind == "shm"
+        else (TCPTransport, TCPSlaveEndpoint)
+    )
     listener = TCPListener()
     slave_box = {}
 
     def _connect():
-        slave_box["ep"] = TCPSlaveEndpoint(listener.host, listener.port, dtype)
+        slave_box["ep"] = ep_cls(
+            listener.host, listener.port, dtype, wire_codec=_codec()
+        )
 
     t = threading.Thread(target=_connect)
     t.start()
-    chan = TCPTransport(listener.accept(timeout_s=10), dtype)
+    chan = chan_cls(
+        listener.accept(timeout_s=10), dtype, wire_codec=_codec(), **chan_kw
+    )
     t.join(timeout=10)
     slave = slave_box["ep"]
 
@@ -87,30 +105,56 @@ def test_roundtrip_fifo_both_directions(kind):
         close()
 
 
-@pytest.mark.parametrize("wire_dtype", [None, "fp16", "bf16"])
-def test_nbytes_accounting_identical_across_transports(wire_dtype):
-    """The canonical byte counters report the SAME number on the queue
-    emulation and on the real TCP wire — comm_bytes is transport-
-    independent — and the 2-byte codec halves the float payload."""
+# canonical bytes of _payload() under each wire setting — the GOLDEN
+# accounting numbers every transport must report identically.  96 float
+# elements (x), 5 float64 (normalized to the codec dtype — float32 even
+# on the uncompressed wire), 3 float32 (ones), 4 int32 (never encoded),
+# one string flag and FOUR dict keys at the 8-byte scalar rate.
+_GOLDEN_BYTES = {
+    (None, None): 96 * 4 + 5 * 4 + 3 * 4 + 16 + 8 + 4 * 8,      # 472
+    ("fp16", None): 96 * 2 + 5 * 2 + 3 * 2 + 16 + 8 + 4 * 8,    # 264
+    ("bf16", None): 96 * 2 + 5 * 2 + 3 * 2 + 16 + 8 + 4 * 8,    # 264
+    # int8: each float tensor ships q.nbytes + one 8-byte scale
+    (None, "int8"): (96 + 8) + (5 + 8) + (3 + 8) + 16 + 8 + 4 * 8,  # 184
+}
+
+
+@pytest.mark.parametrize("wire_dtype,wire_codec", sorted(
+    _GOLDEN_BYTES, key=str
+))
+def test_nbytes_accounting_identical_across_transports(wire_dtype, wire_codec):
+    """The canonical byte counters report the SAME golden number on the
+    queue emulation, the real TCP wire and the shm rings — comm_bytes
+    is transport-independent — for every codec stage."""
     counted = {}
     for kind in TRANSPORTS:
-        chan, slave, close = _make_link(kind, wire_dtype)
+        chan, slave, close = _make_link(kind, wire_dtype, wire_codec)
         try:
             chan.write_to_slave(_payload())
             slave.recv()
             counted[kind] = chan.bytes_to_slave
         finally:
             close()
-    assert counted["inproc"] == counted["tcp"]
-    item = 2 if wire_dtype else 4
-    want = (
-        (2 * 4 * 4 * 3) * item      # x, float32 -> codec dtype
-        + 5 * (2 if wire_dtype else 8)  # float64 arange
-        + 3 * item                  # ones
-        + 4 * 4                     # int32: never encoded
-        + 8                         # the string flag
-    )
-    assert counted["inproc"] == want
+    want = _GOLDEN_BYTES[(wire_dtype, wire_codec)]
+    assert counted == {kind: want for kind in TRANSPORTS}
+
+
+@pytest.mark.parametrize("kind", TRANSPORTS)
+def test_float64_normalized_to_float32_on_uncompressed_wire(kind):
+    """The fp32 (no-codec) wire must not ship 8-byte doubles: float64
+    arrays normalize to float32 on write, so ``comm_bytes`` is
+    comparable across codec settings (PR 8 accounting-asymmetry fix)."""
+    chan, slave, close = _make_link(kind)
+    try:
+        chan.write_to_slave(np.arange(6, dtype=np.float64))
+        got = slave.recv()
+        assert got.dtype == np.float32
+        assert chan.bytes_to_slave == 6 * 4
+        slave.send(np.arange(6, dtype=np.float64))
+        back = chan.read_on_master()
+        assert back.dtype == np.float32
+    finally:
+        close()
 
 
 @pytest.mark.parametrize("kind", TRANSPORTS)
@@ -136,6 +180,77 @@ def test_tcp_frame_bytes_track_real_wire():
         chan.write_to_slave(_payload())
         slave.recv()
         assert chan.frame_bytes_to_slave > chan.bytes_to_slave > 0
+    finally:
+        close()
+
+
+# ---------------------------------------------------------------------------
+# shm-specific: segment hygiene and the inline-overflow fallback
+# ---------------------------------------------------------------------------
+
+
+def _shm_segments():
+    import os
+
+    try:
+        return set(os.listdir("/dev/shm"))
+    except (FileNotFoundError, NotADirectoryError):  # pragma: no cover
+        pytest.skip("no /dev/shm on this platform")
+
+
+def test_shm_close_unlinks_every_segment():
+    """The shm link creates its rings on open and must leave NOTHING in
+    /dev/shm after close — the master owns unlink, the slave only
+    detaches."""
+    before = _shm_segments()
+    chan, slave, close = _make_link("shm")
+    try:
+        chan.write_to_slave(_payload())
+        slave.recv()
+        assert _shm_segments() - before  # the rings are real OS segments
+    finally:
+        close()
+    assert _shm_segments() - before == set()
+
+
+def test_shm_array_larger_than_ring_falls_back_inline():
+    """An array that cannot fit the ring ships inline on the control
+    socket instead of deadlocking the ring writer — and the canonical
+    accounting is unchanged either way."""
+    big = np.arange(4096, dtype=np.float32)  # 16 KiB > the 4 KiB ring
+    small = np.ones((8, 8), np.float32)
+    chan, slave, close = _make_link("shm", ring_bytes=4096)
+    try:
+        chan.write_to_slave({"big": big, "small": small})
+        got = slave.recv()
+        np.testing.assert_array_equal(got["big"], big)
+        np.testing.assert_array_equal(got["small"], small)
+        assert chan.bytes_to_slave == big.nbytes + small.nbytes + 2 * 8
+        slave.send(big * 2.0)
+        np.testing.assert_array_equal(chan.read_on_master(), big * 2.0)
+    finally:
+        close()
+
+
+def test_shm_sustains_many_frames_through_small_ring():
+    """Ring reuse under wraparound: far more traffic than the ring's
+    capacity crosses intact and in order once the consumer releases."""
+    chan, slave, close = _make_link("shm", ring_bytes=1 << 14)
+    try:
+        msgs = [
+            np.full((32, 16), float(i), np.float32)  # 2 KiB each, 64 total
+            for i in range(64)
+        ]
+        def _pump():
+            for m in msgs:
+                chan.write_to_slave(m)
+
+        t = threading.Thread(target=_pump)
+        t.start()
+        for m in msgs:
+            np.testing.assert_array_equal(slave.recv(), m)
+        t.join(timeout=10)
+        assert not t.is_alive()
     finally:
         close()
 
@@ -185,10 +300,13 @@ def test_slave_error_propagates_not_hangs(kind):
         c.shutdown()
 
 
-def test_tcp_probe_measures_link_bandwidth():
-    """probe() on the tcp transport fills the planning bandwidths from a
-    real echo round-trip — the measured link replaces the knob."""
-    c = HeteroCluster([1.0, 1.0], transport="tcp")
+@pytest.mark.parametrize("kind", ["tcp", "shm"])
+def test_subprocess_probe_measures_link_bandwidth(kind):
+    """probe() on a subprocess transport fills the planning bandwidths
+    from a real echo round-trip — the measured link replaces the knob.
+    On shm the probe times the RING, so Eq. 1 sees the speed the plans
+    will actually get."""
+    c = HeteroCluster([1.0, 1.0], transport=kind)
     try:
         c.probe(image_size=8, in_channels=3, kernel_size=3, num_kernels=4,
                 batch=2, repeats=1)
@@ -223,10 +341,12 @@ def test_tcp_explicit_bandwidth_overrides_measurement():
         c.shutdown()
 
 
+@pytest.mark.parametrize("kind", ["tcp", "shm"])
 @pytest.mark.parametrize("partition", ["kernel", "spatial", "auto"])
-def test_tcp_train_chain_matches_single_device_vjp(partition):
+def test_subprocess_train_chain_matches_single_device_vjp(partition, kind):
     """The acceptance bar: the pipelined fwd+bwd train chain over REAL
-    subprocess slaves == jax.grad on one device, on every axis."""
+    subprocess slaves == jax.grad on one device, on every axis and on
+    both subprocess wires (tcp sockets and shm rings)."""
     import jax
     import jax.numpy as jnp
 
@@ -254,7 +374,7 @@ def test_tcp_train_chain_matches_single_device_vjp(partition):
     )
 
     c = HeteroCluster(
-        [1.0, 1.0, 1.0], transport="tcp", partition=partition,
+        [1.0, 1.0, 1.0], transport=kind, partition=partition,
         pipeline=True, microbatches=3,
         # finite links exercise auto's comm-extended prediction; tcp
         # never delays anything, this only feeds the planner
@@ -280,8 +400,9 @@ def test_tcp_train_chain_matches_single_device_vjp(partition):
         c.shutdown()
 
 
-def test_tcp_orderly_shutdown_reaps_subprocesses():
-    c = HeteroCluster([1.0, 1.0, 1.0], transport="tcp")
+@pytest.mark.parametrize("kind", ["tcp", "shm"])
+def test_subprocess_orderly_shutdown_reaps_subprocesses(kind):
+    c = HeteroCluster([1.0, 1.0, 1.0], transport=kind)
     c.probe_times = [1.0, 1.0, 1.0]
     x = np.zeros((2, 6, 6, 2), np.float32)
     w = np.ones((3, 3, 2, 4), np.float32)
@@ -291,10 +412,11 @@ def test_tcp_orderly_shutdown_reaps_subprocesses():
     c.shutdown()  # idempotent
 
 
-def test_tcp_shutdown_after_master_exception_reaps_subprocesses():
+@pytest.mark.parametrize("kind", ["tcp", "shm"])
+def test_subprocess_shutdown_after_master_exception_reaps(kind):
     """A protocol error on the master must not leak slave processes:
     shutdown() after the exception still ends them cleanly."""
-    c = HeteroCluster([1.0, 1.0], transport="tcp")
+    c = HeteroCluster([1.0, 1.0], transport=kind)
     try:
         x = np.zeros((1, 4, 4, 2), np.float32)
         c.sockets[0].write_to_slave(("conv", (x, None)))  # slave KeyError

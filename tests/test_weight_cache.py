@@ -1,0 +1,197 @@
+"""The versioned weight-broadcast cache: master-side version store and
+per-link shipped-token bookkeeping, slave-side (key, version) cache
+resolution, and the end-to-end byte collapse on repeated train steps
+and serve pushes with static weights.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cluster.codec import WeightRef
+from repro.core.cluster.scheduler import ServeChain
+from repro.core.master_slave import HeteroCluster
+
+
+def _weights(rng):
+    w1 = rng.normal(size=(3, 3, 3, 6)).astype(np.float32)
+    w2 = rng.normal(size=(3, 3, 6, 8)).astype(np.float32)
+    return w1, w2
+
+
+def _cluster(n=2, **kw):
+    c = HeteroCluster([1.0] * n, **kw)
+    c.probe_times = [1.0] * n
+    return c
+
+
+# ---------------------------------------------------------------------------
+# master-side version store
+# ---------------------------------------------------------------------------
+
+
+def test_weight_version_bumps_only_on_new_array_object():
+    c = _cluster()
+    try:
+        w = np.ones((3, 3, 3, 4), np.float32)
+        assert c._weight_version("k", w) == (0, False)
+        assert c._weight_version("k", w) == (0, True)  # same object: cached
+        assert c._weight_version("k", w + 0.0) == (1, False)  # new object
+        assert c._weight_version("other", w) == (0, False)  # per-key spaces
+    finally:
+        c.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: repeated train steps collapse the weight broadcast
+# ---------------------------------------------------------------------------
+
+
+def _train_bytes(c, x, ws, steps):
+    """comm_bytes of each of ``steps`` identical train-chain calls."""
+    out = []
+    for _ in range(steps):
+        c.reset_stats()
+        c.conv_train_chain(x, list(ws), [None, None], lambda z, i: (None, z))
+        out.append(c.comm_bytes)
+    return out
+
+
+def test_train_chain_second_step_ships_tokens_not_kernels():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(4, 8, 8, 3)).astype(np.float32)
+    ws = _weights(rng)
+    c = _cluster()
+    try:
+        b1, b2, b3 = _train_bytes(c, x, ws, 3)
+        wire_kernel_bytes = sum(w.nbytes for w in ws)
+        assert b2 < b1
+        assert b1 - b2 > 0.25 * wire_kernel_bytes  # shards became tokens
+        assert b3 == b2  # steady state
+    finally:
+        c.shutdown()
+
+
+def test_weight_cache_off_reships_every_step():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(4, 8, 8, 3)).astype(np.float32)
+    ws = _weights(rng)
+    c = _cluster(weight_cache=False)
+    try:
+        b1, b2 = _train_bytes(c, x, ws, 2)
+        assert b1 == b2
+    finally:
+        c.shutdown()
+
+
+def test_new_weight_object_and_new_geometry_invalidate_token():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(4, 8, 8, 3)).astype(np.float32)
+    w1, w2 = _weights(rng)
+    c = _cluster()
+    try:
+        _, steady = _train_bytes(c, x, (w1, w2), 2)
+        # an optimizer step produces NEW arrays: the version bumps and
+        # the fresh kernels ship again
+        c.reset_stats()
+        c.conv_train_chain(
+            x, [w1 * 0.9, w2 * 0.9], [None, None], lambda z, i: (None, z)
+        )
+        assert c.comm_bytes > steady
+        # same weights, different batch geometry: counts change, so the
+        # shard boundaries may move — the token must not match
+        _train_bytes(c, x, (w1, w2), 1)  # re-prime with the originals
+        c.reset_stats()
+        x2 = rng.normal(size=(6, 8, 8, 3)).astype(np.float32)
+        c.conv_train_chain(
+            x2, [w1, w2], [None, None], lambda z, i: (None, z)
+        )
+        assert c.comm_bytes > steady
+    finally:
+        c.shutdown()
+
+
+def test_evict_drops_per_link_shipped_state():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(4, 8, 8, 3)).astype(np.float32)
+    ws = _weights(rng)
+    c = _cluster(3)
+    try:
+        _train_bytes(c, x, ws, 1)
+        assert len(c._wshipped) == 2  # one token map per live slave link
+        c.evict(c.slave_ids[0])
+        assert len(c._wshipped) == 1
+    finally:
+        c.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# slave-side cache resolution
+# ---------------------------------------------------------------------------
+
+
+def test_weight_ref_miss_raises_slave_error_not_garbage():
+    """A token for a (key, version) the slave never cached is a master
+    bug: it must surface as a loud SlaveError, not a silent wrong
+    answer."""
+    c = _cluster()
+    try:
+        x = np.zeros((1, 4, 4, 2), np.float32)
+        c.sockets[0].write_to_slave(
+            ("conv", (x, WeightRef("never-shipped", 0, None)))
+        )
+        with pytest.raises(RuntimeError, match="slave device 1 failed"):
+            c._check_result(c.sockets[0].read_on_master())
+    finally:
+        c.shutdown()
+
+
+def test_weight_ref_version_mismatch_raises():
+    c = _cluster()
+    try:
+        x = np.zeros((1, 4, 4, 2), np.float32)
+        w = np.ones((1, 1, 2, 3), np.float32)
+        c.sockets[0].write_to_slave(("conv", (x, WeightRef("k", 0, w))))
+        out = c._check_result(c.sockets[0].read_on_master())
+        assert out.shape == (1, 4, 4, 3)
+        # cached hit: the token alone reproduces the same result
+        c.sockets[0].write_to_slave(("conv", (x, WeightRef("k", 0, None))))
+        np.testing.assert_array_equal(
+            c._check_result(c.sockets[0].read_on_master()), out
+        )
+        # stale version: the slave must refuse, not silently reuse
+        c.sockets[0].write_to_slave(("conv", (x, WeightRef("k", 1, None))))
+        with pytest.raises(RuntimeError, match="slave device 1 failed"):
+            c._check_result(c.sockets[0].read_on_master())
+    finally:
+        c.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# the serve lane: push-to-push weight bytes collapse
+# ---------------------------------------------------------------------------
+
+
+def _steady_push_bytes(c, chain, x, rng):
+    """Wire bytes of one STEADY-STATE push: the pipeline keeps a batch
+    in flight, so push N's window includes push N-1's tail gather —
+    warm two pushes first, then measure the third."""
+    chain.push(x)
+    chain.push(x)
+    c.reset_stats()
+    chain.push(x)
+    return c.comm_bytes
+
+
+def test_serve_push_weight_bytes_collapse_to_tokens():
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(3, 8, 8, 3)).astype(np.float32)
+    ws = _weights(rng)
+
+    c_on = _cluster()
+    c_off = _cluster(weight_cache=False)
+    try:
+        on = _steady_push_bytes(c_on, ServeChain(c_on, list(ws)), x, rng)
+        off = _steady_push_bytes(c_off, ServeChain(c_off, list(ws)), x, rng)
+        assert on < off  # static serve weights ride as ~24-byte tokens
+    finally:
+        c_on.shutdown()
+        c_off.shutdown()

@@ -1,0 +1,204 @@
+"""Unit tests for the pluggable wire-compressor stack (codec.py).
+
+Spec parsing and its canonical round-trip, the int8 absmax stage, the
+top-k gradient sparsifier with master-side error feedback, per-class
+stage routing by the op grammar, and the canonical ``wire_nbytes``
+accounting of every marker class.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cluster import codec
+from repro.core.cluster.codec import (
+    QuantArray,
+    SparseGrad,
+    WeightRef,
+    WireCodec,
+    resolve_wire_dtype,
+    wire_nbytes,
+)
+
+
+# ---------------------------------------------------------------------------
+# spec parsing
+# ---------------------------------------------------------------------------
+
+
+def test_single_stage_spec_applies_to_all_classes():
+    c = WireCodec.from_spec("int8")
+    assert c.weights == "int8" and c.acts == "int8" and c.grads == "int8"
+    assert c.spec == "int8"
+
+
+def test_per_class_spec_and_canonical_roundtrip():
+    c = WireCodec.from_spec("weights=fp16,acts=int8,grads=topk:0.05")
+    assert c.weights == np.dtype(np.float16)
+    assert c.acts == "int8"
+    assert c.grad_topk == pytest.approx(0.05)
+    spec = c.spec
+    assert spec == "weights=fp16,acts=int8,grads=topk:0.05"
+    c2 = WireCodec.from_spec(spec)
+    assert c2.spec == spec
+
+
+def test_empty_spec_falls_back_to_wire_dtype():
+    assert WireCodec.from_spec(None, "fp16").acts == np.dtype(np.float16)
+    assert WireCodec.from_spec("", None).spec is None
+
+
+@pytest.mark.parametrize("bad", [
+    "float8",                   # unknown stage
+    "voltage=fp16",             # unknown message class
+    "acts=fp16,acts=int8",      # duplicate class
+    "acts=topk:0.1",            # topk only valid for grads
+    "grads=topk:1.5",           # fraction out of (0, 1)
+    "fp16 int8",                # missing class=stage shape
+])
+def test_bad_specs_raise(bad):
+    with pytest.raises(ValueError):
+        WireCodec.from_spec(bad)
+
+
+def test_int8_is_a_codec_stage_not_a_wire_dtype():
+    """The legacy single-dtype knob stays dtype-only: int8 needs the
+    marker-based stack (scales ride along), so ``wire_dtype='int8'``
+    must fail loudly instead of half-working."""
+    with pytest.raises(ValueError):
+        resolve_wire_dtype("int8")
+
+
+# ---------------------------------------------------------------------------
+# int8 absmax stage
+# ---------------------------------------------------------------------------
+
+
+def test_int8_roundtrip_error_bounded_by_half_step():
+    rng = np.random.default_rng(0)
+    a = rng.uniform(-3.0, 3.0, size=(64, 33)).astype(np.float32)
+    qa = codec._quant_int8(a)
+    assert qa.q.dtype == np.int8
+    back = codec._dequant_int8(qa)
+    step = float(np.max(np.abs(a))) / 127.0
+    assert np.max(np.abs(back - a)) <= step / 2 + 1e-7
+
+
+def test_int8_degenerate_tensors():
+    z = codec._dequant_int8(codec._quant_int8(np.zeros(5, np.float32)))
+    np.testing.assert_array_equal(z, np.zeros(5, np.float32))
+    e = codec._quant_int8(np.zeros((0, 3), np.float32))
+    assert e.q.shape == (0, 3)
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification + error feedback
+# ---------------------------------------------------------------------------
+
+
+def test_topk_keeps_largest_and_densifies_back():
+    g = np.array([[0.1, -5.0, 0.2], [4.0, -0.3, 0.05]], np.float32)
+    sp = codec._sparsify_topk(g, 1 / 3)
+    dense = codec._densify(sp)
+    assert dense.shape == g.shape
+    # the two largest-|.| entries survive, everything else is zero
+    np.testing.assert_array_equal(
+        dense, [[0, -5.0, 0], [4.0, 0, 0]]
+    )
+
+
+def test_topk_too_small_ships_dense():
+    assert codec._sparsify_topk(np.ones(3, np.float32), 0.5) is None
+
+
+def test_error_feedback_reinjects_dropped_mass():
+    """With a CONSTANT gradient, the shipped top-k stream must average
+    to the true gradient: the residual is re-added every step, so after
+    N steps total shipped = N*g - residual_N with residual bounded."""
+    rng = np.random.default_rng(1)
+    g = rng.normal(size=(6, 40)).astype(np.float32)
+    c = WireCodec.from_spec("grads=topk:0.1")
+    shipped = np.zeros_like(g)
+    n = 30
+    for _ in range(n):
+        enc = c._grad_down(g, "layer0")
+        assert isinstance(enc, SparseGrad)
+        shipped += codec._densify(enc)
+    resid = n * g - shipped
+    # the EF identity: the leftover is EXACTLY the stored residual
+    np.testing.assert_allclose(
+        resid, c._ef[("layer0", g.shape)], rtol=1e-4, atol=1e-4
+    )
+    # and it is bounded: the average shipped gradient converges to g
+    assert np.linalg.norm(shipped / n - g) / np.linalg.norm(g) < 0.15
+
+
+def test_topk_dense_fallback_pops_residual():
+    c = WireCodec.from_spec("grads=topk:0.4")
+    big = np.arange(100, dtype=np.float32)
+    assert isinstance(c._grad_down(big, "k"), SparseGrad)
+    assert ("k", big.shape) in c._ef
+    tiny = np.ones(2, np.float32)
+    out = c._grad_down(tiny, "t")
+    assert isinstance(out, np.ndarray)  # dense: indices would not pay
+    assert ("t", tiny.shape) not in c._ef
+
+
+# ---------------------------------------------------------------------------
+# grammar routing and accounting
+# ---------------------------------------------------------------------------
+
+
+def test_down_grammar_routes_classes_independently():
+    c = WireCodec.from_spec("weights=int8,acts=fp16,grads=topk:0.05")
+    x = np.random.default_rng(2).normal(size=(2, 8, 8, 3)).astype(np.float32)
+    w = np.ones((3, 3, 3, 4), np.float32)
+    g = np.random.default_rng(3).normal(size=(2, 8, 8, 4)).astype(np.float32)
+    op, (ex, ew, eg) = c.encode_down(("bwd", (x, w, g)))
+    assert op == "bwd"
+    assert ex.dtype == np.float16
+    assert isinstance(ew, QuantArray)
+    assert isinstance(eg, SparseGrad)
+
+
+def test_ping_passes_through_uncompressed():
+    """Bandwidth probes must measure the raw wire, whatever the codec."""
+    c = WireCodec.from_spec("int8")
+    blob = np.ones(256, np.float32)
+    op, payload = c.encode_down(("ping", blob))
+    assert op == "ping"
+    assert payload is blob
+
+
+def test_up_pair_is_grads_everything_else_acts():
+    c = WireCodec.from_spec("acts=fp16,grads=int8")
+    dx, dw = c.encode_up((np.ones(4, np.float32), np.ones(3, np.float32)))
+    assert isinstance(dx, QuantArray) and isinstance(dw, QuantArray)
+    y = c.encode_up(np.ones(4, np.float32))
+    assert y.dtype == np.float16
+
+
+def test_decode_restores_float32_for_every_marker():
+    c = WireCodec.from_spec("int8")
+    a = np.random.default_rng(4).uniform(-1, 1, 50).astype(np.float32)
+    dec = c.decode(c.encode_down({"a": a})["a"])
+    assert dec.dtype == np.float32
+    np.testing.assert_allclose(dec, a, atol=1.0 / 127.0)
+    sp = codec._sparsify_topk(a, 0.1)
+    np.testing.assert_array_equal(c.decode(sp), codec._densify(sp))
+
+
+def test_wire_nbytes_of_marker_classes():
+    qa = QuantArray(np.zeros(10, np.int8), 0.5)
+    assert wire_nbytes(qa) == 10 + 8
+    sp = SparseGrad(np.zeros(3, np.int32), np.zeros(3, np.float32), (30,))
+    assert wire_nbytes(sp) == 3 * 4 + 3 * 4 + 8
+    assert wire_nbytes(WeightRef("layer", 7, None)) == 8 + 8
+    assert wire_nbytes(WeightRef("layer", 7, np.zeros(4, np.float32))) == 32
+
+
+def test_itemsize_feeds_the_planner():
+    assert WireCodec.from_spec(None).itemsize("acts") == 4.0
+    assert WireCodec.from_spec("fp16").itemsize("weights") == 2.0
+    assert WireCodec.from_spec("int8").itemsize("acts") == 1.0
+    c = WireCodec.from_spec("grads=topk:0.05")
+    assert c.itemsize("grads") == pytest.approx(8.0 * 0.05)
+    assert c.itemsize("acts") == 4.0

@@ -8,6 +8,7 @@ from tools.lint.checkers import (
     docstrings,
     future_resolution,
     import_graph,
+    resource_hygiene,
     thread_hygiene,
 )
 
@@ -19,5 +20,6 @@ ALL_CHECKERS = (
     blocking_lock,
     future_resolution,
     thread_hygiene,
+    resource_hygiene,
     docstrings,
 )

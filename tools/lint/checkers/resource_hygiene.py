@@ -1,0 +1,81 @@
+"""resource-hygiene: every SharedMemory mapping must have a close()
+path, and every created segment an unlink() path.
+
+A ``multiprocessing.shared_memory.SharedMemory`` segment is a REAL
+file in ``/dev/shm``: it outlives the process that made it, and a
+64 MiB ring leaked per crashed test run fills the host's shm mount in
+an afternoon.  The discipline the shm transport follows — the creator
+owns ``unlink()``, every attacher at least ``close()``s its mapping,
+both on a guaranteed (finally / close-method) path — is what this
+checker keeps mechanical:
+
+- any file that calls ``SharedMemory(...)`` must also call
+  ``.close()`` somewhere (the detach path must exist), and
+- any file that creates segments (``SharedMemory(create=True, ...)``)
+  must also call ``.unlink()`` (the removal path must exist).
+
+The check is deliberately file-coarse (like thread-hygiene's join
+search): it cannot prove the path is reached on every branch, but it
+guarantees nobody adds a new segment user with NO cleanup path at
+all — the failure mode that actually happens.  A site where leaking
+is correct (a probe that hands the segment to another owner) carries
+an inline waiver with its reason.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List
+
+from tools.lint.core import Violation, iter_py, rel, terminal_name
+
+NAME = "resource-hygiene"
+INVARIANT = __doc__
+
+ROOTS = ("src/repro/core/cluster", "src/repro/serve", "src/repro/launch")
+
+
+def check_source(path: Path, text: str, repo: Path) -> List[Violation]:
+    """Violations for one file (see module docstring for the rules)."""
+    tree = ast.parse(text, filename=str(path))
+    out: List[Violation] = []
+    called = {
+        n.func.attr
+        for n in ast.walk(tree)
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+    }
+    for node in ast.walk(tree):
+        if not (
+            isinstance(node, ast.Call)
+            and terminal_name(node.func) == "SharedMemory"
+        ):
+            continue
+        creates = any(
+            kw.arg == "create"
+            and isinstance(kw.value, ast.Constant)
+            and kw.value.value is True
+            for kw in node.keywords
+        )
+        if "close" not in called:
+            out.append(Violation(
+                NAME, rel(path, repo), node.lineno,
+                "SharedMemory mapped but this file never calls .close(): "
+                "the mapping leaks — detach on a guaranteed path",
+            ))
+        if creates and "unlink" not in called:
+            out.append(Violation(
+                NAME, rel(path, repo), node.lineno,
+                "SharedMemory(create=True) but this file never calls "
+                ".unlink(): the segment outlives the process in /dev/shm "
+                "— the creator owns removal",
+            ))
+    return out
+
+
+def run(repo: Path) -> List[Violation]:
+    """Gate shm segment cleanup paths across the wire + launch tree."""
+    out: List[Violation] = []
+    for root in ROOTS:
+        for path in iter_py(repo / root):
+            out.extend(check_source(path, path.read_text(), repo))
+    return out
