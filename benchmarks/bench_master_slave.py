@@ -56,6 +56,8 @@ TRAJECTORY_ROWS = (
     "int8_codec_bytes_gain",
     "topk_grad_bytes_gain",
     "auto_partition_trainstep_gain",
+    "batch_vs_kernel_fatlink_gain",
+    "hybrid_auto_gain",
     "trainstep_pipeline_gain",
     "tcp_vs_inproc_overhead",
     "shm_vs_tcp_gain",
@@ -73,6 +75,8 @@ GAIN_ROWS = (
     "int8_codec_bytes_gain",
     "topk_grad_bytes_gain",
     "auto_partition_trainstep_gain",
+    "batch_vs_kernel_fatlink_gain",
+    "hybrid_auto_gain",
     "trainstep_pipeline_gain",
     "shm_vs_tcp_gain",
 )
@@ -127,10 +131,15 @@ def _time_trainstep(cluster: HeteroCluster, x, weights, reps=3) -> float:
 
     between = [_sim_stage] * len(weights)
     cluster.conv_train_chain(x, weights, between, head)  # warm (+ duty)
-    t0 = time.perf_counter()
-    for _ in range(reps):
+    # best-of-N: the stage sleeps and emulated-link delays are
+    # deterministic, so the minimum is the schedule's true cost and
+    # host scheduling spikes are discarded rather than averaged in
+    best = float("inf")
+    for _ in range(max(reps, 3)):
+        t0 = time.perf_counter()
         cluster.conv_train_chain(x, weights, between, head)
-    return (time.perf_counter() - t0) / reps
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def run(smoke: bool = False):
@@ -386,6 +395,100 @@ def run(smoke: bool = False):
         ("auto_partition_trainstep_gain", gain,
          f"gain={gain:.2f}x (>1 means partition='auto' beats the paper's "
          f"kernel axis under a 25 Mbps link; ratio, not us)")
+    )
+
+    # (d) the THIRD axis on a FAT link: batch data parallelism vs the
+    # paper's kernel axis at >= 1 Gbps.  Activation-heavy layers at a
+    # real batch (the granularity sweet spot: one row per unit), sim
+    # compute pinned fast (1e11 flops/s) so the emulated wire is what
+    # the step measures, no master-stage sleeps — kernel re-broadcasts
+    # the full x to every slave in BOTH sweeps while batch ships each
+    # member only its rows; the replicated kernel is a ~24-byte
+    # WeightRef after the warm step and the full-dW all-reduce is tiny
+    # for 3x3x16x16.  Acceptance bar: >= 1.3x.
+    bf = 16
+    xf = rng.normal(size=(bf, 32, 32, cw)).astype(np.float32)
+    wf1 = rng.normal(size=(3, 3, cw, cw)).astype(np.float32)
+    wf2 = rng.normal(size=(3, 3, cw, cw)).astype(np.float32)
+    probe_flops_f = 2.0 * bf * 32 ** 2 * 9 * cw * cw
+
+    def _time_wirebound(mode, x, weights, probe_flops, bandwidth_mbps,
+                        reps, choices=None):
+        """Min wall-clock across reps AND across two fresh cluster
+        instantiations: the emulated-link sleeps are deterministic, so
+        the global minimum converges to the schedule's true cost while
+        host scheduling spikes and unlucky thread placement (which vary
+        per instantiation, not just per rep) are discarded."""
+        def head(z, i):
+            return 0.0, np.zeros_like(z)
+
+        best = float("inf")
+        for _ in range(2):
+            cluster = HeteroCluster(
+                SLOWDOWNS, ["sim:1e11"] * len(SLOWDOWNS), partition=mode,
+                pipeline=True, microbatches=micro,
+                bandwidth_mbps=bandwidth_mbps,
+            )
+            try:
+                cluster.probe_times = [
+                    sd * probe_flops / 1e11 for sd in SLOWDOWNS
+                ]
+                cluster.probe_flops = probe_flops
+                cluster.conv_train_chain(x, weights, None, head)  # warm
+                for _ in range(max(reps, 3)):
+                    t0 = time.perf_counter()
+                    cluster.conv_train_chain(x, weights, None, head)
+                    best = min(best, time.perf_counter() - t0)
+                if choices is not None:
+                    choices.clear()
+                    choices.extend(
+                        sorted(set(cluster.partition_choices.values()))
+                    )
+            finally:
+                cluster.shutdown()
+        return best
+
+    results = {}
+    fat_choices = []
+    for mode in ("kernel", "batch", "auto"):
+        results[mode] = _time_wirebound(
+            mode, xf, [wf1, wf2], probe_flops_f, 1000.0, reps,
+            choices=fat_choices if mode == "auto" else None,
+        )
+    fat_gain = results["kernel"] / results["batch"]
+    rows.append(
+        ("batch_vs_kernel_fatlink_gain", fat_gain,
+         f"gain={fat_gain:.2f}x (>1 means partition='batch' beats the "
+         f"paper's kernel axis on a 1 Gbps link, activation-heavy "
+         f"layers at batch {bf}; auto picked {fat_choices}; ratio, "
+         f"not us)")
+    )
+
+    # (e) the HYBRID planner: one activation-heavy layer (batch-friendly
+    # on this link) chained into one parameter-heavy layer (the
+    # per-slave full-dW all-reduce sinks batch there; kernel keeps it),
+    # 200 Mbps.  auto resolves the axis PER LAYER, so it must beat every
+    # single-axis run — the per-layer picks are the point, not any one
+    # axis.
+    bh, ih = 8, 16
+    xh = rng.normal(size=(bh, ih, ih, cw)).astype(np.float32)
+    wh1 = rng.normal(size=(3, 3, cw, cw)).astype(np.float32)
+    wh2 = rng.normal(size=(5, 5, cw, 256)).astype(np.float32)
+    probe_flops_h = 2.0 * bh * ih ** 2 * 9 * cw * cw
+    results = {}
+    hyb_choices = []
+    for mode in ("kernel", "spatial", "batch", "auto"):
+        results[mode] = _time_wirebound(
+            mode, xh, [wh1, wh2], probe_flops_h, 200.0, reps,
+            choices=hyb_choices if mode == "auto" else None,
+        )
+    best_fixed = min(results[m] for m in ("kernel", "spatial", "batch"))
+    hybrid_gain = best_fixed / results["auto"]
+    rows.append(
+        ("hybrid_auto_gain", hybrid_gain,
+         f"gain={hybrid_gain:.2f}x (>1 means per-layer auto beats the "
+         f"BEST single-axis run on a mixed act-heavy+param-heavy chain "
+         f"at 200 Mbps; auto mixed {hyb_choices}; ratio, not us)")
     )
 
     # -- 6. the transport seam: real TCP subprocess slaves vs the -------

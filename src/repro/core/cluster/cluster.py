@@ -5,9 +5,12 @@ computes the Eq. 1(+comm, +comp-duty) shares, and drives the per-op
 scatter/gather halves the schedulers (core/cluster/scheduler.py)
 pipeline.  The protocol per convolutional layer (Algorithm 1 lines
 6-23): broadcast the inputs, scatter per-device kernel shards (or ship
-row strips + halos in spatial mode), every node convolves its shard —
+row strips + halos in spatial mode, or batch-row slices + the
+replicated kernel in batch mode), every node convolves its shard —
 master included — then gather and reassemble on the master, which also
-computes every non-convolutional layer alone.
+computes every non-convolutional layer alone.  The backward mirrors
+each axis: kernel sums partial dX, spatial overlap-adds strips, batch
+sums per-member full dW (an exact all-reduce over disjoint rows).
 
 ``transport`` picks the wire:
 
@@ -244,7 +247,12 @@ class HeteroCluster:
                 f"got {partition!r}"
             )
         self.partition = partition
-        self.partition_choices: Dict[tuple, str] = {}  # auto's per-layer picks
+        # auto's per-layer picks, keyed (x_shape, w_shape), plus the
+        # memo that lets repeated serve slabs skip the predictor — both
+        # bounded (dynamic batching mints a key per slab batch size) and
+        # both invalidated together on any membership change
+        self.partition_choices: Dict[tuple, str] = plans.BoundedDict()
+        self._mode_cache: Dict[tuple, str] = plans.BoundedDict()
         if wire_codec is not None and wire_dtype is not None:
             raise ValueError(
                 "pass wire_codec OR wire_dtype, not both: wire_codec "
@@ -697,6 +705,7 @@ class HeteroCluster:
                     raise
             self.probe_times.append(float(probe_time))
         self.partition_choices.clear()
+        self._mode_cache.clear()
         return dev
 
     def evict(self, device: int) -> None:
@@ -752,6 +761,7 @@ class HeteroCluster:
             del self.probe_times[pos + 1]
         self.n_slaves = len(self.sockets)
         self.partition_choices.clear()
+        self._mode_cache.clear()
 
     def _on_slave_lost(self, sock: Transport, err: BaseException) -> None:
         """A link reported its slave dead: record the failure, kill any
@@ -965,7 +975,8 @@ class HeteroCluster:
             op: ``"conv"`` | ``"bwd"`` | ``"train"`` — what the plan
                 will be used for (weighs the auto-axis choice).
             partition: per-call override of the cluster's axis
-                (``"kernel"`` | ``"spatial"`` | ``"auto"``).
+                (``"kernel"`` | ``"spatial"`` | ``"batch"`` |
+                ``"auto"``).
             weight_key: stable key opting this layer into the
                 versioned weight-broadcast cache (None = legacy
                 per-op caching only).
@@ -982,8 +993,9 @@ class HeteroCluster:
     def scatter_conv(
         self, x: np.ndarray, w: np.ndarray, *, partition: Optional[str] = None
     ) -> scheduler.Pending:
-        """Scatter one conv: broadcast x + kernel shards (kernel mode) or
-        height strips + the full kernel (spatial mode); returns a handle.
+        """Scatter one conv: broadcast x + kernel shards (kernel mode),
+        height strips + the full kernel (spatial mode), or batch-row
+        slices + the replicated kernel (batch mode); returns a handle.
         The master's own shard runs at gather time."""
         x = np.asarray(x, np.float32)
         plan = self.plan_conv(x.shape, w, "conv", partition)
@@ -1005,6 +1017,8 @@ class HeteroCluster:
     ) -> scheduler.Pending:
         if plan.mode == "kernel":
             return self._scatter_conv_shards(x, plan, send_weights)
+        if plan.mode == "batch":
+            return self._scatter_conv_batch(x, plan, send_weights)
         socks = self._plan_sockets(plan)
         t0 = time.perf_counter()
         for pos, (sock, (lo, hi, pt, pb)) in enumerate(
@@ -1041,12 +1055,37 @@ class HeteroCluster:
             plan=plan, parts=socks,
         )
 
+    def _scatter_conv_batch(
+        self, x: np.ndarray, plan: plans.LayerPlan, send_weights: bool
+    ) -> scheduler.Pending:
+        """Batch axis: each member gets its N-axis row slice plus the
+        full replicated kernel (a ~24-byte ``WeightRef`` token after the
+        first ship, weight cache on).  The plan's proportions are re-cut
+        to THIS slab's batch size (``plans.batch_ranges``) so pipelined
+        microbatches — whose N differs from the planning shape — keep
+        the Eq. 1 shares; the actual ranges ride the ``Pending`` for the
+        gather and the lost-slave recovery path."""
+        socks = self._plan_sockets(plan)
+        rows = plans.batch_ranges(plan.counts, x.shape[0])
+        t0 = time.perf_counter()
+        for pos, (sock, (r0, r1)) in enumerate(zip(socks, rows[1:]), start=1):
+            ws = self._wire_weights(sock, plan, pos, plan.w, send_weights)
+            self._write_op(sock, ("conv", (x[r0:r1], ws)))
+        now = time.perf_counter()
+        self.timing.comm_s += now - t0
+        self._seq_issued += 1
+        return scheduler.Pending(
+            "conv", self._seq_issued, x, plan.w, None, now,
+            mode="batch", rows=rows, plan=plan, parts=socks,
+        )
+
     def gather_conv(self, p: scheduler.Pending) -> np.ndarray:
         """Compute the master's shard, collect the slaves' feature maps
         (FIFO: gathers must be issued in scatter order), concatenate —
-        along channels (kernel mode) or height (spatial strips).  A
-        participant lost since the scatter contributes via the master's
-        recovery compute instead of the wire."""
+        along channels (kernel mode), height (spatial strips), or the
+        N axis (batch rows).  A participant lost since the scatter
+        contributes via the master's recovery compute instead of the
+        wire."""
         self._check_order(p, "conv")
         t0 = time.perf_counter()
         if p.mode == "spatial":
@@ -1055,6 +1094,14 @@ class HeteroCluster:
                 lambda: strip_conv(self._master_backend, p.x[:, lo:hi], p.my_w, pt, pb)
             )
             axis = 1
+        elif p.mode == "batch":
+            r0, r1 = p.rows[0]
+            my_out = self._master_compute(
+                lambda: protocol.conv_shard(
+                    self._master_backend, p.x[r0:r1], p.my_w
+                )
+            )
+            axis = 0
         else:
             my_out = self._master_compute(
                 lambda: protocol.conv_shard(self._master_backend, p.x, p.my_w)
@@ -1096,6 +1143,8 @@ class HeteroCluster:
     ) -> scheduler.Pending:
         if plan.mode == "kernel":
             return self._scatter_bwd_shards(x, plan, g, send_weights)
+        if plan.mode == "batch":
+            return self._scatter_bwd_batch(x, plan, g, send_weights)
         socks = self._plan_sockets(plan)
         t0 = time.perf_counter()
         for pos, (sock, (r0, r1), (lo, hi, pt, pb)) in enumerate(
@@ -1113,6 +1162,29 @@ class HeteroCluster:
             "bwd", self._seq_issued, x, plan.w, g[:, r0:r1], now,
             mode="spatial", rows=plan.rows, halos=plan.halos,
             plan=plan, parts=socks, g_all=g,
+        )
+
+    def _scatter_bwd_batch(
+        self, x: np.ndarray, plan: plans.LayerPlan, g: np.ndarray,
+        send_weights: bool,
+    ) -> scheduler.Pending:
+        """Batch-axis backward: each member VJPs its own rows (x slice,
+        full kernel, matching g slice) and returns (dX rows, FULL dW) —
+        the master sums the per-member dW into an exact all-reduce at
+        the gather.  Rows are re-cut to this slab like the forward."""
+        socks = self._plan_sockets(plan)
+        rows = plans.batch_ranges(plan.counts, x.shape[0])
+        t0 = time.perf_counter()
+        for pos, (sock, (r0, r1)) in enumerate(zip(socks, rows[1:]), start=1):
+            ws = self._wire_weights(sock, plan, pos, plan.w, send_weights)
+            self._write_op(sock, ("bwd", (x[r0:r1], ws, g[r0:r1])))
+        now = time.perf_counter()
+        self.timing.comm_s += now - t0
+        self._seq_issued += 1
+        r0, r1 = rows[0]
+        return scheduler.Pending(
+            "bwd", self._seq_issued, x, plan.w, g[r0:r1], now,
+            mode="batch", rows=rows, plan=plan, parts=socks, g_all=g,
         )
 
     def _scatter_bwd_shards(
@@ -1139,10 +1211,28 @@ class HeteroCluster:
         """Master's shard VJP + gather.  Kernel mode: sum partial dX,
         concat dW shards.  Spatial mode: overlap-ADD each device's halo'd
         dX rows into the full dX (the seam sums) and SUM the full-kernel
-        dW contributions.  Lost participants' contributions come from
-        the master's recovery compute."""
+        dW contributions.  Batch mode: concat dX rows along the N axis
+        and SUM the per-member full dW — dW is a sum over disjoint batch
+        rows, so the reduction is exact.  Lost participants'
+        contributions come from the master's recovery compute."""
         self._check_order(p, "bwd")
         t0 = time.perf_counter()
+        if p.mode == "batch":
+            r0, r1 = p.rows[0]
+            dx0, dw = self._master_compute(
+                lambda: protocol.bwd_shard(
+                    self._master_backend, p.x[r0:r1], p.my_w, p.my_g
+                )
+            )
+            dxs = [dx0]
+            t_wait = time.perf_counter()
+            for idx, sock in enumerate(p.parts):
+                dx_i, dw_i = self._read_or_recover(sock, p, idx)
+                dxs.append(dx_i)
+                dw = dw + dw_i
+            t1 = time.perf_counter()
+            self._account_gather(p, t0, t_wait, t1)
+            return np.concatenate(dxs, axis=0), dw
         if p.mode == "spatial":
             lo, hi, pt, pb = p.halos[0]
             dxh, dw = self._master_compute(
@@ -1202,13 +1292,21 @@ class HeteroCluster:
     def _recover_shard(self, p: scheduler.Pending, dev_pos: int):
         """Compute plan position ``dev_pos``'s shard of the pending op
         on the master's own backend — the recovery path for a member
-        that died between scatter and gather."""
+        that died between scatter and gather.  Batch mode recomputes the
+        dead member's ROWS from the ranges the op actually shipped
+        (``p.rows``, re-cut per slab), not the plan's full-batch
+        ranges."""
         plan = p.plan
         t0 = time.perf_counter()
         if p.op == "conv":
             if plan.mode == "kernel":
                 out = protocol.conv_shard(
                     self._master_backend, p.x, plan.shards[dev_pos]
+                )
+            elif plan.mode == "batch":
+                r0, r1 = p.rows[dev_pos]
+                out = protocol.conv_shard(
+                    self._master_backend, p.x[r0:r1], plan.w
                 )
             else:
                 lo, hi, pt, pb = plan.halos[dev_pos]
@@ -1221,6 +1319,12 @@ class HeteroCluster:
                 out = protocol.bwd_shard(
                     self._master_backend, p.x, plan.shards[dev_pos],
                     gs[dev_pos],
+                )
+            elif plan.mode == "batch":
+                r0, r1 = p.rows[dev_pos]
+                out = protocol.bwd_shard(
+                    self._master_backend, p.x[r0:r1], plan.w,
+                    p.g_all[r0:r1],
                 )
             else:
                 r0, r1 = plan.rows[dev_pos]

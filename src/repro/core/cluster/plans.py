@@ -2,9 +2,11 @@
 
 The paper splits only the output-channel ("kernel") axis; the hybrid
 runtime can also split the HEIGHT axis ("spatial": row strips + a
-``kh//2`` halo) or pick the cheaper axis per layer ("auto") from the
-comm-extended Eq. 1 prediction.  This module holds the pure planning
-math — strip/halo geometry, per-unit wire bytes, the wall-clock
+``kh//2`` halo), the BATCH axis ("batch": replicate the kernel, split
+the N axis, sum the per-slave dW — an exact all-reduce), or pick the
+cheapest axis per layer ("auto") from the comm-extended Eq. 1
+prediction.  This module holds the pure planning math — strip/halo
+geometry, batch-row ranges, per-unit wire bytes, the wall-clock
 predictor and the axis resolver — over a duck-typed ``cluster`` that
 supplies device state (``_effective_times``, ``shares_for``,
 ``bandwidths``, ``probe_flops``, ``_wire_itemsize``, ``partition``,
@@ -17,7 +19,25 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-PARTITION_MODES = ("kernel", "spatial", "auto")
+PARTITION_MODES = ("kernel", "spatial", "batch", "auto")
+
+
+class BoundedDict(dict):
+    """A dict with a FIFO size bound: inserting past ``maxsize`` evicts
+    the oldest key.  Backs ``partition_choices`` and the auto-mode memo
+    so serve-lane dynamic batching (a new key per slab batch size)
+    cannot grow the planner's caches without bound."""
+
+    def __init__(self, maxsize: int = 128):
+        super().__init__()
+        self.maxsize = int(maxsize)
+
+    def __setitem__(self, key, value):
+        if key in self:
+            del self[key]  # re-insert at the back so live keys survive
+        super().__setitem__(key, value)
+        while len(self) > self.maxsize:
+            del self[next(iter(self))]
 
 
 def strip_plan(
@@ -45,6 +65,33 @@ def strip_plan(
     return rows, halos
 
 
+def batch_ranges(counts: Sequence[int], b: int) -> List[Tuple[int, int]]:
+    """Per-device ``[r0, r1)`` batch-row ranges for a slab of ``b``
+    rows, proportional to ``counts`` (largest-remainder rounding,
+    deterministic).  A batch plan is built from the FULL batch shape
+    but each microbatch scatter moves a slice whose N differs — the
+    plan's proportions are re-cut to the actual slab here, so the
+    device shares hold at every pipeline depth.  When ``b`` equals
+    ``sum(counts)`` the ranges reproduce ``counts`` exactly.  Devices
+    with a zero share get empty ranges (and ship zero rows)."""
+    c = np.asarray(counts, dtype=np.float64)
+    total = float(c.sum())
+    assert total > 0, "batch plan must cover at least one row"
+    ideal = c * (b / total)
+    base = np.floor(ideal).astype(np.int64)
+    rem = int(b - base.sum())
+    order = np.argsort(-(ideal - np.floor(ideal)), kind="stable")
+    for j in range(rem):
+        base[order[j % len(base)]] += 1
+    out: List[Tuple[int, int]] = []
+    r0 = 0
+    for cc in base:
+        out.append((r0, r0 + int(cc)))
+        r0 += int(cc)
+    assert r0 == b, "batch ranges must tile the slab"
+    return out
+
+
 @dataclasses.dataclass
 class LayerPlan:
     """How ONE conv layer is split over the devices — fixed for every
@@ -58,11 +105,11 @@ class LayerPlan:
     member ``member_ids[k-1]``, never to "whatever the k-th live slave
     is now", and the master absorbs shards of members that died."""
 
-    mode: str                     # "kernel" | "spatial" (auto is resolved)
-    counts: np.ndarray            # kernels (kernel) or rows (spatial) per device
+    mode: str                     # "kernel" | "spatial" | "batch" (auto is resolved)
+    counts: np.ndarray            # kernels / H rows / batch rows per device
     shards: Optional[List[np.ndarray]] = None  # kernel mode: w split per device
-    w: Optional[np.ndarray] = None             # spatial mode: the full kernel
-    rows: Optional[List[Tuple[int, int]]] = None
+    w: Optional[np.ndarray] = None             # spatial+batch: the full kernel
+    rows: Optional[List[Tuple[int, int]]] = None  # H strips or batch ranges
     halos: Optional[List[Tuple[int, int, int, int]]] = None
     member_ids: Optional[Tuple[int, ...]] = None  # slave ids behind counts[1:]
     # versioned weight-broadcast cache: the stable key this layer's
@@ -87,12 +134,14 @@ def unit_bytes(
 ) -> float:
     """Share-proportional wire bytes per allocation unit — one KERNEL
     (w column out + feature-map column back, plus the gradient slice
-    and dW column for bwd) or one ROW (x row out + y row back, plus
-    the g row and dX row for bwd).  ``op="train"`` is one forward
-    plus one backward, what a train-chain plan governs.  Fixed
-    per-slave costs (the x broadcast, the halo, the full kernel, the
-    kernel-mode backward's full-dX return) do not move the optimal
-    split and are left to the mode predictor.
+    and dW column for bwd), one H ROW (x row out + y row back, plus
+    the g row and dX row for bwd), or one BATCH ROW (one sample's x
+    out + y back; bwd adds the sample's g out and dX back).
+    ``op="train"`` is one forward plus one backward, what a
+    train-chain plan governs.  Fixed per-slave costs (the x broadcast,
+    the halo, the full kernel, the kernel-mode backward's full-dX
+    return, the batch-mode backward's full-dW return) do not move the
+    optimal split and are left to the mode predictor.
 
     Byte prediction sees the codec and the weight cache: ``itemsize``
     prices activation elements, ``w_itemsize``/``g_itemsize`` (default:
@@ -111,6 +160,13 @@ def unit_bytes(
         # bwd: w col + g col out, dW col back; the full-dX return is
         # a FIXED per-slave cost, excluded by this contract
         bwd = w_ship + y_col * g_item + w_col * g_item
+    elif mode == "batch":
+        x_smp = h * wd * cin
+        y_smp = h * wd * cout
+        conv = (x_smp + y_smp) * itemsize  # x sample out + y sample back
+        # x + g samples out, dX sample back; the full-dW return is a
+        # FIXED per-slave cost, excluded by this contract
+        bwd = x_smp * itemsize + (y_smp + x_smp) * g_item
     else:
         x_row = b * wd * cin
         y_row = b * wd * cout
@@ -136,10 +192,15 @@ def predict_partition_seconds(
     the plan will govern: ``"conv"`` (forward only), ``"bwd"``, or
     ``"train"`` (one forward + one backward) — the backward's wire
     differs by axis (kernel mode re-broadcasts x AND returns a
-    full-size dX per slave; spatial ships strips both ways), so a
+    full-size dX per slave; spatial ships strips both ways; batch
+    ships row slices both ways but returns a FULL dW per slave, the
+    all-reduce cost that sinks data parallelism on thin links), so a
     train-step plan must weigh both directions.  The prediction sees
-    the codec (per-class wire itemsizes) and the versioned weight
-    cache (``weights_cached=True`` zeroes the kernel-shipping terms)."""
+    the codec (per-class wire itemsizes — batch's dW return is priced
+    at the grads itemsize, so ``grads=topk`` + error feedback
+    discounts the all-reduce per slave) and the versioned weight
+    cache (``weights_cached=True`` zeroes the kernel-shipping terms,
+    which makes batch's replica broadcast nearly free after step 1)."""
     b, h, wd, cin = x_shape
     kh, kw, _, cout = w_shape
     item = cluster._wire_itemsize
@@ -156,8 +217,8 @@ def predict_partition_seconds(
     flops_mult = {"conv": 1.0, "bwd": 2.0, "train": 3.0}[op]
     scale = (layer_flops / cluster.probe_flops) if cluster.probe_flops else None
     out: Dict[str, float] = {}
-    for mode in ("kernel", "spatial"):
-        n_units = cout if mode == "kernel" else h
+    for mode in ("kernel", "spatial", "batch"):
+        n_units = {"kernel": cout, "spatial": h, "batch": b}[mode]
         counts = cluster.shares_for(
             n_units,
             unit_bytes=unit_bytes(
@@ -181,6 +242,18 @@ def predict_partition_seconds(
                 )
                 comp_frac = frac
                 active = i > 0
+            elif mode == "batch":
+                # x rows + full kernel out; y rows back
+                fwd_wire = frac * (x_b + y_b) + w_ship
+                # x + g rows out; dX rows + the FULL dW back per slave
+                # (the exact all-reduce — its cost is constant in the
+                # batch share, priced at the grads itemsize)
+                bwd_wire = (
+                    frac * (x_b + x_e * item_g + y_e * item_g)
+                    + w_ship + w_e * item_g
+                )
+                comp_frac = frac
+                active = i > 0 and c > 0
             else:
                 hfrac = (c + halo) / h
                 fwd_wire = hfrac * x_b + w_ship + frac * y_b
@@ -211,7 +284,17 @@ def resolve_mode(
     weights_cached: bool = False,
 ) -> str:
     """The partition axis for one layer; ``"auto"`` resolves against
-    the predicted wall-clock of ``op`` and records its pick."""
+    the predicted wall-clock of ``op`` and records its pick in
+    ``cluster.partition_choices``.
+
+    The decision key includes the batch dimension (it rides in
+    ``x_shape``: batch mode's unit count and every mode's bytes scale
+    with N), ``op`` and the weight-cache state — serve-lane dynamic
+    batching re-resolves per slab size deliberately, but through the
+    cluster's bounded ``_mode_cache`` memo so repeated slab sizes skip
+    the predictor and the caches stay bounded.  Ties break toward the
+    paper's order (kernel, then spatial, then batch): a challenger
+    axis must be strictly faster to displace the incumbent."""
     mode = override or cluster.partition
     if mode not in PARTITION_MODES:
         raise ValueError(
@@ -219,15 +302,28 @@ def resolve_mode(
         )
     if mode != "auto":
         return mode
+    shape_key = (tuple(x_shape), tuple(w_shape))
+    memo = getattr(cluster, "_mode_cache", None)
+    memo_key = shape_key + (op, bool(weights_cached))
+    if memo is not None and memo_key in memo:
+        choice = memo[memo_key]
+        cluster.partition_choices[shape_key] = choice
+        return choice
     if all(bw is None for bw in cluster.bandwidths):
-        # free links: the paper's kernel axis, no halo overhead
+        # free links: the paper's kernel axis, no halo / all-reduce
+        # overhead to pay back
         choice = "kernel"
     else:
         pred = predict_partition_seconds(
             cluster, x_shape, w_shape, op, weights_cached=weights_cached
         )
-        choice = "spatial" if pred["spatial"] < pred["kernel"] else "kernel"
-    cluster.partition_choices[(tuple(x_shape), tuple(w_shape))] = choice
+        choice = "kernel"
+        for challenger in ("spatial", "batch"):
+            if pred[challenger] < pred[choice]:
+                choice = challenger
+    if memo is not None:
+        memo[memo_key] = choice
+    cluster.partition_choices[shape_key] = choice
     return choice
 
 
@@ -278,6 +374,15 @@ def plan_conv(
             "kernel", counts, shards=split_kernels(w, counts),
             member_ids=members, wkey=wkey, wversion=wversion,
         )
+    if mode == "batch":
+        # replicate the kernel, split the N axis; each microbatch
+        # scatter re-cuts ``counts`` to its slab via ``batch_ranges``
+        counts = cluster.shares_for(b, unit_bytes=ub, layer_flops=layer_flops)
+        return LayerPlan(
+            "batch", counts, w=np.asarray(w, np.float32),
+            rows=batch_ranges(counts, int(b)),
+            member_ids=members, wkey=wkey, wversion=wversion,
+        )
     counts = cluster.shares_for(h, unit_bytes=ub, layer_flops=layer_flops)
     rows, halos = strip_plan(h, kh, counts)
     return LayerPlan(
@@ -289,9 +394,10 @@ def plan_conv(
 def check_plan(plan: LayerPlan, n_units: int, n_devices: int) -> None:
     """Invariants every live plan must satisfy — what the re-partition
     conformance tests assert after an evict/admit: unit counts cover the
-    layer exactly once over exactly the current membership, and spatial
-    strips tile [0, n_units) with in-bounds halo windows.  Raises
-    AssertionError with a named reason."""
+    layer exactly once over exactly the current membership, spatial
+    strips tile [0, n_units) with in-bounds halo windows, and batch
+    ranges tile the batch.  Raises AssertionError with a named
+    reason."""
     assert len(plan.counts) == n_devices, (
         f"plan covers {len(plan.counts)} devices, membership has {n_devices}"
     )
@@ -303,6 +409,17 @@ def check_plan(plan: LayerPlan, n_units: int, n_devices: int) -> None:
     if plan.mode == "kernel":
         assert plan.shards is not None and len(plan.shards) == n_devices
         assert sum(s.shape[-1] for s in plan.shards) == n_units
+        return
+    if plan.mode == "batch":
+        assert plan.w is not None, "batch plan carries the full kernel"
+        assert plan.rows is not None and len(plan.rows) == n_devices
+        r_prev = 0
+        for r0, r1 in plan.rows:
+            assert r1 >= r0, "batch range non-negative"
+            if r1 > r0:
+                assert r0 == r_prev, "batch ranges tile in order"
+                r_prev = r1
+        assert r_prev == n_units, "batch ranges cover every row"
         return
     assert plan.rows is not None and plan.halos is not None
     r_prev = 0

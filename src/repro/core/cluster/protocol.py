@@ -73,17 +73,20 @@ class SlaveError:
 
 
 def conv_shard(backend, x: np.ndarray, w: np.ndarray) -> np.ndarray:
-    """Backend conv with the 0-kernel fast path: comp-aware shares (or a
-    very slow device) may legally allocate 0 kernels, which not every
-    backend kernel tolerates (pallas grid math divides by cout)."""
-    if w.shape[-1] == 0:
-        return np.zeros(x.shape[:-1] + (0,), np.float32)
+    """Backend conv with the 0-kernel and 0-batch fast paths: comp-aware
+    shares (or a very slow device) may legally allocate 0 kernels — or,
+    on the batch axis, 0 rows — which not every backend kernel tolerates
+    (pallas grid math divides by cout; sim flops scale with N)."""
+    if w.shape[-1] == 0 or x.shape[0] == 0:
+        return np.zeros(x.shape[:-1] + (w.shape[-1],), np.float32)
     return backend.conv(x, w)
 
 
 def bwd_shard(backend, x, w, g) -> Tuple[np.ndarray, np.ndarray]:
-    """Backend conv_vjp with the 0-kernel fast path (see conv_shard)."""
-    if w.shape[-1] == 0:
+    """Backend conv_vjp with the 0-kernel/0-batch fast paths (see
+    conv_shard).  An empty batch slice contributes a zero dW, which the
+    master's batch-axis all-reduce sums away."""
+    if w.shape[-1] == 0 or x.shape[0] == 0:
         return np.zeros(x.shape, np.float32), np.zeros(w.shape, np.float32)
     return backend.conv_vjp(x, w, g)
 

@@ -79,13 +79,20 @@ class Pending:
     op: str                       # "conv" | "bwd"
     seq: int                      # FIFO position; gathers must match
     x: np.ndarray                 # kernel mode: the broadcast input;
-    #                               spatial mode: the FULL input (the
-    #                               master slices its own strip at gather)
-    my_w: np.ndarray              # master's kernel shard (spatial: full w)
-    my_g: Optional[np.ndarray]    # bwd only: master's grad slice/strip
+    #                               spatial/batch: the FULL input (the
+    #                               master slices its own strip/rows at
+    #                               gather)
+    my_w: np.ndarray              # master's kernel shard (spatial/batch: full w)
+    my_g: Optional[np.ndarray]    # bwd only: master's grad slice/strip/rows
     t_issued: float
     mode: str = "kernel"          # partition axis this op was split on
-    rows: Optional[List[Tuple[int, int]]] = None      # spatial: [r0, r1) per device
+    rows: Optional[List[Tuple[int, int]]] = None
+    #                               spatial: H strips [r0, r1) per device;
+    #                               batch: N-axis ranges per device,
+    #                               re-cut to THIS slab's batch size (a
+    #                               microbatch's N differs from the
+    #                               planning shape) — recovery recomputes
+    #                               a dead member's rows from these
     halos: Optional[List[Tuple[int, int, int, int]]] = None
     #                               spatial: (lo, hi, pad_top, pad_bot) per device
     plan: Optional[LayerPlan] = None  # the split this op rode (recovery)

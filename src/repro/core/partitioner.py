@@ -9,6 +9,11 @@ i.e. shares proportional to measured throughput.  ``allocate_kernels``
 turns the fractional shares into an integer number of kernels per device
 with the largest-remainder method, preserving the total and guaranteeing
 every device at least ``min_per_device`` kernels (0 allowed).
+
+The allocator is axis-agnostic: the same Eq. 1 shares split output
+kernels (partition="kernel"), image rows (partition="spatial"), or
+batch samples (partition="batch") — only the unit and its per-unit
+wire bytes change (cluster/plans.py:unit_bytes).
 """
 from __future__ import annotations
 
@@ -144,8 +149,9 @@ def comm_aware_allocate(
     *,
     min_per_device: int = 0,
 ) -> np.ndarray:
-    """Integer unit counts (kernels or rows) from the comm-extended
-    Eq. 1: shares inversely proportional to compute + wire time."""
+    """Integer unit counts (kernels, image rows, or batch samples) from
+    the comm-extended Eq. 1: shares inversely proportional to compute +
+    wire time."""
     return allocate_kernels(
         num_units,
         link_aware_times(times, wire_bytes, bandwidths_mbps),

@@ -24,8 +24,10 @@ master's measured non-conv duty automatically:
 
 ``--partition`` picks the conv split axis — ``kernel`` (the paper),
 ``spatial`` (height strips + halo exchange: each slave receives only its
-rows instead of the full activation), or ``auto`` (per layer, the axis
-with the smaller predicted wall-clock over the emulated links) — and
+rows instead of the full activation), ``batch`` (data parallelism:
+replicate the kernel, split the batch's N axis, sum per-slave dW — wins
+on fat links), or ``auto`` (per layer, the axis with the smallest
+predicted wall-clock over the emulated links) — and
 ``--wire-dtype fp16|bf16`` turns on the compact wire codec.  Both need
 ``--bandwidth-mbps`` to matter (with infinitely fast links the wire is
 free and auto sticks to the paper's kernel axis):
@@ -368,10 +370,12 @@ def main():
                          "conv_train_step schedule; implies --pipeline and "
                          "allows any master backend (direct driver)")
     ap.add_argument("--partition", default="kernel",
-                    choices=["kernel", "spatial", "auto"],
+                    choices=["kernel", "spatial", "batch", "auto"],
                     help="conv split axis: output channels (kernel, the "
                          "paper), height strips + halo exchange (spatial), "
-                         "or per-layer predicted-wall-clock pick (auto)")
+                         "batch rows + replicated kernel + dW all-reduce "
+                         "(batch), or per-layer predicted-wall-clock pick "
+                         "(auto)")
     ap.add_argument("--wire-dtype", default=None,
                     choices=["fp32", "fp16", "bf16"],
                     help="compact wire codec at the socket boundary; "

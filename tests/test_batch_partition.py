@@ -1,0 +1,442 @@
+"""The third partition axis: batch data parallelism with dW all-reduce.
+
+``partition="batch"`` replicates the kernel, splits the batch's N axis
+by the Eq. 1 shares, and the master SUMS the per-slave dW — an exact
+all-reduce, since each dW is the gradient over a disjoint set of batch
+rows.  These tests pin the axis end to end: forward/backward numerics
+against the single-device VJP (even and odd splits, zero-row devices,
+all three transports), the hybrid ``auto`` chooser's per-regime picks
+(batch on fat links and large batches; kernel/spatial keep thin links
+and parameter-heavy layers), survivor recovery after a mid-step
+SIGKILL on the batch axis, admit/evict re-planning batch rows, and the
+bounded decision caches that keep serve-lane dynamic batching (a new
+shape key per slab size) from flapping or growing without bound.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.backends import get_backend
+from repro.core.cluster import plans
+from repro.core.master_slave import HeteroCluster
+
+
+def _data(batch, seed=7):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(batch, 8, 8, 3)).astype(np.float32)
+    w1 = rng.normal(size=(3, 3, 3, 6)).astype(np.float32)
+    w2 = rng.normal(size=(3, 3, 6, 9)).astype(np.float32)
+    g = rng.normal(size=(batch, 8, 8, 9)).astype(np.float32)
+    return x, w1, w2, g
+
+
+def _single_device_grads(x, w1, w2, g):
+    import jax
+    import jax.numpy as jnp
+
+    def f(x_, w1_, w2_):
+        y = jax.nn.relu(jax.lax.conv_general_dilated(
+            x_, w1_, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ))
+        y2 = jax.lax.conv_general_dilated(
+            y, w2_, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        return jnp.sum(y2 * g)
+
+    return tuple(
+        np.asarray(a)
+        for a in jax.grad(f, argnums=(0, 1, 2))(
+            jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2)
+        )
+    )
+
+
+def _train_chain(c, x, w1, w2, g):
+    def between(y):
+        mask = (y > 0).astype(np.float32)
+        return np.maximum(y, 0.0), lambda gz: gz * mask
+
+    slices = c.microbatch_slices(x.shape[0])
+
+    def head(z, i):
+        return None, g[slices[i]]
+
+    return c.conv_train_chain(x, [w1, w2], [between, None], head)
+
+
+def _assert_grads(res, want, atol=1e-3):
+    dx_want, dw1_want, dw2_want = want
+    np.testing.assert_allclose(res.dx, dx_want, rtol=1e-4, atol=atol)
+    np.testing.assert_allclose(res.dw[0], dw1_want, rtol=1e-4, atol=atol)
+    np.testing.assert_allclose(res.dw[1], dw2_want, rtol=1e-4, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# plan geometry
+
+
+def test_batch_ranges_recut_even_odd_and_exact():
+    """batch_ranges re-cuts a plan's proportions to any slab size:
+    b == sum(counts) reproduces the counts, odd slabs tile exactly,
+    zero-share devices keep empty ranges."""
+    counts = [3, 3, 2]
+    assert plans.batch_ranges(counts, 8) == [(0, 3), (3, 6), (6, 8)]
+    for b in (1, 2, 5, 7, 16):
+        rng = plans.batch_ranges(counts, b)
+        assert rng[0][0] == 0 and rng[-1][1] == b
+        assert all(r0 <= r1 for r0, r1 in rng)
+        assert [r0 for (r0, _), (_, p1) in zip(rng[1:], rng)] == [
+            p1 for (_, p1) in rng[:-1]
+        ]
+    assert plans.batch_ranges([4, 0, 2], 3) == [(0, 2), (2, 2), (2, 3)]
+
+
+def test_check_plan_accepts_batch_plan():
+    c = HeteroCluster([1.0, 1.0, 1.0], partition="batch")
+    try:
+        c.probe_times = [1.0, 1.0, 1.0]
+        w = np.zeros((3, 3, 3, 6), np.float32)
+        plan = c.plan_conv((6, 8, 8, 3), w, "train")
+        assert plan.mode == "batch"
+        assert plan.w is not None and plan.shards is None
+        plans.check_plan(plan, n_units=6, n_devices=3)
+    finally:
+        c.shutdown()
+
+
+def test_unit_bytes_batch_counts_sample_traffic():
+    """One batch unit is one sample: x + y out/back forward; the bwd
+    adds the sample's g out and dX back.  The full-kernel ship and the
+    full-dW return are fixed per-slave costs, excluded here (they live
+    in the mode predictor)."""
+    x_shape, w_shape = (8, 4, 4, 3), (3, 3, 3, 5)
+    smp_x, smp_y = 4 * 4 * 3, 4 * 4 * 5
+    conv = plans.unit_bytes(x_shape, w_shape, "batch", "conv", 4.0)
+    assert conv == pytest.approx((smp_x + smp_y) * 4.0)
+    train = plans.unit_bytes(
+        x_shape, w_shape, "batch", "train", 4.0, g_itemsize=2.0
+    )
+    assert train == pytest.approx(
+        conv + smp_x * 4.0 + (smp_x + smp_y) * 2.0
+    )
+
+
+# ---------------------------------------------------------------------------
+# numerics: batch axis vs single-device reference
+
+
+@pytest.mark.parametrize("batch", [6, 5])  # even and odd splits over 3 devices
+def test_batch_forward_backward_match_reference(batch):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(batch, 8, 8, 3)).astype(np.float32)
+    w = rng.normal(size=(3, 3, 3, 8)).astype(np.float32)
+    g = rng.normal(size=(batch, 8, 8, 8)).astype(np.float32)
+    ref = get_backend("numpy")
+    c = HeteroCluster([1.0, 1.5, 2.0], partition="batch")
+    try:
+        c.probe_times = [1.0, 1.5, 2.0]
+        y = c.conv_forward(x, w)
+        np.testing.assert_allclose(y, ref.conv(x, w), rtol=1e-5, atol=1e-5)
+        dx, dw = c.conv_backward(x, w, g)
+        rdx, rdw = ref.conv_vjp(x, w, g)
+        np.testing.assert_allclose(dx, rdx, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(dw, rdw, rtol=1e-4, atol=1e-3)
+    finally:
+        c.shutdown()
+
+
+def test_batch_zero_row_device_is_exact():
+    """A device too slow to earn a single batch row legally ships zero
+    rows (its dW contribution is a zero array) and the result is still
+    exact — the batch-axis analogue of the 0-kernel share."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(4, 8, 8, 3)).astype(np.float32)
+    w = rng.normal(size=(3, 3, 3, 8)).astype(np.float32)
+    g = rng.normal(size=(4, 8, 8, 8)).astype(np.float32)
+    ref = get_backend("numpy")
+    c = HeteroCluster([1.0, 1.0, 1000.0], partition="batch")
+    try:
+        c.probe_times = [1.0, 1.0, 1000.0]
+        plan = c.plan_conv(x.shape, w, "train")
+        assert int(plan.counts[-1]) == 0  # the slow device got no rows
+        np.testing.assert_allclose(
+            c.conv_forward(x, w), ref.conv(x, w), rtol=1e-5, atol=1e-5
+        )
+        dx, dw = c.conv_backward(x, w, g)
+        rdx, rdw = ref.conv_vjp(x, w, g)
+        np.testing.assert_allclose(dx, rdx, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(dw, rdw, rtol=1e-4, atol=1e-3)
+    finally:
+        c.shutdown()
+
+
+def test_batch_train_chain_matches_vjp_inproc():
+    """The pipelined fwd+bwd train chain on the batch axis: microbatch
+    slices are re-cut per slab, dW sums across members AND microbatches,
+    and the result matches the single-device VJP at fp32 tolerance."""
+    x, w1, w2, g = _data(batch=7)  # 7 rows: odd per-microbatch re-cuts
+    want = _single_device_grads(x, w1, w2, g)
+    c = HeteroCluster(
+        [1.0, 1.5, 2.0], partition="batch", pipeline=True, microbatches=3
+    )
+    try:
+        c.probe_times = [1.0, 1.5, 2.0]
+        _assert_grads(_train_chain(c, x, w1, w2, g), want)
+    finally:
+        c.shutdown()
+
+
+@pytest.mark.parametrize("transport", ["tcp", "shm"])
+def test_batch_train_chain_matches_vjp_subprocess(transport):
+    """Batch-axis train-step gradients over real OS-subprocess slaves
+    (framed TCP sockets / zero-copy shm rings) match the single-device
+    VJP — the wire carries row slices and full-dW returns correctly."""
+    x, w1, w2, g = _data(batch=6)
+    want = _single_device_grads(x, w1, w2, g)
+    c = HeteroCluster(
+        [1.0, 1.0, 1.0], transport=transport, partition="batch",
+        pipeline=True, microbatches=2,
+    )
+    try:
+        c.probe_times = [1.0, 1.0, 1.0]
+        _assert_grads(_train_chain(c, x, w1, w2, g), want)
+    finally:
+        c.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# hybrid auto: per-regime picks
+
+
+def _auto_cluster(bandwidth_mbps):
+    c = HeteroCluster(
+        [1.0, 1.0, 1.0], partition="auto", bandwidth_mbps=bandwidth_mbps
+    )
+    c.probe_times = [1e-4, 1e-4, 1e-4]  # fast devices: the wire decides
+    c.probe_flops = 2.0 * 4 * 8 * 8 * 9 * 3 * 4
+    return c
+
+
+def test_auto_picks_batch_on_fat_link_for_train():
+    """Activation-heavy layer, big batch, >= 1 Gbps: splitting rows
+    moves ~1/n of the activation traffic per member and the full-dW
+    all-reduce is cheap relative to the link — batch must beat both
+    kernel (full-x broadcast per slave) and spatial (halo overhead),
+    for the op the plan governs (train: fwd + bwd wire)."""
+    x_shape, w_shape = (32, 32, 32, 16), (3, 3, 16, 16)
+    c = _auto_cluster(1000.0)
+    try:
+        pred = c.predict_partition_seconds(x_shape, w_shape, "train")
+        assert pred["batch"] < pred["kernel"]
+        assert pred["batch"] < pred["spatial"]
+        assert c._resolve_mode(x_shape, w_shape, None, "train") == "batch"
+        assert c.partition_choices[(x_shape, w_shape)] == "batch"
+    finally:
+        c.shutdown()
+
+
+def test_auto_keeps_kernel_or_spatial_on_thin_link():
+    """The 25 Mbps acceptance regime: on a parameter-heavy layer the
+    per-slave full-dW return sinks batch (it is constant in the batch
+    share), so auto must keep the paper's kernel axis or spatial —
+    data parallelism does NOT take over thin links."""
+    x_shape, w_shape = (4, 8, 8, 4), (5, 5, 4, 256)
+    c = _auto_cluster(25.0)
+    try:
+        pred = c.predict_partition_seconds(x_shape, w_shape, "train")
+        assert pred["kernel"] < pred["batch"]
+        mode = c._resolve_mode(x_shape, w_shape, None, "train")
+        assert mode in ("kernel", "spatial")
+    finally:
+        c.shutdown()
+
+
+def test_auto_small_batch_granularity_prefers_intra_image_axes():
+    """Batch's allocation unit is one SAMPLE: at a tiny batch the
+    quantum is coarse (b=2 over 3 devices puts half the batch on one
+    member) while spatial splits the same activation into H=32 row
+    units — the chooser must see the difference and keep an
+    intra-image axis.  Devices slow enough that no single member can
+    absorb the whole slab, so the 2-row quantum really hurts."""
+    x_shape, w_shape = (2, 32, 32, 16), (3, 3, 16, 16)
+    c = _auto_cluster(25.0)
+    c.probe_times = [3e-3, 3e-3, 3e-3]
+    try:
+        pred = c.predict_partition_seconds(x_shape, w_shape, "conv")
+        assert pred["batch"] > min(pred["kernel"], pred["spatial"])
+        mode = c._resolve_mode(x_shape, w_shape, None, "conv")
+        assert mode in ("kernel", "spatial")
+    finally:
+        c.shutdown()
+
+
+def test_batch_beats_kernel_wall_clock_on_fat_emulated_link():
+    """End-to-end acceptance: on an emulated 1 Gbps link at an
+    activation-heavy shape, forcing batch beats forcing kernel in real
+    wall-clock (deterministic sim compute + byte-accounted bandwidth
+    emulation), and auto agrees with the measurement."""
+    rng = np.random.default_rng(8)
+    x = rng.normal(size=(16, 32, 32, 16)).astype(np.float32)
+    w = rng.normal(size=(3, 3, 16, 16)).astype(np.float32)
+    probe_flops = 2.0 * 16 * 32 * 32 * 9 * 16 * 16
+    walls = {}
+    for mode in ("kernel", "batch", "auto"):
+        c = HeteroCluster(
+            [1.0, 1.0, 1.0], ["sim:1e12"] * 3, partition=mode,
+            bandwidth_mbps=1000.0,
+        )
+        try:
+            c.probe_times = [probe_flops / 1e12] * 3
+            c.probe_flops = probe_flops
+            c.conv_forward(x, w)  # warm (plans, caches)
+            t0 = time.perf_counter()
+            c.conv_forward(x, w)
+            walls[mode] = time.perf_counter() - t0
+            if mode == "auto":
+                assert set(c.partition_choices.values()) == {"batch"}
+        finally:
+            c.shutdown()
+    assert walls["batch"] < walls["kernel"], walls
+
+
+# ---------------------------------------------------------------------------
+# decision caches: bounded, memoized, invalidated on membership change
+
+
+def test_mode_cache_memoizes_repeated_slab_sizes(monkeypatch):
+    """Serve-lane dynamic batching re-resolves auto per slab batch
+    size; repeated sizes must hit the memo instead of re-running the
+    predictor every slab."""
+    c = _auto_cluster(50.0)
+    calls = {"n": 0}
+    real = plans.predict_partition_seconds
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(plans, "predict_partition_seconds", counting)
+    try:
+        w_shape = (3, 3, 16, 16)
+        for slab in (1, 3, 4, 3, 1, 4, 3, 1):  # 3 distinct sizes
+            c._resolve_mode((slab, 16, 16, 16), w_shape, None, "conv")
+        assert calls["n"] == 3
+        # picks recorded per (x_shape, w_shape), batch dim included
+        assert len(c.partition_choices) == 3
+    finally:
+        c.shutdown()
+
+
+def test_partition_caches_are_bounded_under_mixed_slabs():
+    """A serve lane cycling through many distinct slab sizes must not
+    grow the planner's caches without bound."""
+    c = _auto_cluster(50.0)
+    try:
+        w_shape = (3, 3, 8, 8)
+        for slab in range(1, 400):
+            c._resolve_mode((slab, 16, 16, 8), w_shape, None, "conv")
+        bound = c.partition_choices.maxsize
+        assert len(c.partition_choices) <= bound
+        assert len(c._mode_cache) <= c._mode_cache.maxsize
+        # the most recent slab's pick is still present (FIFO evicts old)
+        assert ((399, 16, 16, 8), w_shape) in c.partition_choices
+    finally:
+        c.shutdown()
+
+
+def test_mode_cache_invalidated_on_membership_change():
+    """admit()/evict() change the Eq. 1 inputs, so memoized auto picks
+    must be dropped with partition_choices."""
+    c = _auto_cluster(50.0)
+    try:
+        c._resolve_mode((8, 16, 16, 8), (3, 3, 8, 8), None, "conv")
+        assert len(c._mode_cache) == 1
+        dev = c.admit(slowdown=1.0, backend="numpy", probe_time=1e-4)
+        assert len(c._mode_cache) == 0 and len(c.partition_choices) == 0
+        c._resolve_mode((8, 16, 16, 8), (3, 3, 8, 8), None, "conv")
+        c.evict(dev)
+        assert len(c._mode_cache) == 0 and len(c.partition_choices) == 0
+    finally:
+        c.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# elasticity + chaos on the batch axis
+
+
+def test_admit_evict_replan_moves_batch_rows():
+    """Membership changes re-run the comm-aware Eq. 1 over the batch
+    axis: an admitted member takes rows (zero halo logic to rebuild),
+    an evicted member's rows fold back, and numerics stay exact
+    throughout."""
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(9, 8, 8, 3)).astype(np.float32)
+    w = rng.normal(size=(3, 3, 3, 8)).astype(np.float32)
+    ref = get_backend("numpy").conv(x, w)
+    c = HeteroCluster([1.0, 1.0], partition="batch")
+    try:
+        c.probe_times = [1.0, 1.0]
+        plan0 = c.plan_conv(x.shape, w, "conv")
+        assert len(plan0.counts) == 2
+        np.testing.assert_allclose(c.conv_forward(x, w), ref, rtol=1e-5, atol=1e-5)
+
+        dev = c.admit(slowdown=1.0, backend="numpy", probe_time=1.0)
+        plan1 = c.plan_conv(x.shape, w, "conv")
+        plans.check_plan(plan1, n_units=9, n_devices=3)
+        assert int(plan1.counts[-1]) > 0  # the newcomer took batch rows
+        np.testing.assert_allclose(c.conv_forward(x, w), ref, rtol=1e-5, atol=1e-5)
+
+        c.evict(dev)
+        plan2 = c.plan_conv(x.shape, w, "conv")
+        plans.check_plan(plan2, n_units=9, n_devices=2)
+        np.testing.assert_allclose(c.conv_forward(x, w), ref, rtol=1e-5, atol=1e-5)
+    finally:
+        c.shutdown()
+
+
+def test_sigkill_mid_step_batch_axis_recovers_on_survivors():
+    """Chaos acceptance on the batch axis: SIGKILL a TCP slave while a
+    pipelined batch-partition train step has row slices in flight — the
+    master recomputes the dead member's ROWS (from the per-slab re-cut
+    ranges the op actually shipped), the dW all-reduce still sums every
+    row exactly once, and the gradients match the single-device VJP.
+    The next step re-plans the batch rows over the survivors."""
+    x, w1, w2, g = _data(batch=6)
+    want = _single_device_grads(x, w1, w2, g)
+    c = HeteroCluster(
+        [1.0, 1.0, 1.0], transport="tcp", partition="batch",
+        pipeline=True, microbatches=3, heartbeat_s=2.0,
+    )
+    try:
+        c.probe_times = [1.0, 1.0, 1.0]
+        victim_proc = c.procs[0]
+        victim_dev = c.slave_ids[0]
+        fired = {}
+
+        def between(y):
+            if not fired:
+                fired["t"] = True
+                victim_proc.kill()
+            mask = (y > 0).astype(np.float32)
+            return np.maximum(y, 0.0), lambda gz: gz * mask
+
+        slices = c.microbatch_slices(x.shape[0])
+
+        def head(z, i):
+            return None, g[slices[i]]
+
+        res = c.conv_train_chain(x, [w1, w2], [between, None], head)
+        _assert_grads(res, want)
+        assert len(c.failures) == 1
+        assert c.failures[0]["device"] == victim_dev
+        assert c.slave_ids == [2] and c.n_slaves == 1
+        assert c.timing.recompute_s > 0.0
+        # next step: re-planned batch rows over the survivors, still exact
+        plan = c.plan_conv(x.shape, w1, "train")
+        plans.check_plan(plan, n_units=6, n_devices=2)
+        res2 = _train_chain(c, x, w1, w2, g)
+        _assert_grads(res2, want)
+    finally:
+        c.shutdown()
