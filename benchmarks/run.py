@@ -39,6 +39,7 @@ from benchmarks import (
     bench_breakdown,
     bench_data_parallel,
     bench_device_range,
+    bench_hierarchy,
     bench_kernels,
     bench_master_slave,
     bench_mobile,
@@ -60,6 +61,8 @@ MODULES = {
     "kernels": bench_kernels,        # Pallas kernel rooflines + backends
     "serve": bench_serve,            # continuous-batching serving lane:
     #                                  req/s + tail latency over the cluster
+    "hierarchy": bench_hierarchy,    # two-tier sub-master groups vs flat
+    #                                  on a master-ingress-bound port
 }
 
 

@@ -13,6 +13,9 @@
                    forward chain, fwd+bwd train chain) over any transport
     cluster.py   — ``HeteroCluster`` (the master, Algorithm 1) wiring it
                    all together, plus ``make_distributed_conv``
+    hierarchy.py — the two-tier composition: ``HierarchicalCluster``
+                   (a batch-axis root over sub-master groups) and
+                   ``GroupSpec``/``parse_groups`` topology parsing
 
 Attribute access is lazy (PEP 562) so that TCP slave subprocesses —
 which import ``repro.core.cluster.protocol`` — never pay for jax or the
@@ -26,8 +29,12 @@ from repro.lazy import lazy_exports
 _EXPORTS = {
     "HeteroCluster": ".cluster",
     "make_distributed_conv": ".cluster",
+    "HierarchicalCluster": ".hierarchy",
+    "GroupSpec": ".hierarchy",
+    "parse_groups": ".hierarchy",
     "Transport": ".transport",
     "InProcTransport": ".transport",
+    "SharedNIC": ".transport",
     "TCPTransport": ".transport",
     "TCPSlaveEndpoint": ".transport",
     "TCPListener": ".transport",

@@ -86,6 +86,7 @@ from repro.core.cluster import codec, plans, protocol, scheduler
 from repro.core.cluster.transport import (
     TRANSPORT_KINDS,
     InProcTransport,
+    SharedNIC,
     ShmListener,
     ShmTransport,
     SlaveLost,
@@ -132,6 +133,12 @@ class HeteroCluster:
     SLAVE) emulates finite links on inproc; on tcp it only overrides the
     measured planning bandwidth.  Default ``None`` = infinitely fast
     emulated links (inproc) / measure at ``probe()`` (tcp).
+    ``master_nic_mbps`` (inproc only) additionally puts ONE emulated
+    shared port on the master: traffic on all its links serializes per
+    direction through a ``transport.SharedNIC``, modeling the
+    master-ingress bottleneck the two-tier hierarchy relieves; planning
+    prices each link's fair share (nic/n) unless a per-link value is
+    set.
 
     ``comp_aware=True`` (default) makes the Eq. 1 shares discount the
     master's measured non-conv duty: once ``conv_forward_chain`` or
@@ -190,6 +197,7 @@ class HeteroCluster:
         wire_codec: Optional[str] = None,
         weight_cache: bool = True,
         transport: str = "inproc",
+        master_nic_mbps: Optional[float] = None,
         expected_slaves: Optional[int] = None,
         listen_host: str = "127.0.0.1",
         listen_port: int = 0,
@@ -280,6 +288,15 @@ class HeteroCluster:
                 f"transport must be one of {TRANSPORT_KINDS}, got {transport!r}"
             )
         self.transport = transport
+        if master_nic_mbps is not None and transport != "inproc":
+            raise ValueError(
+                "master_nic_mbps is bandwidth EMULATION for the in-proc "
+                "wire; tcp/shm links share the host's real NIC already"
+            )
+        self.master_nic_mbps = master_nic_mbps
+        self._nic = (
+            SharedNIC(master_nic_mbps) if master_nic_mbps is not None else None
+        )
         n_cfg = (
             expected_slaves if expected_slaves is not None
             else len(self.slowdowns) - 1
@@ -314,6 +331,10 @@ class HeteroCluster:
         self.slave_ids: List[int] = []
         self._next_slave_id = 1
         self._registry: Dict[int, Transport] = {}  # every slave EVER, dead too
+        # each member's hello metadata by device id ({} for in-proc
+        # threads, which have no handshake): an open dict — sub-masters
+        # ride a "group" entry through it without touching the grammar
+        self.hello_meta: Dict[int, dict] = {}
         self.sockets: List[Transport] = []
         self.procs: List[Optional[subprocess.Popen]] = []
         self.threads: List[Optional[threading.Thread]] = []
@@ -378,6 +399,7 @@ class HeteroCluster:
                 self.slowdowns[1:], self.backends[1:], self.bandwidths
             ):
                 self._start_inproc_slave(sd, bk, bw)
+            self._apply_nic_planning()
 
     # -- membership plumbing: slots, spawn, accept, join -------------------
     _AUTH_BYTES = 32
@@ -406,7 +428,8 @@ class HeteroCluster:
         self, slowdown: float, backend: str, bandwidth: Optional[float]
     ) -> int:
         link = InProcTransport(
-            bandwidth, self._wire_np_dtype, wire_codec=self._link_codec()
+            bandwidth, self._wire_np_dtype, wire_codec=self._link_codec(),
+            nic=self._nic,
         )
         dev = self._next_slave_id
         self._next_slave_id += 1
@@ -417,7 +440,23 @@ class HeteroCluster:
         )
         t.start()
         self._add_slot(dev, link, None, t)
+        self.hello_meta[dev] = {}
         return dev
+
+    def _apply_nic_planning(self) -> None:
+        """Fold the shared master NIC into the PLANNING bandwidths: with
+        one emulated port serialized across n links, each link's fair
+        steady-state share is nic/n — the static approximation Eq. 1
+        prices (per-message serialization is runtime emulation, not
+        plannable).  Explicit per-link overrides win (a link can be
+        narrower than its NIC share); no-op without a NIC."""
+        if self._nic is None or self.n_slaves == 0:
+            return
+        share = self._nic.bandwidth_mbps / self.n_slaves
+        self.bandwidths = [
+            ovr if ovr is not None else share
+            for ovr in self._bandwidth_overrides
+        ]
 
     def _slave_env(self) -> dict:
         """Environment for a spawned slave process: the src/ import root
@@ -431,9 +470,11 @@ class HeteroCluster:
         env["REPRO_CLUSTER_AUTH"] = self._token.hex()
         return env
 
-    def _spawn_slave_proc(
-        self, dev: int, slowdown: float, backend: str, env: dict
-    ) -> subprocess.Popen:
+    def _slave_cmd(self, dev: int, slowdown: float, backend: str) -> list:
+        """The argv a spawned slave process runs — a seam subclasses
+        extend (the hierarchy appends ``--group-*`` flags to turn the
+        process into a sub-master).  The auth token is NOT here: it
+        rides the environment (argv shows in ps)."""
         # a listener bound to the wildcard interface is not a connect
         # target; local spawns dial loopback
         host = (
@@ -456,7 +497,14 @@ class HeteroCluster:
             cmd += ["--wire-codec", self.wire_codec]
         if self.heartbeat_s is not None:
             cmd += ["--heartbeat-s", str(self.heartbeat_s)]
-        return subprocess.Popen(cmd, env=env)
+        return cmd
+
+    def _spawn_slave_proc(
+        self, dev: int, slowdown: float, backend: str, env: dict
+    ) -> subprocess.Popen:
+        return subprocess.Popen(
+            self._slave_cmd(dev, slowdown, backend), env=env
+        )
 
     def _accept_slave(self, timeout_s: float) -> Tuple[TCPTransport, int, dict]:
         """Accept + authenticate + handshake ONE joining slave, skipping
@@ -538,9 +586,10 @@ class HeteroCluster:
             self._next_slave_id += 1
             pending[dev] = self._spawn_slave_proc(dev, sd, bk, env)
         by_device: Dict[int, TCPTransport] = {}
+        metas: Dict[int, dict] = {}
         try:
             for _ in range(len(pending)):
-                chan, dev, _meta = self._accept_slave(timeout_s=60.0)
+                chan, dev, meta = self._accept_slave(timeout_s=60.0)
                 # RuntimeError, not assert: -O must not let a malformed
                 # handshake mispair device channels
                 if dev not in pending or dev in by_device:
@@ -549,6 +598,7 @@ class HeteroCluster:
                         f"(expected one of {sorted(pending)})"
                     )
                 by_device[dev] = chan
+                metas[dev] = meta
         except Exception:
             for p in pending.values():
                 p.kill()
@@ -557,6 +607,7 @@ class HeteroCluster:
         for dev in sorted(by_device):
             by_device[dev].reset_counters()  # handshake isn't protocol traffic
             self._add_slot(dev, by_device[dev], pending[dev], None)
+            self.hello_meta[dev] = metas[dev]
 
     def _await_tcp_joins(self, n: int, timeout_s: float) -> None:
         """Wait for ``n`` hand-launched slaves to join the listener —
@@ -578,6 +629,7 @@ class HeteroCluster:
             self.backends.append(str(meta.get("backend", "numpy")))
             chan.reset_counters()
             self._add_slot(dev, chan, None, None)
+            self.hello_meta[dev] = meta
             print(
                 f"[hetero] slave {dev} joined "
                 f"(backend={self.backends[-1]}, "
@@ -678,9 +730,11 @@ class HeteroCluster:
             self.slowdowns.append(slowdown)
             self.backends.append(backend)
             self._add_slot(dev, chan, proc, None)
+            self.hello_meta[dev] = meta
         self.bandwidths.append(bandwidth_mbps)
         self._bandwidth_overrides.append(bandwidth_mbps)
         self.measured_bandwidths.append(None)
+        self._apply_nic_planning()
         sock, dev = self.sockets[-1], self.slave_ids[-1]
         if self.transport in ("tcp", "shm"):
             try:
@@ -760,6 +814,7 @@ class HeteroCluster:
         if self.probe_times is not None and len(self.probe_times) == had + 1:
             del self.probe_times[pos + 1]
         self.n_slaves = len(self.sockets)
+        self._apply_nic_planning()
         self.partition_choices.clear()
         self._mode_cache.clear()
 

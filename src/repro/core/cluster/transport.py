@@ -149,6 +149,57 @@ class Transport(abc.ABC):
         return None
 
 
+class SharedNIC:
+    """One emulated network interface SHARED by every in-proc link of a
+    node — the master-ingress bottleneck the two-tier hierarchy exists
+    to relieve.
+
+    Per-link ``bandwidth_mbps`` emulation models N independent wires: N
+    slaves can each stream at the full link rate simultaneously, which
+    is exactly the regime where a single master never saturates.  A real
+    master has ONE NIC: all inbound gathers (and all outbound scatters)
+    share its capacity, so six slaves returning full dW tensors serialize
+    behind each other on the master's ingress.  ``SharedNIC`` models that
+    with one transmit cursor per direction: each message reserves the
+    next ``nbytes * 8 / bandwidth`` window after the cursor (under a
+    brief lock), the cursor advances, and the link's delivery thread
+    sleeps until its window's finish time.  Messages on DIFFERENT links
+    therefore serialize per direction, exactly like frames sharing one
+    physical port; the two directions are full-duplex and independent.
+
+    Composes with per-link ``bandwidth_mbps`` (both delays apply — a
+    slow last-hop behind a shared trunk); on its own it is the fair
+    "one port on the master" model the ``hierarchy_vs_flat_gain`` bench
+    uses to compare a flat 6-slave fan-in against 2 sub-master uplinks.
+    """
+
+    #: the two transmit directions, one independent cursor each
+    DIRECTIONS = ("down", "up")  # down = master->slave, up = slave->master
+
+    def __init__(self, bandwidth_mbps: float):
+        if not bandwidth_mbps or bandwidth_mbps <= 0:
+            raise ValueError(
+                f"SharedNIC needs a positive bandwidth, got {bandwidth_mbps!r}"
+            )
+        self.bandwidth_mbps = float(bandwidth_mbps)
+        self._lock = threading.Lock()
+        self._free = {d: 0.0 for d in self.DIRECTIONS}
+
+    def reserve(self, direction: str, nbytes: int) -> float:
+        """Reserve the next transmit window on ``direction`` for a
+        ``nbytes`` message and return its absolute finish time (on the
+        ``time.perf_counter`` clock).  The caller sleeps until then
+        OUTSIDE this call — the lock only guards the cursor arithmetic,
+        never a wait."""
+        transit = nbytes * 8.0 / (self.bandwidth_mbps * 1e6)
+        now = time.perf_counter()
+        with self._lock:
+            start = max(now, self._free[direction])
+            finish = start + transit
+            self._free[direction] = finish
+        return finish
+
+
 class _InProcSlaveEndpoint:
     """The slave-thread view of an in-proc link: bare send/recv."""
 
@@ -179,13 +230,20 @@ class InProcTransport(Transport):
     the single-``wire_dtype`` stack when only the legacy knob is given):
     float arrays are ENCODED on write and decoded back to float32 on
     read.  Byte counters and the bandwidth emulation see the encoded
-    size, exactly like a real narrow wire."""
+    size, exactly like a real narrow wire.
+
+    With ``nic`` (a :class:`SharedNIC`) set, the link ADDITIONALLY
+    reserves a transmit window on the node's shared per-direction
+    cursor for every message, so traffic on sibling links serializes
+    behind this one exactly like frames sharing the master's single
+    physical port."""
 
     def __init__(
         self,
         bandwidth_mbps: Optional[float] = None,
         wire_dtype: Optional[np.dtype] = None,
         wire_codec: Optional[codec.WireCodec] = None,
+        nic: Optional[SharedNIC] = None,
     ):
         self.to_slave: "queue.Queue" = queue.Queue()
         self.to_master: "queue.Queue" = queue.Queue()
@@ -193,38 +251,48 @@ class InProcTransport(Transport):
         self.bytes_to_master = 0
         self._lock = threading.Lock()
         self.bandwidth_mbps = bandwidth_mbps
+        self.nic = nic
+        self._staged = bandwidth_mbps is not None or nic is not None
         self.wire_dtype = wire_dtype
         self._codec = (
             wire_codec if wire_codec is not None
             else codec.WireCodec.from_wire_dtype(wire_dtype)
         )
-        if bandwidth_mbps is not None:
-            assert bandwidth_mbps > 0
+        if self._staged:
+            assert bandwidth_mbps is None or bandwidth_mbps > 0
             self._stage_to_slave: "queue.Queue" = queue.Queue()
             self._stage_to_master: "queue.Queue" = queue.Queue()
-            for stage, dest in (
-                (self._stage_to_slave, self.to_slave),
-                (self._stage_to_master, self.to_master),
+            for stage, dest, direction in (
+                (self._stage_to_slave, self.to_slave, "down"),
+                (self._stage_to_master, self.to_master, "up"),
             ):
                 threading.Thread(
-                    target=self._deliver, args=(stage, dest), daemon=True
+                    target=self._deliver, args=(stage, dest, direction),
+                    daemon=True,
                 ).start()
 
     _LINK_DOWN = object()  # sentinel: stops a delivery thread
 
-    def _deliver(self, stage: "queue.Queue", dest: "queue.Queue"):
+    def _deliver(self, stage: "queue.Queue", dest: "queue.Queue",
+                 direction: str):
         while True:
             item = stage.get()
             if item is InProcTransport._LINK_DOWN:
                 return
             obj, nbytes = item
-            # reprolint: allow=clock-injection -- bandwidth emulation IS a real delay: the sleep models wire transit time and must consume wall clock
-            time.sleep(nbytes * 8.0 / (self.bandwidth_mbps * 1e6))
+            if self.bandwidth_mbps is not None:
+                # reprolint: allow=clock-injection -- bandwidth emulation IS a real delay: the sleep models wire transit time and must consume wall clock
+                time.sleep(nbytes * 8.0 / (self.bandwidth_mbps * 1e6))
+            if self.nic is not None:
+                wait = self.nic.reserve(direction, nbytes) - time.perf_counter()
+                if wait > 0:
+                    # reprolint: allow=clock-injection -- shared-NIC emulation: sleeping until the reserved transmit window ends IS the modeled serialization delay
+                    time.sleep(wait)
             dest.put(obj)
 
     def close(self):
         """Stop the delivery threads (queued messages drain first)."""
-        if self.bandwidth_mbps is not None:
+        if self._staged:
             self._stage_to_slave.put(InProcTransport._LINK_DOWN)
             self._stage_to_master.put(InProcTransport._LINK_DOWN)
 
@@ -239,7 +307,7 @@ class InProcTransport(Transport):
         n = self._nbytes(obj)
         with self._lock:
             self.bytes_to_slave += n
-        if self.bandwidth_mbps is not None:
+        if self._staged:
             self._stage_to_slave.put((obj, n))
         else:
             self.to_slave.put(obj)
@@ -250,7 +318,7 @@ class InProcTransport(Transport):
         n = self._nbytes(obj)
         with self._lock:
             self.bytes_to_master += n
-        if self.bandwidth_mbps is not None:
+        if self._staged:
             self._stage_to_master.put((obj, n))
         else:
             self.to_master.put(obj)

@@ -55,6 +55,20 @@ class spec, and the versioned weight-broadcast cache is on by default
         --transport shm --train-pipeline --slowdowns 1.0,1.5 \
         --wire-codec "weights=fp16,acts=int8,grads=topk:0.05" --steps 2
 
+``--groups GxM`` trades the flat topology for the TWO-TIER hierarchy
+(core/cluster/hierarchy.py): G sub-master groups of M devices each,
+the root planning disjoint batch rows across groups (exact dW
+all-reduce) while each group partitions its rows internally on
+``--group-partition``.  ``--slowdowns`` then carries 1 + G*M entries
+(root first, then group devices chunked M per group) or just the root;
+``--master-nic-mbps`` emulates one shared master port serialized
+across all root links (inproc only) — the regime where two tiers beat
+flat, because the root's ingress carries G summed group gradients
+instead of G*M:
+
+    PYTHONPATH=src python -m repro.launch.hetero \
+        --groups 2x3 --train-pipeline --master-nic-mbps 200 --steps 4
+
 ``--expected-slaves N`` makes the master WAIT for N hand-launched
 slaves instead of spawning them — the remote-host path.  Pass only the
 master's ``--slowdowns`` entry, bind with ``--listen-host``/
@@ -120,6 +134,9 @@ def run_hetero(
     listen_host: str = "127.0.0.1",
     listen_port: int = 0,
     heartbeat_s=None,
+    groups=None,
+    group_partition: str = "auto",
+    master_nic_mbps=None,
 ) -> dict:
     if not train_pipeline and backends is not None and backends[0] != "numpy":
         # the callback training loop re-enters jax on the blocked runtime
@@ -132,16 +149,48 @@ def run_hetero(
             f"directly and lifts this restriction."
         )
     cfg = make_cnn_config(c1, c2)
-    cluster = HeteroCluster(
-        slowdowns, backends,
-        pipeline=pipeline or train_pipeline, microbatches=microbatches,
-        partition=partition, wire_dtype=wire_dtype,
-        wire_codec=wire_codec, weight_cache=weight_cache,
-        bandwidth_mbps=bandwidth_mbps, transport=transport,
-        expected_slaves=expected_slaves,
-        listen_host=listen_host, listen_port=listen_port,
-        heartbeat_s=heartbeat_s,
-    )
+    if groups is not None:
+        from repro.core.cluster.hierarchy import (
+            HierarchicalCluster,
+            parse_groups,
+        )
+
+        if expected_slaves is not None:
+            raise SystemExit(
+                "--groups spawns its own sub-masters; --expected-slaves "
+                "(hand-launched joins) is a flat-cluster feature"
+            )
+        gspecs = parse_groups(
+            groups,
+            slowdowns=slowdowns[1:] if len(slowdowns) > 1 else None,
+            backends=backends[1:] if backends and len(backends) > 1 else None,
+            partition=group_partition,
+            pipeline=pipeline or train_pipeline,
+            microbatches=microbatches,
+        )
+        cluster = HierarchicalCluster(
+            gspecs,
+            master_slowdown=slowdowns[0],
+            master_backend=backends[0] if backends else "numpy",
+            pipeline=pipeline or train_pipeline, microbatches=microbatches,
+            wire_dtype=wire_dtype, wire_codec=wire_codec,
+            weight_cache=weight_cache, bandwidth_mbps=bandwidth_mbps,
+            master_nic_mbps=master_nic_mbps, transport=transport,
+            heartbeat_s=heartbeat_s,
+        )
+        partition = "batch"  # the root's inter-group axis, by construction
+    else:
+        cluster = HeteroCluster(
+            slowdowns, backends,
+            pipeline=pipeline or train_pipeline, microbatches=microbatches,
+            partition=partition, wire_dtype=wire_dtype,
+            wire_codec=wire_codec, weight_cache=weight_cache,
+            bandwidth_mbps=bandwidth_mbps, transport=transport,
+            expected_slaves=expected_slaves,
+            listen_host=listen_host, listen_port=listen_port,
+            heartbeat_s=heartbeat_s,
+            master_nic_mbps=master_nic_mbps,
+        )
     try:
         probe = cluster.probe(
             image_size=cfg.image_size, in_channels=cfg.image_channels,
@@ -149,7 +198,9 @@ def run_hetero(
         )
         shares = workload_shares(probe)
         print(f"devices: slowdowns={list(cluster.slowdowns)} "
-              f"backends={cluster.backends} transport={transport}")
+              f"backends={cluster.backends} transport={transport}"
+              + (f" topology={groups} (groups plan rows internally on "
+                 f"'{group_partition}')" if groups else ""))
         print(f"probe times: {np.round(probe, 4).tolist()}")
         if transport in ("tcp", "shm"):
             print(f"measured link bandwidth (Mbps): "
@@ -194,6 +245,9 @@ def run_hetero(
                 else "pipelined" if pipeline else "barrier"
             ),
             "transport": transport,
+            "topology": groups or "flat",
+            "group_partition": group_partition if groups else None,
+            "master_nic_mbps": master_nic_mbps,
             "measured_bandwidth_mbps": list(cluster.measured_bandwidths),
             "microbatches": microbatches if (pipeline or train_pipeline) else 1,
             "partition": partition,
@@ -355,8 +409,28 @@ def _clean_exit(code: int) -> None:
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--slowdowns", default="1.0,1.5,3.0",
-                    help="comma list; device 0 is the master")
+    ap.add_argument("--slowdowns", default=None,
+                    help="comma list; device 0 is the master (default "
+                         "1.0,1.5,3.0 flat; with --groups GxM pass 1 + G*M "
+                         "entries — root then group devices chunked M per "
+                         "group — or just the root, group devices default "
+                         "to 1.0)")
+    ap.add_argument("--groups", default=None, metavar="GxM",
+                    help="two-tier topology: G sub-master groups of M "
+                         "devices each (e.g. 2x3); the root plans disjoint "
+                         "batch rows across groups (exact dW all-reduce), "
+                         "each group re-partitions its rows internally on "
+                         "--group-partition.  With --transport tcp each "
+                         "sub-master is a real OS process")
+    ap.add_argument("--group-partition", default="auto",
+                    choices=["kernel", "spatial", "batch", "auto"],
+                    help="conv split axis INSIDE each group (the root's "
+                         "inter-group axis is always batch)")
+    ap.add_argument("--master-nic-mbps", type=float, default=None,
+                    help="emulate ONE shared master port of this speed "
+                         "serialized across all root links (inproc only) — "
+                         "the master-ingress-bound regime where the "
+                         "hierarchy beats a flat cluster")
     ap.add_argument("--backends", default=None,
                     help="comma list of conv backends per device "
                          "(numpy|xla|pallas|sim), default numpy everywhere; "
@@ -442,7 +516,10 @@ def main():
     ap.add_argument("--out", default=None, help="append the record as JSONL")
     args = ap.parse_args()
 
-    slowdowns = [float(s) for s in args.slowdowns.split(",")]
+    # the flat default topology makes no sense under --groups: there the
+    # default is "just the root", group devices filling in at 1.0
+    slowdowns_s = args.slowdowns or ("1.0" if args.groups else "1.0,1.5,3.0")
+    slowdowns = [float(s) for s in slowdowns_s.split(",")]
     backends = args.backends.split(",") if args.backends else None
     transport = args.transport
     if args.expected_slaves is not None:
@@ -478,6 +555,8 @@ def main():
             expected_slaves=args.expected_slaves,
             listen_host=args.listen_host, listen_port=args.listen_port,
             heartbeat_s=args.heartbeat_s,
+            groups=args.groups, group_partition=args.group_partition,
+            master_nic_mbps=args.master_nic_mbps,
         )
         if args.out:
             with open(args.out, "a") as f:
